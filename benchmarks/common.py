@@ -1,0 +1,82 @@
+"""Shared benchmark harness: workloads analogous to the paper's datasets,
+timing helpers, CSV/JSON emission.
+
+Datasets: ``sym26`` mirrors the paper's 26-neuron inhomogeneous-Poisson
+model with embedded causal chains; ``synth-33/34/35`` stand in for the
+Wagenaar cortical-culture recordings (2-1-33/34/35) — same alphabet size,
+three densities — honestly labeled synthetic (the originals are not
+redistributable here).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import EpisodeBatch
+from repro.data import random_stream, sym26
+
+OUT_DIR = Path("experiments/bench")
+
+
+def timeit(fn, *, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds over ``repeats`` (after warmup for jit caches)."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def sym26_stream(seconds: int = 30, seed: int = 0):
+    stream, truth = sym26(seconds=seconds, seed=seed)
+    return stream, truth
+
+
+def culture_stream(name: str, seconds: int = 30):
+    """synth-33/34/35: rising firing densities (the paper's day-33/34/35
+    cultures showed increasingly bursty activity)."""
+    rates = {"synth-33": 15.0, "synth-34": 25.0, "synth-35": 40.0}
+    stream, _ = sym26(seconds=seconds, rate_hz=rates[name],
+                      seed=hash(name) % 2**31)
+    return stream
+
+
+def random_candidates(m: int, n: int, num_types: int = 26,
+                      interval=(5, 10), seed: int = 0,
+                      include=None) -> EpisodeBatch:
+    """M random N-node candidates with the given inter-event interval; the
+    planted chains can be prepended via ``include``."""
+    rng = np.random.default_rng(seed)
+    et = rng.integers(0, num_types, size=(m, n)).astype(np.int32)
+    if include is not None:
+        for i, chain in enumerate(include[: m]):
+            et[i, :] = np.asarray(chain[:n] + chain[: max(0, n - len(chain))],
+                                  np.int32)[:n]
+    tlo = np.full((m, n - 1), interval[0], np.int32)
+    thi = np.full((m, n - 1), interval[1], np.int32)
+    return EpisodeBatch(et, tlo, thi)
+
+
+class Report:
+    def __init__(self, name: str):
+        self.name = name
+        self.rows = []
+
+    def add(self, label: str, seconds: float, **derived):
+        self.rows.append({"label": label, "seconds": seconds, **derived})
+        d = ",".join(f"{k}={v}" for k, v in derived.items())
+        print(f"{self.name}/{label},{seconds*1e6:.0f},{d}")
+
+    def save(self):
+        OUT_DIR.mkdir(parents=True, exist_ok=True)
+        (OUT_DIR / f"{self.name}.json").write_text(
+            json.dumps(self.rows, indent=1))
+        return self.rows

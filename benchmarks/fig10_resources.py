@@ -1,0 +1,75 @@
+"""Paper Fig. 10: A1 vs A2 resource profiles.
+
+The paper profiles registers / local-memory loads / divergent branches on
+the GTX280. The TPU/JAX analogues we can measure without hardware:
+
+  * state bytes per episode lane (the VREG/VMEM pressure that bounds how
+    many episode machines fit per core — the exact quantity Obs. 5.1
+    shrinks: N·LCAP·4 B for A1 vs N·4 B for A2);
+  * jaxpr/HLO op counts of one scan step (static instruction pressure);
+  * measured per-event·episode throughput of each engine (the end effect
+    the paper's Fig. 10 explains).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import count_single_slot
+from repro.core.count_a1 import DEFAULT_LCAP, count_a1_vectorized
+from repro.core.count_a2 import step_single_slot
+from repro.core.count_a1 import step_bounded_list
+from repro.core.events import TIME_NEG_INF
+
+from .common import Report, random_candidates, sym26_stream, timeit
+
+
+def _op_count(fn, *args) -> int:
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    return sum(1 for _ in jaxpr.jaxpr.eqns)
+
+
+def run(seconds: int = 20) -> Report:
+    rep = Report("fig10_resources")
+    stream, _ = sym26_stream(seconds=seconds)
+    m, n, lcap = 512, 4, DEFAULT_LCAP
+    eps = random_candidates(m, n, seed=1)
+
+    # --- static resource profile
+    et = jnp.asarray(eps.etypes)
+    tlo, thi = jnp.asarray(eps.tlo), jnp.asarray(eps.thi)
+    s_a2 = jnp.full((m, n), TIME_NEG_INF, jnp.int32)
+    s_a1 = jnp.full((m, n, lcap), TIME_NEG_INF, jnp.int32)
+    ptr = jnp.zeros((m, n), jnp.int32)
+    cnt = jnp.zeros((m,), jnp.int32)
+    ovf = jnp.zeros((m,), jnp.bool_)
+    ops_a2 = _op_count(
+        lambda s, c: step_single_slot(s, c, et, tlo, thi, 3, 100),
+        s_a2, cnt)
+    ops_a1 = _op_count(
+        lambda s, p, c, o: step_bounded_list(s, p, c, o, et, tlo, thi, 3,
+                                             100, False),
+        s_a1, ptr, cnt, ovf)
+    rep.add("state_bytes_per_episode", 0.0,
+            a1=int(n * lcap * 4 + n * 4), a2=int(n * 4),
+            ratio=round((n * lcap * 4 + n * 4) / (n * 4), 2))
+    rep.add("step_op_count", 0.0, a1=ops_a1, a2=ops_a2,
+            ratio=round(ops_a1 / ops_a2, 2))
+
+    # --- dynamic: per-(event·episode) throughput
+    t_a2 = timeit(lambda: count_single_slot(stream, eps.relaxed(),
+                                            inclusive_lower=True))
+    t_a1 = timeit(lambda: count_a1_vectorized(stream, eps))
+    ev = len(stream)
+    rep.add("throughput", t_a2,
+            a2_ev_eps_per_s=round(ev * m / t_a2 / 1e6, 1),
+            a1_ev_eps_per_s=round(ev * m / t_a1 / 1e6, 1),
+            a2_speedup_over_a1=round(t_a1 / t_a2, 2))
+    rep.save()
+    return rep
+
+
+if __name__ == "__main__":
+    run()

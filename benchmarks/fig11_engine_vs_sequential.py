@@ -1,0 +1,76 @@
+"""Paper Fig. 11: accelerator engine vs optimized sequential CPU baseline.
+
+The paper's GPU-vs-quad-core comparison maps to: our lane-vectorized XLA
+engine (the "GPU" role — episodes on vector lanes) vs (a) the literal
+sequential pseudocode (pure Python, the paper's Algorithm 1 as written) and
+(b) an optimized sequential implementation (numpy per-event batch update —
+the "hand-optimized CPU code" arm). Speedups reported at several batch
+widths; the paper reports ~15× for its dataset/threshold point."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import count_a1_sequential
+from repro.core.count_a1 import count_a1_vectorized
+from repro.core.events import TIME_NEG_INF
+
+from .common import Report, random_candidates, sym26_stream, timeit
+
+
+def count_a1_numpy_batch(stream, eps, lcap: int = 4):
+    """Optimized sequential baseline: one Python loop over events, numpy
+    over the episode batch (no JIT) — a fair 'optimized CPU' arm."""
+    m, n = eps.etypes.shape
+    s = np.full((m, n, lcap), TIME_NEG_INF, np.int64)
+    ptr = np.zeros((m, n), np.int64)
+    count = np.zeros(m, np.int64)
+    et, tlo, thi = eps.etypes, eps.tlo, eps.thi
+    for e, t in zip(stream.types, stream.times):
+        match = et == e
+        delta = t - s[:, :-1, :]
+        ok = ((delta > tlo[:, :, None]) & (delta <= thi[:, :, None])
+              ).any(-1)
+        advance = np.concatenate([np.ones((m, 1), bool), ok], 1) & match
+        complete = advance[:, -1]
+        store = advance.copy()
+        store[:, -1] = False
+        store &= ~complete[:, None]
+        idx = np.nonzero(store)
+        s[idx[0], idx[1], ptr[idx]] = t
+        ptr[idx] = (ptr[idx] + 1) % lcap
+        s[complete] = TIME_NEG_INF
+        ptr[complete] = 0
+        count += complete
+    return count
+
+
+def run(seconds: int = 10) -> Report:
+    rep = Report("fig11_engine_vs_seq")
+    stream, _ = sym26_stream(seconds=seconds)
+    for m in (64, 512, 2048):
+        eps = random_candidates(m, 4, seed=m)
+        t_vec = timeit(lambda: count_a1_vectorized(stream, eps), repeats=2)
+        t_np = timeit(lambda: count_a1_numpy_batch(stream, eps),
+                      repeats=1, warmup=0)
+        if m <= 64:  # the pure-Python oracle is too slow for bigger M
+            t_py = timeit(lambda: count_a1_sequential(stream, eps),
+                          repeats=1, warmup=0)
+        else:
+            t_py = float("nan")
+        # correctness cross-check at every width
+        np.testing.assert_array_equal(
+            count_a1_numpy_batch(stream, eps),
+            count_a1_vectorized(stream, eps)[0])
+        rep.add(f"M{m}", t_vec,
+                engine_s=round(t_vec, 4), numpy_seq_s=round(t_np, 4),
+                python_seq_s=(round(t_py, 4) if t_py == t_py else "n/a"),
+                speedup_vs_numpy=round(t_np / t_vec, 1),
+                speedup_vs_python=(round(t_py / t_vec, 1)
+                                   if t_py == t_py else "n/a"))
+    rep.save()
+    return rep
+
+
+if __name__ == "__main__":
+    run()

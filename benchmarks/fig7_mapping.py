@@ -1,0 +1,35 @@
+"""Paper Fig. 7: PTPE vs MapConcatenate vs Hybrid across episode sizes and
+support thresholds (θ controls how many candidates survive to be counted,
+i.e. the episode-batch width M)."""
+
+from __future__ import annotations
+
+from repro.core import count_dispatch
+
+from .common import Report, random_candidates, sym26_stream, timeit
+
+
+def run(seconds: int = 20) -> Report:
+    rep = Report("fig7_mapping")
+    stream, _ = sym26_stream(seconds=seconds)
+    for n in (2, 3, 4, 5, 6):
+        for m, regime in ((16, "few"), (512, "many")):
+            eps = random_candidates(m, n, seed=n * 100 + m)
+            t_ptpe = timeit(lambda: count_dispatch(stream, eps,
+                                                   engine="ptpe"))
+            t_mc = timeit(lambda: count_dispatch(stream, eps,
+                                                 engine="mapconcatenate"))
+            t_hy = timeit(lambda: count_dispatch(stream, eps,
+                                                 engine="hybrid"))
+            best = min(t_ptpe, t_mc)
+            rep.add(f"N{n}_M{m}", t_hy, ptpe_s=round(t_ptpe, 4),
+                    mapconcat_s=round(t_mc, 4), hybrid_s=round(t_hy, 4),
+                    regime=regime,
+                    hybrid_regret=round(t_hy / best, 3),
+                    winner="ptpe" if t_ptpe < t_mc else "mapconcat")
+    rep.save()
+    return rep
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Paper Fig. 9: one-pass (A1 on everything) vs two-pass (A2 cull → A1)
+execution time, elimination rates, and speedups across datasets/thresholds.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import count_one_pass, count_two_pass
+
+from .common import (Report, culture_stream, random_candidates, sym26_stream,
+                     timeit)
+
+
+def run(seconds: int = 20) -> Report:
+    rep = Report("fig9_twopass")
+    streams = {"sym26": sym26_stream(seconds=seconds)[0]}
+    for name in ("synth-33", "synth-34", "synth-35"):
+        streams[name] = culture_stream(name, seconds=seconds)
+    for sname, stream in streams.items():
+        for n, m in ((3, 512), (4, 1024)):
+            eps = random_candidates(m, n, seed=n * 7 + len(sname))
+            for theta_frac, tname in ((0.5, "high"), (0.1, "low")):
+                # θ as a fraction of the busiest 1-event count
+                counts1 = np.array([(stream.types == t).sum()
+                                    for t in range(stream.num_types)])
+                theta = max(2, int(counts1.max() * theta_frac
+                                   * (0.05 if n >= 4 else 0.15)))
+                t2 = timeit(lambda: count_two_pass(stream, eps, theta,
+                                                   engine="ptpe"),
+                            repeats=2)
+                t1 = timeit(lambda: count_one_pass(stream, eps, theta,
+                                                   engine="ptpe"),
+                            repeats=2)
+                res = count_two_pass(stream, eps, theta, engine="ptpe")
+                r1 = count_one_pass(stream, eps, theta, engine="ptpe")
+                assert (res.frequent == r1.frequent).all(), \
+                    "two-pass changed the frequent set!"
+                rep.add(f"{sname}_N{n}_{tname}", t2,
+                        one_pass_s=round(t1, 4), two_pass_s=round(t2, 4),
+                        speedup=round(t1 / t2, 2),
+                        eliminated=round(res.eliminated_frac, 4),
+                        theta=theta)
+    rep.save()
+    return rep
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Quickstart: mine frequent episodes from a synthetic spike train.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import EpisodeBatch, count_a1_sequential, mine
+from repro.data import sym26
+
+# 1. A 26-neuron culture, 20 s, with two planted causal chains.
+stream, truth = sym26(seconds=20, seed=0)
+chain, interval, n_planted = truth["short"]
+print(f"{len(stream)} events; planted chain {chain} "
+      f"with delays in {interval}, ~{n_planted} occurrences")
+
+# 2. Mine all episodes up to 3 nodes with the two-pass engine
+#    (A2 upper-bound cull -> exact A1, Hybrid PTPE/MapConcatenate mapping).
+result = mine(stream, intervals=[interval], theta=int(n_planted * 0.6),
+              max_level=3)
+for stats in result.stats:
+    print(f"  level {stats.level}: {stats.num_candidates} candidates "
+          f"-> {stats.num_survived_a2} after A2 cull "
+          f"-> {stats.num_frequent} frequent  ({stats.seconds*1e3:.0f} ms)")
+
+# 3. The planted chain is recovered, with an exactly-correct count.
+lv3 = result.frequent[2]
+found = [tuple(e) for e in lv3.etypes.tolist()]
+idx = found.index(tuple(chain))
+exact = count_a1_sequential(stream, lv3.select([idx]))[0]
+print(f"recovered {chain}: count={result.counts[2][idx]} "
+      f"(sequential oracle: {exact})")
+assert result.counts[2][idx] == exact
+
+# 4. Reconstruct the circuit (the paper's Fig. 1 end goal): the planted
+#    synapses dominate the excess-co-firing graph.
+from repro.core import reconstruct
+g = reconstruct(stream, result)
+print("strongest inferred connections:")
+for a, b, w, c in g.top_edges(4):
+    print(f"  neuron {a} → neuron {b}   weight {w:.3f}  (count {c})")

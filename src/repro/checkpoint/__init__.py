@@ -1,0 +1,3 @@
+from .ckpt import config_fingerprint, latest_step, restore, save
+
+__all__ = ["save", "restore", "latest_step", "config_fingerprint"]

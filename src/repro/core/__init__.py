@@ -1,0 +1,36 @@
+"""Frequent-episode mining engine — the paper's contribution, in JAX.
+
+Public API:
+  EventStream, EpisodeBatch — data containers
+  count_a1 / count_a2       — exact / relaxed-upper-bound counting
+  mapconcatenate            — segment-parallel exact counting
+  count_two_pass            — Algorithm 4 (A2 cull → A1 exact)
+  mine / mine_partitions    — level-wise miner, streaming windows
+"""
+
+from .candidates import join_next_level, level1, level2
+from .count_a1 import count_a1, count_a1_vectorized
+from .count_a2 import count_a2, count_single_slot
+from .episodes import EpisodeBatch
+from .events import PAD_TYPE, TIME_NEG_INF, EventStream
+from .hybrid import count_dispatch, crossover, f_of_n
+from .mapconcat import concatenate_tree, make_segments, mapconcatenate
+from .miner import MiningResult, mine, mine_partitions
+from .connectivity import ConnectivityGraph, reconstruct
+from .ref import (count_a1_sequential, count_a2_sequential,
+                  count_occurrences_naive)
+from .twopass import TwoPassResult, count_one_pass, count_two_pass
+from .windows import count_windows, frequency_windows
+
+__all__ = [
+    "EventStream", "EpisodeBatch", "PAD_TYPE", "TIME_NEG_INF",
+    "count_a1", "count_a1_vectorized", "count_a2", "count_single_slot",
+    "mapconcatenate", "concatenate_tree", "make_segments",
+    "count_two_pass", "count_one_pass", "TwoPassResult",
+    "count_dispatch", "crossover", "f_of_n",
+    "mine", "mine_partitions", "MiningResult",
+    "level1", "level2", "join_next_level",
+    "count_a1_sequential", "count_a2_sequential", "count_occurrences_naive",
+    "count_windows", "frequency_windows", "reconstruct",
+    "ConnectivityGraph",
+]

@@ -1,0 +1,146 @@
+"""Vectorized A1 counting (Algorithm 1) with bounded per-level lists.
+
+Algorithm 1's state is a list of recent timestamps per episode level; the
+list walk is data-dependent control flow — the exact thing the paper pays for
+on the GPU in registers/local-memory/divergence (§5.3, Fig. 10) and that a
+TPU pays for in un-vectorizable gathers. We bound each list to ``LCAP`` slots
+kept in a circular buffer, turning the walk into a masked reduction over a
+dense i32[M, N, LCAP] tile.
+
+Correctness containment: bounding can only *undercount* (a live witness may
+be evicted while newer entries fail the lower bound). We detect possibly-live
+evictions exactly — an evicted level-i entry ``v`` is dead iff
+``t - v > thi[i]`` (its only consumer is level i+1 within ``thi[i]``) — and
+flag the episode. Flagged episodes are recounted by the sequential oracle
+(``ref.count_a1_sequential``), so the public ``count_a1`` is always exact.
+Tests sweep LCAP and assert the flag ⇒ recount path restores oracle equality.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .episodes import EpisodeBatch
+from .events import TIME_NEG_INF, EventStream
+
+DEFAULT_LCAP = 4
+
+
+def step_bounded_list(s, ptr, count, ovf, etypes, tlo, thi, e, t,
+                      dup=False):
+    """One event against M bounded-list (A1) state machines.
+
+    Args:
+      s:    i32[M, N, L] circular timestamp buffers (TIME_NEG_INF = empty)
+      ptr:  i32[M, N] next write slot per level
+      count: i32[M]; ovf: bool[M] possibly-live-eviction flag
+      etypes i32[M, N]; tlo/thi i32[M, N-1]; e/t scalar i32
+      dup:  scalar bool — a later event shares this timestamp. Needed for
+            exact eviction accounting: a fresh entry at time t covers an
+            evicted one for consumers at t' > t, but not at t' == t
+            (the (0, thi] lower bound is strict).
+
+    Returns (s', ptr', count', ovf').
+    """
+    m, n, cap = s.shape
+    match = etypes == e  # [M, N]
+    delta = t - s[:, :-1, :]  # [M, N-1, L]
+    witness = (delta > tlo[:, :, None]) & (delta <= thi[:, :, None])
+    ok = witness.any(axis=-1)  # [M, N-1]
+    advance = jnp.concatenate(
+        [jnp.ones_like(match[:, :1]), ok], axis=1) & match  # [M, N]
+    complete = advance[:, -1]  # [M]
+    store = advance.at[:, -1].set(False)  # last level never stores
+    store = store & ~complete[:, None]  # completion short-circuits the walk
+
+    # circular append at ptr where store
+    onehot = jax.nn.one_hot(ptr, cap, dtype=jnp.bool_)  # [M, N, L]
+    write = store[:, :, None] & onehot
+    # live-eviction detection: evicted value v still matters iff t-v <= thi[i]
+    # (level N-1 has no outgoing edge; it never stores anyway)
+    evicted = jnp.where(write, s, TIME_NEG_INF)  # [M, N, L]
+    v = evicted.max(axis=-1)  # [M, N] value being overwritten (or NEG_INF)
+    thi_out = jnp.concatenate(  # outgoing-edge upper bound per level
+        [thi, jnp.zeros_like(thi[:, :1])], axis=1)  # [M, N]
+    tlo_out = jnp.concatenate(
+        [tlo, jnp.zeros_like(tlo[:, :1])], axis=1)  # [M, N]
+    # Obs 5.1: with a zero lower bound the newest entry dominates — eviction
+    # is provably safe for strictly-later consumers; only a real lower bound
+    # (or a same-timestamp successor event) can make an old witness live.
+    live = (v > TIME_NEG_INF) & (t - v <= thi_out) & ((tlo_out > 0) | dup)
+    ovf_new = ovf | live.any(axis=-1)
+
+    s_new = jnp.where(write, t, s)
+    ptr_new = jnp.where(store, (ptr + 1) % cap, ptr)
+    # completion: full reset
+    s_new = jnp.where(complete[:, None, None], TIME_NEG_INF, s_new)
+    ptr_new = jnp.where(complete[:, None], 0, ptr_new)
+    return s_new, ptr_new, count + complete.astype(count.dtype), ovf_new
+
+
+def dup_flags(ev_types, ev_times):
+    """bool[n]: a later *real* event shares this event's timestamp.
+    (Events are time-sorted, so it suffices to look at the successor.)"""
+    from .events import PAD_TYPE
+    nxt_same = jnp.concatenate(
+        [(ev_times[1:] == ev_times[:-1]) & (ev_types[1:] != PAD_TYPE),
+         jnp.zeros((1,), jnp.bool_)])
+    return nxt_same
+
+
+@jax.jit
+def _scan_count_a1(etypes, tlo, thi, ev_types, ev_times, s0):
+    m, n = etypes.shape
+    ptr0 = jnp.zeros((m, n), dtype=jnp.int32)
+    c0 = jnp.zeros((m,), dtype=jnp.int32)
+    ovf0 = jnp.zeros((m,), dtype=jnp.bool_)
+    dups = dup_flags(ev_types, ev_times)
+
+    def body(carry, ev):
+        s, ptr, c, ovf = carry
+        e, t, d = ev
+        return step_bounded_list(s, ptr, c, ovf, etypes, tlo, thi, e, t,
+                                 d), None
+
+    (_, _, count, ovf), _ = jax.lax.scan(
+        body, (s0, ptr0, c0, ovf0), (ev_types, ev_times, dups))
+    return count, ovf
+
+
+def count_a1_vectorized(stream: EventStream, eps: EpisodeBatch,
+                        lcap: int = DEFAULT_LCAP):
+    """Bounded-list scan. Returns (count i64[M], overflow bool[M])."""
+    if eps.N == 1:
+        counts = np.array(
+            [(stream.types == e).sum() for e in eps.etypes[:, 0]], np.int64)
+        return counts, np.zeros(eps.M, dtype=bool)
+    s0 = jnp.full((eps.M, eps.N, lcap), TIME_NEG_INF, dtype=jnp.int32)
+    count, ovf = _scan_count_a1(
+        jnp.asarray(eps.etypes), jnp.asarray(eps.tlo), jnp.asarray(eps.thi),
+        jnp.asarray(stream.types), jnp.asarray(stream.times), s0)
+    return np.asarray(count, np.int64), np.asarray(ovf)
+
+
+def count_a1(stream: EventStream, eps: EpisodeBatch,
+             lcap: int = DEFAULT_LCAP, use_kernel: bool = True) -> np.ndarray:
+    """Exact Algorithm-1 counts: vectorized fast path + oracle fallback for
+    episodes whose bounded lists may have evicted a live witness."""
+    if use_kernel:
+        try:
+            from repro.kernels import ops as kops
+            counts, ovf = kops.a1_count(stream, eps, lcap=lcap)
+        except (ImportError, NotImplementedError):
+            counts, ovf = count_a1_vectorized(stream, eps, lcap=lcap)
+    else:
+        counts, ovf = count_a1_vectorized(stream, eps, lcap=lcap)
+    if ovf.any():
+        idx = np.nonzero(ovf)[0]
+        exact = ref.count_a1_sequential(stream, eps.select(idx))
+        counts = counts.copy()
+        counts[idx] = exact
+    return counts

@@ -1,0 +1,100 @@
+"""Vectorized A2 counting (Algorithm 3 / Observation 5.1).
+
+With lower bounds relaxed, each episode level needs exactly ONE timestamp of
+state (Obs. 5.1), so counting M episodes is a dense ``lax.scan`` over events
+with an int32[M, N] state matrix — the paper's "per-thread per-episode"
+(PTPE) mapping becomes per-*lane* per-episode on the TPU VPU.
+
+The step function is shared with MapConcatenate (``mapconcat.py``) and the
+Pallas kernel oracle (``kernels/ref.py``). It also accepts lower bounds so
+the same code path expresses the *single-slot approximation* of A1 (used only
+in tests to show why A1 needs lists — the paper's motivation for Obs. 5.1).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .episodes import EpisodeBatch
+from .events import TIME_NEG_INF, EventStream
+
+
+def step_single_slot(s, count, etypes, tlo, thi, e, t):
+    """One event against M single-slot state machines.
+
+    Args:
+      s:      i32[M, N] last-accepted timestamp per level (TIME_NEG_INF = none)
+      count:  i32[M]
+      etypes: i32[M, N]; tlo/thi: i32[M, N-1]
+      e, t:   scalar i32 event type / time (e == PAD_TYPE is a no-op)
+
+    Returns (s', count'). All reads see the pre-event state, which matches the
+    sequential top-down level walk (see core/ref.py notes).
+    """
+    match = etypes == e  # [M, N]; PAD_TYPE never matches (etypes >= 0)
+    delta = t - s[:, :-1]  # [M, N-1]
+    ok = (delta > tlo) & (delta <= thi)  # [M, N-1]
+    # level 0 always records; level i>0 records iff level i-1 witnesses
+    advance = jnp.concatenate(
+        [jnp.ones_like(match[:, :1]), ok], axis=1) & match  # [M, N]
+    complete = advance[:, -1]  # [M]
+    # the last level never stores (completion resets instead)
+    store = advance.at[:, -1].set(False)
+    s_new = jnp.where(store, t, s)
+    s_new = jnp.where(complete[:, None], TIME_NEG_INF, s_new)
+    return s_new, count + complete.astype(count.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _scan_count(etypes, tlo, thi, ev_types, ev_times):
+    m, _ = etypes.shape
+    s0 = jnp.full(etypes.shape, TIME_NEG_INF, dtype=jnp.int32)
+    c0 = jnp.zeros((m,), dtype=jnp.int32)
+
+    def body(carry, ev):
+        s, c = carry
+        e, t = ev
+        s, c = step_single_slot(s, c, etypes, tlo, thi, e, t)
+        return (s, c), None
+
+    (_, count), _ = jax.lax.scan(body, (s0, c0), (ev_types, ev_times))
+    return count
+
+
+def count_single_slot(stream: EventStream, eps: EpisodeBatch,
+                      inclusive_lower: bool = False) -> np.ndarray:
+    """Single-slot scan with eps' own bounds (A2 ⇔ bounds already relaxed).
+
+    ``inclusive_lower`` applies Δ ∈ [tlo.., thi] by shifting the exclusive
+    integer bound down one tick — see ref.count_a2_sequential for why A2
+    needs this on streams with repeated timestamps."""
+    if eps.N == 1:
+        return np.array([(stream.types == e).sum() for e in eps.etypes[:, 0]],
+                        dtype=np.int64)
+    tlo = jnp.asarray(eps.tlo) - (1 if inclusive_lower else 0)
+    count = _scan_count(jnp.asarray(eps.etypes), tlo,
+                        jnp.asarray(eps.thi), jnp.asarray(stream.types),
+                        jnp.asarray(stream.times))
+    return np.asarray(count, dtype=np.int64)
+
+
+def count_a2(stream: EventStream, eps: EpisodeBatch,
+             use_kernel: bool = True) -> np.ndarray:
+    """Paper Algorithm 3: upper-bound counts of the relaxed episodes α'.
+
+    Dispatches to the Pallas kernel path when available (TPU target;
+    interpret-mode on CPU is slower than the XLA scan, so default CPU path is
+    the scan — see kernels/ops.py for the dispatch policy).
+    """
+    relaxed = eps.relaxed()
+    if use_kernel:
+        try:
+            from repro.kernels import ops as kops
+            return kops.a2_count(stream, relaxed)
+        except (ImportError, NotImplementedError):
+            pass
+    return count_single_slot(stream, relaxed, inclusive_lower=True)

@@ -1,0 +1,59 @@
+"""Hybrid dispatcher — paper Algorithm 2 / Eq. 2.
+
+Choose PTPE (episode-parallel single scan) when there are enough episodes to
+saturate the machine, else MapConcatenate (segment-parallel). The paper's
+utilization bound ``S > MP × B_MP × T_B × f(N)`` translates on TPU to
+"enough episode lanes per core": our unit of episode parallelism is a
+VPU lane tile (128 episodes), and segment parallelism is worth its
+concatenate overhead only below ``U × f(N)`` episodes with the paper's
+empirically fitted ``f(N) = a/N + b`` (Fig. 8 — the *reciprocal* fit beat
+the linear one; we re-fit a, b on this host in benchmarks/fig8).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .count_a1 import count_a1 as _count_a1
+from .mapconcat import mapconcatenate as _mapconcatenate
+from .episodes import EpisodeBatch
+from .events import EventStream
+
+# Re-fit by benchmarks/fig8_crossover.py (written into EXPERIMENTS.md §Paper);
+# defaults follow the paper's shape: crossover shrinks with episode size.
+FN_A = 420.0
+FN_B = 40.0
+
+
+def parallel_units() -> int:
+    """Segment-parallel capacity — the paper's MP×B_MP×T_B term is the
+    machine's parallel slots; ours is the device count the Map step can
+    shard over. On a single device MapConcatenate has no hardware to use
+    (fig7: PTPE wins at every M there, with up to 10× dispatcher regret
+    under a mis-tuned constant — hence capacity-aware, not fixed)."""
+    import jax
+    return jax.device_count()
+
+
+def f_of_n(n: int, a: float = FN_A, b: float = FN_B) -> float:
+    return a / max(n, 1) + b
+
+
+def crossover(n: int) -> int:
+    """#episodes above which PTPE wins (Eq. 2 RHS)."""
+    return int(max(parallel_units() - 1, 0) * f_of_n(n))
+
+
+def count_dispatch(stream: EventStream, eps: EpisodeBatch,
+                   engine: str = "hybrid", use_kernel: bool = True,
+                   num_segments: int = 8) -> np.ndarray:
+    """Exact A1 counts through the selected computation-to-core mapping."""
+    if engine == "ptpe":
+        return _count_a1(stream, eps, use_kernel=use_kernel)
+    if engine == "mapconcatenate":
+        return _mapconcatenate(stream, eps, num_segments=num_segments)
+    if engine == "hybrid":
+        if eps.M > crossover(eps.N):
+            return _count_a1(stream, eps, use_kernel=use_kernel)
+        return _mapconcatenate(stream, eps, num_segments=num_segments)
+    raise ValueError(f"unknown engine {engine!r}")

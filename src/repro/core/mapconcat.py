@@ -1,0 +1,270 @@
+"""MapConcatenate (paper §5.2.2) — segment-parallel counting.
+
+The stream is split into P (power-of-two) time segments; each segment runs
+K = N phase-shifted A1 machines per episode — machine k starts
+``Σ_{i≤k} thi^i`` *before* the segment boundary, covering the k-events-before
+/ (N-k)-after boundary splits of Fig. 4. Each machine emits a tuple
+``(a, count, b)`` (Fig. 5):
+
+  a — end time of its first completion in ``(τ_p, τ_p + W)``  (else τ_p)
+  count — completions with end time in ``(τ_p, τ_{p+1}]``
+  b — end time of its first completion after τ_{p+1}, found by crossing into
+      the next segment up to ``τ_{p+1} + W``  (else τ_{p+1})
+
+Machines reset on every completion (non-overlap), which makes them memoryless
+at completion points — that is what lets a log₂(P) Concatenate tree stitch
+adjacent tuples by matching ``b_left == a_right`` (Fig. 6).
+
+The paper argues (but does not prove) that one of the N phases always
+reproduces the reference trajectory; we additionally track an ``unmatched``
+flag through the tree and recount flagged episodes with the single-scan
+engine, so the public API is exact even on adversarial streams.
+
+Distribution: ``mapconcat_sharded`` shard_maps the Map step over the mesh
+``data`` (= segment) axis; the (a, count, b) tuples are O(P·N) scalars, so
+the Concatenate tree runs replicated after an ``all_gather`` — the TPU
+analogue of the paper's single-kernel-launch concatenate.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .count_a1 import DEFAULT_LCAP, count_a1 as _count_a1_exact, \
+    dup_flags, step_bounded_list
+from .episodes import EpisodeBatch
+from .events import PAD_TYPE, TIME_NEG_INF, EventStream
+
+
+# ---------------------------------------------------------------- Map step
+
+
+def _segment_scan(ev_types, ev_times, etypes, tlo, thi, starts, tau_lo,
+                  tau_hi, w, lcap):
+    """Run K phase machines × M episodes over one segment's event window.
+
+    Args:
+      ev_types/ev_times: i32[Lw] (padded with PAD_TYPE)
+      etypes: i32[M, N]; tlo/thi: i32[M, N-1]
+      starts: i32[K, M] phase start times (machine ignores events at t<=start)
+      tau_lo, tau_hi: scalar i32 segment boundaries (τ_p, τ_{p+1}]
+      w: i32[M] max occurrence span per episode
+      lcap: static list capacity
+
+    Returns (a, count, b, ovf): each [K, M] (ovf bool).
+    """
+    k, m = starts.shape
+    n = etypes.shape[1]
+    # derive inits from tau so carries are device-varying under shard_map
+    # (numerically a no-op: vzero == 0, vfalse == False)
+    vzero = (tau_lo * 0).astype(jnp.int32)
+    vfalse = tau_lo != tau_lo
+    s0 = jnp.full((k, m, n, lcap), TIME_NEG_INF, jnp.int32) + vzero
+    ptr0 = jnp.zeros((k, m, n), jnp.int32) + vzero
+    cnt0 = jnp.zeros((k, m), jnp.int32) + vzero
+    ovf0 = jnp.zeros((k, m), jnp.bool_) | vfalse
+    a0 = jnp.full((k, m), tau_lo, jnp.int32)
+    b0 = jnp.full((k, m), tau_hi, jnp.int32)
+    done0 = jnp.zeros((k, m), jnp.bool_) | vfalse
+    a_set0 = jnp.zeros((k, m), jnp.bool_) | vfalse
+
+    step = jax.vmap(  # over phases; episode dim handled inside the step
+        step_bounded_list,
+        in_axes=(0, 0, 0, 0, None, None, None, None, None, None))
+    dups = dup_flags(ev_types, ev_times)
+
+    def body(carry, ev):
+        s, ptr, cnt, ovf, a, b, done, a_set = carry
+        e, t, d = ev
+        in_window = (t > starts) & (t < tau_hi + w[None, :]) & ~done  # [K,M]
+        # Run the raw machine step, then mask its effects per (phase, episode)
+        s2, ptr2, cdelta, ovf2 = step(s, ptr, jnp.zeros_like(cnt), ovf,
+                                      etypes, tlo, thi, e, t, d)
+        complete = (cdelta > 0) & in_window
+        live = in_window & (e != PAD_TYPE)
+        s = jnp.where(live[:, :, None, None], s2, s)
+        ptr = jnp.where(live[:, :, None], ptr2, ptr)
+        ovf = jnp.where(live, ovf2, ovf)
+        # bookkeeping on completions
+        in_seg = complete & (t > tau_lo) & (t <= tau_hi)
+        cnt = cnt + in_seg.astype(cnt.dtype)
+        rec_a = in_seg & ~a_set & (t < tau_lo + w[None, :])
+        a = jnp.where(rec_a, t, a)
+        a_set = a_set | rec_a
+        crossing = complete & (t > tau_hi)
+        b = jnp.where(crossing, t, b)
+        done = done | crossing
+        return (s, ptr, cnt, ovf, a, b, done, a_set), None
+
+    carry0 = (s0, ptr0, cnt0, ovf0, a0, b0, done0, a_set0)
+    (s, ptr, cnt, ovf, a, b, done, a_set), _ = jax.lax.scan(
+        body, carry0, (ev_types, ev_times, dups))
+    return a, cnt, b, ovf
+
+
+# ------------------------------------------------------- Concatenate step
+
+
+def concatenate_tree(a, c, b, flag):
+    """Fold P segments' tuples pairwise, log2(P) levels (paper Fig. 6).
+
+    Args: a/c/b: i32[P, K, M]; flag: bool[P, K, M] (unmatched-so-far).
+    Returns (count i32[M], bad bool[M]) for the phase-0 leftmost machine.
+    """
+    p = a.shape[0]
+    while p > 1:
+        al, ar = a[0::2], a[1::2]
+        cl, cr = c[0::2], c[1::2]
+        bl, br = b[0::2], b[1::2]
+        fl, fr = flag[0::2], flag[1::2]
+        # match left machine k's crossing end-time with right machines' a
+        eq = bl[:, :, None, :] == ar[:, None, :, :]  # [P/2, K, K', M]
+        matched = eq.any(axis=2)  # [P/2, K, M]
+        idx = jnp.argmax(eq, axis=2)  # [P/2, K, M] first matching k'
+        cr_g = jnp.take_along_axis(cr, idx, axis=1)
+        br_g = jnp.take_along_axis(br, idx, axis=1)
+        fr_g = jnp.take_along_axis(fr, idx, axis=1)
+        a, c = al, cl + cr_g
+        b = br_g
+        flag = fl | fr_g | ~matched
+        p //= 2
+    return c[0, 0], flag[0, 0]
+
+
+# ------------------------------------------------------------- public API
+
+
+def make_segments(stream: EventStream, num_segments: int, w_max: int):
+    """Host-side segmentation: boundaries + padded per-segment event windows.
+
+    Segment p covers (τ_p, τ_{p+1}]; its window additionally includes the
+    lookback (τ_p - W) and crossing zone (τ_{p+1} + W). Returns
+    (tau i64[P+1], types i32[P, Lw], times i32[P, Lw]).
+    """
+    t0, t1 = stream.span
+    total = max(int(t1 - t0), 1)
+    p = max(num_segments, 1)
+    while p > 1 and total // p <= max(w_max, 1):
+        p //= 2  # keep segment length > W so zones don't overlap boundaries
+    tau = np.round(np.linspace(t0 - 1, t1, p + 1)).astype(np.int64)
+    real = stream.types != PAD_TYPE
+    ts = stream.times[real]
+    tys = stream.types[real]
+    windows = []
+    for i in range(p):
+        lo = np.searchsorted(ts, tau[i] - w_max, side="right")
+        hi = np.searchsorted(ts, tau[i + 1] + w_max, side="left")
+        windows.append((lo, hi))
+    lw = max(hi - lo for lo, hi in windows) if windows else 1
+    wt = np.full((p, lw), PAD_TYPE, np.int32)
+    wtt = np.full((p, lw), 0, np.int32)
+    for i, (lo, hi) in enumerate(windows):
+        wt[i, : hi - lo] = tys[lo:hi]
+        wtt[i, : hi - lo] = ts[lo:hi]
+    return tau, wt, wtt
+
+
+@functools.partial(jax.jit, static_argnames=("lcap",))
+def _map_all_segments(wt, wtt, etypes, tlo, thi, tau, w, lcap):
+    """vmap the Map step over P segments. Returns a/c/b [P,K,M] + ovf."""
+    n = etypes.shape[1]
+    cum = jnp.cumsum(
+        jnp.concatenate([jnp.zeros_like(thi[:, :1]), thi], axis=1),
+        axis=1)  # [M, N] — Σ_{i<=k} thi^i
+    tau32 = tau.astype(jnp.int32)
+
+    def one_segment(ev_t, ev_tt, tau_lo, tau_hi):
+        starts = (tau_lo - cum.T).astype(jnp.int32)  # [K=N, M]
+        return _segment_scan(ev_t, ev_tt, etypes, tlo, thi, starts, tau_lo,
+                             tau_hi, w, lcap)
+
+    return jax.vmap(one_segment)(wt, wtt, tau32[:-1], tau32[1:])
+
+
+def mapconcatenate_sharded(stream: EventStream, eps: EpisodeBatch,
+                           mesh, axis: str = "data",
+                           lcap: int = DEFAULT_LCAP) -> np.ndarray:
+    """Distributed MapConcatenate: the Map step shard_maps over the mesh
+    ``axis`` (one segment per device — the paper's one-thread-block-per-
+    segment), the O(P·N) tuples are all_gather'd, and the Concatenate tree
+    folds replicated. Exactness fallback as in ``mapconcatenate``."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    if eps.N == 1:
+        return np.array([(stream.types == e).sum() for e in eps.etypes[:, 0]],
+                        dtype=np.int64)
+    p = mesh.shape[axis]
+    w = eps.max_span
+    w_max = int(w.max())
+    tau, wt, wtt = make_segments(stream, p, w_max)
+    if wt.shape[0] != p:  # stream too short for p segments — fall back
+        return mapconcatenate(stream, eps, num_segments=wt.shape[0],
+                              lcap=lcap)
+    n = eps.N
+    cum = np.cumsum(np.concatenate(
+        [np.zeros_like(eps.thi[:, :1]), eps.thi], axis=1), axis=1)  # [M, N]
+    taus = np.stack([tau[:-1], tau[1:]], axis=1).astype(np.int32)  # [P, 2]
+
+    def map_step(ev_t, ev_tt, tau_pair):
+        # one segment per device; [1, ...] block shapes from shard_map
+        ev_t, ev_tt, tau_pair = ev_t[0], ev_tt[0], tau_pair[0]
+        starts = (tau_pair[0] - jnp.asarray(cum).T).astype(jnp.int32)
+        a, c, b, ovf = _segment_scan(
+            ev_t, ev_tt, jnp.asarray(eps.etypes), jnp.asarray(eps.tlo),
+            jnp.asarray(eps.thi), starts, tau_pair[0], tau_pair[1],
+            jnp.asarray(w, jnp.int32), lcap)
+        out = jnp.stack([a, c, b, ovf.astype(jnp.int32)])[None]  # [1,4,K,M]
+        return jax.lax.all_gather(out, axis, axis=0, tiled=True)
+
+    from jax.experimental.shard_map import shard_map
+    fn = shard_map(map_step, mesh=mesh,
+                   in_specs=(P(axis), P(axis), P(axis)),
+                   out_specs=P(None), check_rep=False)
+    gathered = np.asarray(jax.jit(fn)(
+        jnp.asarray(wt), jnp.asarray(wtt), jnp.asarray(taus)))  # [P,4,K,M]
+    a, c, b, ovf = (jnp.asarray(gathered[:, i]) for i in range(4))
+    flag0 = jnp.zeros(a.shape, jnp.bool_)
+    count, bad = concatenate_tree(a, c, b, flag0)
+    count = np.asarray(count, np.int64)
+    bad = np.asarray(bad) | np.asarray(ovf.astype(bool).any(axis=(0, 1)))
+    if bad.any():
+        idx = np.nonzero(bad)[0]
+        count = count.copy()
+        count[idx] = _count_a1_exact(stream, eps.select(idx), lcap=lcap,
+                                     use_kernel=False)
+    return count
+
+
+def mapconcatenate(stream: EventStream, eps: EpisodeBatch,
+                   num_segments: int = 8,
+                   lcap: int = DEFAULT_LCAP) -> np.ndarray:
+    """Exact A1 counts via segment-parallel Map + Concatenate tree.
+
+    Falls back to the single-scan engine for episodes whose tuples failed to
+    stitch or whose bounded lists flagged a live eviction.
+    """
+    if eps.N == 1:
+        return np.array([(stream.types == e).sum() for e in eps.etypes[:, 0]],
+                        dtype=np.int64)
+    w = eps.max_span
+    w_max = int(w.max())
+    tau, wt, wtt = make_segments(stream, num_segments, w_max)
+    a, c, b, ovf = _map_all_segments(
+        jnp.asarray(wt), jnp.asarray(wtt), jnp.asarray(eps.etypes),
+        jnp.asarray(eps.tlo), jnp.asarray(eps.thi), jnp.asarray(tau),
+        jnp.asarray(w, dtype=jnp.int32), lcap)
+    flag0 = jnp.zeros(a.shape, jnp.bool_)
+    count, bad = concatenate_tree(a, c, b, flag0)
+    count = np.asarray(count, np.int64)
+    bad = np.asarray(bad) | np.asarray(ovf.any(axis=(0, 1)))
+    if bad.any():
+        idx = np.nonzero(bad)[0]
+        count = count.copy()
+        count[idx] = _count_a1_exact(stream, eps.select(idx), lcap=lcap,
+                                     use_kernel=False)
+    return count

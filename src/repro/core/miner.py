@@ -1,0 +1,86 @@
+"""Top-level frequent-episode miner (Problem 1 driver).
+
+Level-wise loop: generate candidates (host, cheap) → count with the two-pass
+GPU-paper pipeline (A2 cull → A1 exact, mapping chosen by the Hybrid rule) →
+keep frequent → join to next level. ``mine_partitions`` processes a stream
+window-by-window — the paper's "real-time responsiveness by processing
+partitions of the data stream in turn" (chip-on-chip loop).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from . import candidates as _cand
+from . import twopass as _tp
+from .episodes import EpisodeBatch
+from .events import EventStream
+
+
+@dataclasses.dataclass
+class LevelStats:
+    level: int
+    num_candidates: int
+    num_survived_a2: int
+    num_frequent: int
+    seconds: float
+
+
+@dataclasses.dataclass
+class MiningResult:
+    frequent: list[EpisodeBatch]     # per level (index 0 = size-1 episodes)
+    counts: list[np.ndarray]         # exact counts for each frequent batch
+    stats: list[LevelStats]
+
+
+def mine(stream: EventStream, intervals, theta: int, max_level: int = 4,
+         engine: str = "hybrid", two_pass: bool = True,
+         use_kernel: bool = True) -> MiningResult:
+    """Mine all frequent serial episodes up to ``max_level`` nodes.
+
+    ``intervals`` — the constraint set I: array-like [(tlo, thi), ...].
+    """
+    frequent, counts, stats = [], [], []
+
+    # level 1 — plain occurrence counts
+    t0 = time.perf_counter()
+    c1 = _cand.level1(stream.num_types)
+    cnt1 = np.array([(stream.types == e).sum() for e in c1.etypes[:, 0]],
+                    dtype=np.int64)
+    keep = cnt1 >= theta
+    frequent.append(c1.select(keep))
+    counts.append(cnt1[keep])
+    stats.append(LevelStats(1, c1.M, c1.M, int(keep.sum()),
+                            time.perf_counter() - t0))
+
+    level = 2
+    while level <= max_level and frequent[-1].M > 0:
+        t0 = time.perf_counter()
+        if level == 2:
+            cand = _cand.level2(frequent[0].etypes[:, 0], intervals)
+        else:
+            cand = _cand.join_next_level(frequent[-1])
+        if cand is None or cand.M == 0:
+            break
+        counter = _tp.count_two_pass if two_pass else _tp.count_one_pass
+        res = counter(stream, cand, theta, engine=engine,
+                      use_kernel=use_kernel)
+        keep = res.frequent
+        frequent.append(cand.select(keep))
+        counts.append(res.counts[keep])
+        stats.append(LevelStats(level, cand.M, int(res.survived.sum()),
+                                int(keep.sum()), time.perf_counter() - t0))
+        level += 1
+    return MiningResult(frequent=frequent, counts=counts, stats=stats)
+
+
+def mine_partitions(streams, intervals, theta_per_window: int,
+                    max_level: int = 4, **kw):
+    """Chip-on-chip streaming mode: mine each partition window in turn and
+    yield (window_index, MiningResult). θ applies per window."""
+    for i, st in enumerate(streams):
+        yield i, mine(st, intervals, theta_per_window, max_level=max_level,
+                      **kw)

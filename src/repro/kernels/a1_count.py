@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: A1 (bounded-list) episode counting.
+
+Same computation-to-core mapping as ``a2_count`` (episodes on lanes, levels
+on sublanes) plus a bounded witness list per level: state is an
+(NP, LCAP, BM) timestamp brick. The paper's data-dependent list walk becomes
+a masked reduction over the LCAP axis; the circular write pointer is kept as
+a one-hot (NP, LCAP, BM) mask rotated on append — no gathers, no scatters,
+pure VPU ops (this is the TPU answer to the divergence/local-memory costs
+the paper profiles in Fig. 10).
+
+Outputs: counts AND a live-eviction flag per episode (see
+core/count_a1.py — flagged episodes are recounted exactly by the host).
+
+Event stream layout: i32[3, EP] = (types; times; dup) where dup marks a
+same-timestamp real successor (needed for exact eviction accounting).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.events import TIME_NEG_INF
+
+from .a2_count import LANES, SUBLANES, PAD_ROW_TYPE
+
+
+def _a1_kernel(n_levels: int, lcap: int, et_ref, tlo_ref, thi_ref, ev_ref,
+               cnt_ref, ovf_ref):
+    et = et_ref[...]      # (NP, BM)
+    tlo = tlo_ref[...]    # (NP, BM) row i = edge i→i+1 (incoming of level i+1)
+    thi = thi_ref[...]
+    np_, bm = et.shape
+    n_events = ev_ref.shape[1]
+
+    def body(j, carry):
+        s, po, cnt, ovf = carry  # s,(NP,L,BM) po one-hot,(NP,L,BM)
+        e = ev_ref[0, j]
+        t = ev_ref[1, j]
+        dup = ev_ref[2, j] != 0
+        match = et == e                                     # (NP, BM)
+        delta = t - s                                       # (NP, L, BM)
+        witness = (delta > tlo[:, None, :]) & (delta <= thi[:, None, :])
+        ok = witness.any(axis=1)                            # (NP, BM) row i =
+        ok_shift = jnp.concatenate(                         # edge i→i+1 holds
+            [jnp.ones((1, bm), jnp.bool_), ok[:-1, :]], axis=0)
+        advance = match & ok_shift
+        complete = advance[n_levels - 1, :]                 # (BM,)
+        store = advance.at[n_levels - 1, :].set(False)
+        store = store & ~complete[None, :]
+        write = store[:, None, :] & po                      # (NP, L, BM)
+        # live-eviction: evicted witness may still have a same-tick or
+        # lower-bounded consumer (see core/count_a1.py docstring)
+        v = jnp.where(write, s, TIME_NEG_INF).max(axis=1)   # (NP, BM)
+        live = (v > TIME_NEG_INF) & (t - v <= thi) & ((tlo > 0) | dup)
+        ovf = ovf | live.any(axis=0)[None, :].astype(jnp.int32)
+        s = jnp.where(write, t, s)
+        po = jnp.where(store[:, None, :], jnp.roll(po, 1, axis=1), po)
+        s = jnp.where(complete[None, None, :], TIME_NEG_INF, s)
+        po0 = jnp.zeros_like(po).at[:, 0, :].set(True)
+        po = jnp.where(complete[None, None, :], po0, po)
+        cnt = cnt + complete.astype(jnp.int32)[None, :]
+        return s, po, cnt, ovf
+
+    s0 = jnp.full((np_, lcap, bm), TIME_NEG_INF, jnp.int32)
+    po0 = jnp.zeros((np_, lcap, bm), jnp.bool_).at[:, 0, :].set(True)
+    c0 = jnp.zeros((1, bm), jnp.int32)
+    o0 = jnp.zeros((1, bm), jnp.int32)
+    _, _, cnt, ovf = jax.lax.fori_loop(0, n_events, body,
+                                       (s0, po0, c0, o0))
+    cnt_ref[...] = jnp.broadcast_to(cnt, cnt_ref.shape)
+    ovf_ref[...] = jnp.broadcast_to(ovf, ovf_ref.shape)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_levels", "lcap", "block_m", "interpret"))
+def a1_count_kernel(etypes, tlo, thi, events, *, n_levels: int,
+                    lcap: int = 4, block_m: int = LANES,
+                    interpret: bool = False):
+    """pallas_call wrapper. See a2_count_kernel; events here are i32[3, EP]
+    (types; times; dup). Returns (counts i32[8, M], ovf i32[8, M]), row 0
+    meaningful."""
+    np_, m = etypes.shape
+    grid = (m // block_m,)
+    kernel = functools.partial(_a1_kernel, n_levels, lcap)
+    out_shape = [jax.ShapeDtypeStruct((SUBLANES, m), jnp.int32),
+                 jax.ShapeDtypeStruct((SUBLANES, m), jnp.int32)]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((np_, block_m), lambda i: (0, i)),
+            pl.BlockSpec((np_, block_m), lambda i: (0, i)),
+            pl.BlockSpec((np_, block_m), lambda i: (0, i)),
+            pl.BlockSpec(events.shape, lambda i: (0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((SUBLANES, block_m), lambda i: (0, i)),
+                   pl.BlockSpec((SUBLANES, block_m), lambda i: (0, i))],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(etypes, tlo, thi, events)

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: A2 (single-slot) episode counting.
+
+Computation-to-core mapping (the TPU re-derivation of the paper's PTPE):
+episodes live on the 128-wide **lane** axis, episode levels on the
+**sublane** axis, so one VPU op advances 8×128 state machines. The grid
+tiles the episode batch; each program walks the whole event stream with a
+``fori_loop``, carrying the (levels × episodes) timestamp tile and the count
+row as loop values (VREG/VMEM resident).
+
+Layouts (all i32):
+  etypes  (NP,  BM)  episode types, level-major  (NP = levels padded to 8k)
+  tlo/thi (NP,  BM)  edge bounds, row i = edge i→i+1 (row N-1.. padded)
+  events  (2, EP)    row 0 = types, row 1 = times (EP = events padded)
+  count   (8, BM)    output; row 0 holds the counts (8 sublanes for tiling)
+
+The event stream is re-read by every grid step (episode tile); on a real
+TPU the (2, EP) block would be served from VMEM once per program — the
+stream is tiny next to the state tile math, so this is compute-, not
+memory-bound (§Roofline in EXPERIMENTS.md).
+
+Event padding uses type = PAD_TYPE (-1); level-row padding uses -2, so a
+padded event never matches a padded row. Validated in ``interpret=True``
+against ``ref.a2_count_ref`` (tests/test_kernels.py sweeps shapes+dtypes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.events import TIME_NEG_INF
+
+LANES = 128
+SUBLANES = 8
+PAD_ROW_TYPE = -2
+
+
+def _a2_kernel(n_levels: int, et_ref, tlo_ref, thi_ref, ev_ref, cnt_ref):
+    """One episode tile × all events. n_levels is static (>= 2)."""
+    et = et_ref[...]          # (NP, BM)
+    tlo = tlo_ref[...]        # (NP, BM) row i = edge (i, i+1)
+    thi = thi_ref[...]
+    np_, bm = et.shape
+    n_events = ev_ref.shape[1]
+
+    def body(j, carry):
+        s, cnt = carry
+        e = ev_ref[0, j]
+        t = ev_ref[1, j]
+        match = et == e                                   # (NP, BM)
+        delta = t - s                                     # (NP, BM)
+        ok = (delta > tlo) & (delta <= thi)               # row i: edge i→i+1
+        # advance row 0 = match; row i>0 = match & ok[i-1]
+        ok_shift = jnp.concatenate(
+            [jnp.ones((1, bm), jnp.bool_), ok[:-1, :]], axis=0)
+        advance = match & ok_shift                        # (NP, BM)
+        complete = advance[n_levels - 1, :]               # (BM,)
+        store = advance.at[n_levels - 1, :].set(False)
+        s = jnp.where(store, t, s)
+        s = jnp.where(complete[None, :], TIME_NEG_INF, s)
+        cnt = cnt + complete.astype(jnp.int32)[None, :]
+        return s, cnt
+
+    s0 = jnp.full((np_, bm), TIME_NEG_INF, jnp.int32)
+    c0 = jnp.zeros((1, bm), jnp.int32)
+    _, cnt = jax.lax.fori_loop(0, n_events, body, (s0, c0))
+    cnt_ref[...] = jnp.broadcast_to(cnt, cnt_ref.shape)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_levels", "block_m", "interpret"))
+def a2_count_kernel(etypes, tlo, thi, events, *, n_levels: int,
+                    block_m: int = LANES, interpret: bool = False):
+    """pallas_call wrapper.
+
+    Args:
+      etypes/tlo/thi: i32[NP, M] (level-major, padded rows = PAD_ROW_TYPE /
+        zero-width intervals); M multiple of ``block_m``.
+      events: i32[2, EP] (types; times).
+      n_levels: true episode size N (static).
+    Returns i32[8, M]; row 0 = counts.
+    """
+    np_, m = etypes.shape
+    grid = (m // block_m,)
+    kernel = functools.partial(_a2_kernel, n_levels)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((np_, block_m), lambda i: (0, i)),
+            pl.BlockSpec((np_, block_m), lambda i: (0, i)),
+            pl.BlockSpec((np_, block_m), lambda i: (0, i)),
+            pl.BlockSpec(events.shape, lambda i: (0, 0)),  # stream: every tile
+        ],
+        out_specs=pl.BlockSpec((SUBLANES, block_m), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((SUBLANES, m), jnp.int32),
+        interpret=interpret,
+    )(etypes, tlo, thi, events)

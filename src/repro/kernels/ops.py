@@ -1,0 +1,112 @@
+"""jit'd public wrappers for the episode-counting kernels.
+
+Handles host→kernel layout (episode-major → level-major, lane/sublane
+padding), dispatch policy, and result unpacking.
+
+Dispatch policy:
+  * on TPU — compiled Pallas kernel;
+  * anywhere with ``REPRO_INTERPRET_KERNELS=1`` (or ``force="interpret"``) —
+    ``interpret=True`` (kernel body executed by XLA CPU; used by tests);
+  * otherwise — raise NotImplementedError so callers (core/count_*.py) fall
+    back to the XLA-scan engine, which is the fast CPU path.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.episodes import EpisodeBatch
+from repro.core.events import PAD_TYPE, EventStream
+
+from .a1_count import a1_count_kernel
+from .a2_count import LANES, PAD_ROW_TYPE, SUBLANES, a2_count_kernel
+
+
+def _mode(force: str | None) -> bool:
+    """Returns interpret flag, or raises NotImplementedError to decline."""
+    if force == "compiled":
+        return False
+    if force == "interpret":
+        return True
+    if jax.default_backend() == "tpu":
+        return False
+    if os.environ.get("REPRO_INTERPRET_KERNELS") == "1":
+        return True
+    raise NotImplementedError("no TPU and interpret mode not requested")
+
+
+def _round_up(x: int, k: int) -> int:
+    return ((x + k - 1) // k) * k
+
+
+def episode_layout(eps: EpisodeBatch, inclusive_lower: bool,
+                   block_m: int = LANES):
+    """(M,N) episode-major → (NP, MP) level-major kernel layout."""
+    m, n = eps.etypes.shape
+    np_ = _round_up(max(n, 1), SUBLANES)
+    mp = _round_up(m, block_m)
+    et = np.full((np_, mp), PAD_ROW_TYPE, np.int32)
+    et[:n, :m] = eps.etypes.T
+    # row i of tlo/thi = edge i→i+1; padded rows get empty intervals (0, 0]
+    tlo = np.zeros((np_, mp), np.int32)
+    thi = np.zeros((np_, mp), np.int32)
+    tlo[: n - 1, :m] = eps.tlo.T - (1 if inclusive_lower else 0)
+    thi[: n - 1, :m] = eps.thi.T
+    return jnp.asarray(et), jnp.asarray(tlo), jnp.asarray(thi)
+
+
+def event_layout(stream: EventStream, with_dup: bool):
+    """Events → i32[2 or 3, EP] (types; times; [dup]), EP padded to 128."""
+    n = stream.types.shape[0]
+    ep = _round_up(max(n, 1), LANES)
+    rows = 3 if with_dup else 2
+    ev = np.zeros((rows, ep), np.int32)
+    ev[0, :] = PAD_TYPE
+    ev[0, :n] = stream.types
+    last = stream.times[-1] if n else 0
+    ev[1, :] = last
+    ev[1, :n] = stream.times
+    if with_dup:
+        dup = np.zeros(ep, np.int32)
+        if n > 1:
+            dup[: n - 1] = ((stream.times[1:] == stream.times[:-1])
+                            & (stream.types[1:] != PAD_TYPE)).astype(np.int32)
+        ev[2, :] = dup
+    return jnp.asarray(ev)
+
+
+def a2_count(stream: EventStream, eps: EpisodeBatch,
+             force: str | None = None) -> np.ndarray:
+    """Kernel-backed Algorithm 3 (inclusive-lower strengthening built in).
+    ``eps`` must already be relaxed (tlo == 0). Returns int64[M]."""
+    interpret = _mode(force)
+    if eps.N == 1:
+        return np.array([(stream.types == e).sum() for e in eps.etypes[:, 0]],
+                        dtype=np.int64)
+    et, tlo, thi = episode_layout(eps, inclusive_lower=True)
+    ev = event_layout(stream, with_dup=False)
+    out = a2_count_kernel(et, tlo, thi, ev, n_levels=eps.N,
+                          interpret=interpret)
+    return np.asarray(out[0, : eps.M], dtype=np.int64)
+
+
+def a1_count(stream: EventStream, eps: EpisodeBatch, lcap: int = 4,
+             force: str | None = None):
+    """Kernel-backed bounded-list Algorithm 1.
+    Returns (counts int64[M], ovf bool[M]); see core.count_a1 for the
+    exactness-restoring fallback on flagged episodes."""
+    interpret = _mode(force)
+    if eps.N == 1:
+        counts = np.array(
+            [(stream.types == e).sum() for e in eps.etypes[:, 0]], np.int64)
+        return counts, np.zeros(eps.M, dtype=bool)
+    et, tlo, thi = episode_layout(eps, inclusive_lower=False)
+    ev = event_layout(stream, with_dup=True)
+    cnt, ovf = a1_count_kernel(et, tlo, thi, ev, n_levels=eps.N, lcap=lcap,
+                               interpret=interpret)
+    return (np.asarray(cnt[0, : eps.M], dtype=np.int64),
+            np.asarray(ovf[0, : eps.M], dtype=bool))

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for the Pallas kernels, in KERNEL layout.
+
+These mirror the kernels' (levels × episodes) data layout op-for-op but run
+as plain jnp (lax.scan over events). tests/test_kernels.py sweeps shapes and
+asserts the interpret-mode kernels equal these oracles bit-exactly; the
+oracles themselves are asserted equal to the sequential pseudocode oracles
+in core/ref.py, closing the chain kernel == layout-oracle == paper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.events import TIME_NEG_INF
+
+
+@functools.partial(jax.jit, static_argnames=("n_levels",))
+def a2_count_ref(etypes, tlo, thi, events, *, n_levels: int):
+    """i32[NP, M] layout oracle for a2_count_kernel. Returns i32[M]."""
+    np_, m = etypes.shape
+
+    def step(carry, ev):
+        s, cnt = carry
+        e, t = ev
+        match = etypes == e
+        delta = t - s
+        ok = (delta > tlo) & (delta <= thi)
+        ok_shift = jnp.concatenate(
+            [jnp.ones((1, m), jnp.bool_), ok[:-1, :]], axis=0)
+        advance = match & ok_shift
+        complete = advance[n_levels - 1, :]
+        store = advance.at[n_levels - 1, :].set(False)
+        s = jnp.where(store, t, s)
+        s = jnp.where(complete[None, :], TIME_NEG_INF, s)
+        return (s, cnt + complete.astype(jnp.int32)), None
+
+    s0 = jnp.full((np_, m), TIME_NEG_INF, jnp.int32)
+    (_, cnt), _ = jax.lax.scan(step, (s0, jnp.zeros((m,), jnp.int32)),
+                               (events[0], events[1]))
+    return cnt
+
+
+@functools.partial(jax.jit, static_argnames=("n_levels", "lcap"))
+def a1_count_ref(etypes, tlo, thi, events, *, n_levels: int, lcap: int = 4):
+    """i32[NP, M] layout oracle for a1_count_kernel.
+    Returns (counts i32[M], ovf bool[M])."""
+    np_, m = etypes.shape
+
+    def step(carry, ev):
+        s, po, cnt, ovf = carry
+        e, t, dup = ev
+        match = etypes == e
+        delta = t - s
+        witness = (delta > tlo[:, None, :]) & (delta <= thi[:, None, :])
+        ok = witness.any(axis=1)
+        ok_shift = jnp.concatenate(
+            [jnp.ones((1, m), jnp.bool_), ok[:-1, :]], axis=0)
+        advance = match & ok_shift
+        complete = advance[n_levels - 1, :]
+        store = advance.at[n_levels - 1, :].set(False)
+        store = store & ~complete[None, :]
+        write = store[:, None, :] & po
+        v = jnp.where(write, s, TIME_NEG_INF).max(axis=1)
+        live = (v > TIME_NEG_INF) & (t - v <= thi) & ((tlo > 0) | (dup != 0))
+        ovf = ovf | live.any(axis=0)
+        s = jnp.where(write, t, s)
+        po = jnp.where(store[:, None, :], jnp.roll(po, 1, axis=1), po)
+        s = jnp.where(complete[None, None, :], TIME_NEG_INF, s)
+        po0 = jnp.zeros_like(po).at[:, 0, :].set(True)
+        po = jnp.where(complete[None, None, :], po0, po)
+        return (s, po, cnt + complete.astype(jnp.int32), ovf), None
+
+    s0 = jnp.full((np_, lcap, m), TIME_NEG_INF, jnp.int32)
+    po0 = jnp.zeros((np_, lcap, m), jnp.bool_).at[:, 0, :].set(True)
+    (_, _, cnt, ovf), _ = jax.lax.scan(
+        step, (s0, po0, jnp.zeros((m,), jnp.int32),
+               jnp.zeros((m,), jnp.bool_)),
+        (events[0], events[1], events[2]))
+    return cnt, ovf

@@ -1,0 +1,153 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver.
+
+For every (architecture × input shape × mesh) cell:
+``jit(step).lower(**ShapeDtypeStructs).compile()`` on the production mesh —
+proving the distribution config is coherent without hardware — then record
+``memory_analysis()`` (fits-in-HBM evidence), ``cost_analysis()``, and the
+loop-corrected HLO summary (collective bytes, dot FLOPs, traffic proxy) into
+one JSON per cell for §Dry-run / §Roofline of EXPERIMENTS.md.
+
+The XLA_FLAGS line above MUST precede any jax import (jax locks the device
+count at first init); nothing else in the repo sets it globally.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3_405b \
+      --shape train_4k --mesh both --out experiments/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--force]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCHS, canonical, get_config
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, cell_is_runnable
+from repro.launch.steps import build_cell
+
+MESHES = {"single": False, "multi": True}
+
+
+def _mem_dict(mem) -> dict:
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    out["per_device_total_bytes"] = (
+        out.get("argument_size_in_bytes", 0)
+        + out.get("temp_size_in_bytes", 0)
+        + out.get("output_size_in_bytes", 0)
+        - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def run_cell(arch: str, shape: str, mesh_name: str, out_dir: Path,
+             force: bool = False, keep_hlo: bool = False) -> dict:
+    arch = canonical(arch)
+    out_path = out_dir / f"{arch}__{shape}__{mesh_name}.json"
+    if out_path.exists() and not force:
+        rec = json.loads(out_path.read_text())
+        if rec.get("status") in ("ok", "skip"):
+            print(f"[cached] {arch} × {shape} × {mesh_name}: "
+                  f"{rec['status']}")
+            return rec
+    runnable, why = cell_is_runnable(arch, shape)
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+           "timestamp": time.strftime("%Y-%m-%d %H:%M:%S")}
+    if not runnable:
+        rec.update(status="skip", reason=why)
+        out_path.write_text(json.dumps(rec, indent=1))
+        print(f"[skip]   {arch} × {shape} × {mesh_name}: {why}")
+        return rec
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=MESHES[mesh_name])
+    chips = mesh.devices.size
+    try:
+        t0 = time.perf_counter()
+        with mesh:
+            jfn, sds = build_cell(cfg, mesh, shape)
+            lowered = jfn.lower(*sds)
+            t_lower = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        text = compiled.as_text()
+        hs = hlo_analysis.analyze(text)
+        cell = SHAPES[shape]
+        rec.update(
+            status="ok",
+            chips=int(chips),
+            seconds={"lower": round(t_lower, 2),
+                     "compile": round(t_compile, 2)},
+            memory=_mem_dict(mem),
+            cost={k: float(v) for k, v in cost.items()
+                  if isinstance(v, (int, float))},
+            hlo=hs.to_json(),
+            tokens=cell.global_batch * (cell.seq_len
+                                        if cell.kind != "decode" else 1),
+            model={"params": cfg.num_params(),
+                   "active_params": cfg.num_active_params_per_token(),
+                   "seq_len": cell.seq_len,
+                   "global_batch": cell.global_batch,
+                   "kind": cell.kind},
+        )
+        print(f"[ok]     {arch} × {shape} × {mesh_name}: "
+              f"{rec['memory']['per_device_total_bytes']/2**30:.2f} GiB/dev,"
+              f" lower {t_lower:.0f}s compile {t_compile:.0f}s")
+        if keep_hlo:
+            (out_dir / f"{arch}__{shape}__{mesh_name}.hlo.txt"
+             ).write_text(text)
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-4000:])
+        print(f"[ERROR]  {arch} × {shape} × {mesh_name}: {e}")
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    archs = ARCHS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                rec = run_cell(arch, shape, mesh_name, out_dir,
+                               force=args.force, keep_hlo=args.keep_hlo)
+                n_err += rec["status"] == "error"
+    if n_err:
+        raise SystemExit(f"{n_err} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

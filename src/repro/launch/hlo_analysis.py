@@ -1,0 +1,257 @@
+"""Loop-aware HLO text analysis for the roofline terms.
+
+``compiled.cost_analysis()`` visits every computation ONCE — `while` bodies
+(our scan-over-layers, q-chunk maps, CE-loss chunks) are under-counted by
+their trip counts (verified empirically: a 7-iteration scan of a matmul
+reports exactly one body's flops). This module parses ``compiled.as_text()``
+into a computation call graph, reads each while's
+``backend_config={"known_trip_count":{"n":...}}`` (fallback: the comparison
+constant in its condition computation), and walks the graph with
+multiplicities to produce:
+
+  * collective_bytes — Σ operand bytes over all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute (per-device shard
+    sizes, trip-count-scaled);
+  * dot_flops — 2·(out numel)·K per dot (trip-count-scaled): loop-corrected
+    matmul FLOPs, the dominant compute of every assigned arch;
+  * per-collective-kind byte breakdown for the §Perf iteration log.
+
+Unit-tested against jitted modules with known content
+(tests/test_hlo_analysis.py)."""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# count plain and -start forms; never -done (operand = the in-flight tuple)
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\(")
+_OPLINE_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_CALLS_RE = re.compile(
+    r"(?:condition|body|to_apply)=%([\w\.\-]+)"
+    r"|(?:calls|branch_computations)=\{([^}]*)\}"
+    r"|calls=%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\((.*)\)\s*->.*\{$")
+
+
+def _numel(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _first_shape_bytes(seg: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(seg):
+        total += _numel(dims) * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    body: str                      # full RHS text
+    shape: tuple[str, str] | None  # (dtype, dims) of output (first shape)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    ops: list
+    symbols: dict                  # op/param name -> (dtype, dims)
+    cond_constant: int | None = None
+
+
+def parse_hlo(text: str) -> tuple[dict, str | None]:
+    comps: dict[str, Computation] = {}
+    entry_name = None
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        hdr = _HDR_RE.match(stripped)
+        if hdr and stripped.endswith("{"):
+            name = hdr.group(2)
+            cur = Computation(name=name, is_entry=bool(hdr.group(1)),
+                              ops=[], symbols={})
+            comps[name] = cur
+            if cur.is_entry:
+                entry_name = name
+            # parameter declarations: "pname: f32[32,64]"
+            for pname, dt, dims in re.findall(
+                    r"([\w\.\-]+):\s*(\w+)\[([\d,]*)\]", hdr.group(3)):
+                cur.symbols[pname] = (dt, dims)
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OPLINE_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        shp = _SHAPE_RE.search(rhs)
+        cur.symbols[name] = (shp.group(1), shp.group(2)) if shp else None
+        cur.ops.append(Op(name=name, body=rhs,
+                          shape=cur.symbols[name]))
+        cm = re.search(r"constant\((\d+)\)", rhs)
+        if cm:
+            v = int(cm.group(1))
+            if cur.cond_constant is None or v > cur.cond_constant:
+                cur.cond_constant = v
+    return comps, entry_name
+
+
+def _op_calls(op: Op) -> list[str]:
+    out = []
+    for g1, g2, g3 in _CALLS_RE.findall(op.body):
+        if g1:
+            out.append(g1)
+        if g3:
+            out.append(g3)
+        if g2:
+            out += [x.strip().lstrip("%") for x in g2.split(",") if x.strip()]
+    return out
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    if not re.search(r"\bdot\(", op.body) or op.shape is None:
+        return 0.0
+    out_n = _numel(op.shape[1])
+    inside = op.body[op.body.index("dot(") + 4:]
+    operands = re.findall(r"%([\w\.\-]+)", inside[: inside.index(")")])
+    k = 1
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.body)
+    if m and operands:
+        lhs = comp.symbols.get(operands[0])
+        if lhs:
+            lhs_dims = [int(d) for d in lhs[1].split(",") if d]
+            for i in (int(x) for x in m.group(1).split(",") if x):
+                if i < len(lhs_dims):
+                    k *= lhs_dims[i]
+    return 2.0 * out_n * k
+
+
+def _while_trips(op: Op, comps: dict) -> float:
+    m = _TRIP_RE.search(op.body)
+    if m:
+        return float(m.group(1))
+    cm = re.search(r"condition=%([\w\.\-]+)", op.body)
+    if cm and cm.group(1) in comps:
+        c = comps[cm.group(1)].cond_constant
+        if c:
+            return float(c)
+    return 1.0
+
+
+@dataclasses.dataclass
+class HloSummary:
+    collective_bytes: float
+    collective_breakdown: dict
+    dot_flops: float
+    while_trip_counts: dict
+    traffic_bytes: float = 0.0   # loop-corrected HBM proxy (reads+writes)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+_NO_TRAFFIC = ("parameter", "constant", "get-tuple-element", "tuple(",
+               "bitcast")
+
+
+def analyze(text: str) -> HloSummary:
+    comps, entry_name = parse_hlo(text)
+    breakdown: dict[str, float] = defaultdict(float)
+    trips_seen: dict[str, float] = {}
+    total_flops = 0.0
+    traffic = 0.0
+    # fusion-called computations: their internals are register-resident; the
+    # fusion op's own operands/output already account for the HBM traffic
+    fusion_comps: set[str] = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if re.search(r"\bfusion\(", op.body):
+                fusion_comps.update(_op_calls(op))
+
+    def op_traffic(op: Op, comp: Computation) -> float:
+        if any(t in op.body for t in _NO_TRAFFIC):
+            return 0.0
+        out = 0.0
+        if op.shape:
+            out += _numel(op.shape[1]) * _DTYPE_BYTES.get(op.shape[0], 4)
+        if "(" in op.body:
+            paren = op.body[op.body.index("("):]
+            for nm in re.findall(r"%([\w\.\-]+)",
+                                 paren[: paren.find(")") + 1]):
+                sym = comp.symbols.get(nm)
+                if sym:
+                    out += _numel(sym[1]) * _DTYPE_BYTES.get(sym[0], 4)
+        return out
+
+    def walk(comp: Computation, mult: float, depth: int = 0):
+        nonlocal total_flops, traffic
+        if depth > 32:
+            return
+        for op in comp.ops:
+            cm = _COLL_RE.search(op.body)
+            if cm:
+                # operands are %name refs — resolve via the symbol table;
+                # fall back to the op's own output shape
+                paren = op.body[op.body.index("("):]
+                names = re.findall(r"%([\w\.\-]+)",
+                                   paren[: paren.find(")") + 1])
+                nbytes = 0
+                for nm in names:
+                    sym = comp.symbols.get(nm)
+                    if sym:
+                        nbytes += _numel(sym[1]) * _DTYPE_BYTES.get(sym[0], 4)
+                if nbytes == 0 and op.shape:
+                    nbytes = _numel(op.shape[1]) \
+                        * _DTYPE_BYTES.get(op.shape[0], 4)
+                breakdown[cm.group(1)] += mult * nbytes
+            f = _dot_flops(op, comp)
+            if f:
+                total_flops += mult * f
+            if comp.name not in fusion_comps:
+                traffic += mult * op_traffic(op, comp)
+            is_while = re.search(r"\bwhile\(", op.body)
+            trips = _while_trips(op, comps) if is_while else 1.0
+            body_name = None
+            if is_while:
+                bm = re.search(r"body=%([\w\.\-]+)", op.body)
+                body_name = bm.group(1) if bm else None
+                if body_name:
+                    trips_seen[body_name] = trips
+            for callee in _op_calls(op):
+                c = comps.get(callee)
+                if c is None:
+                    continue
+                walk(c, mult * (trips if callee == body_name else 1.0),
+                     depth + 1)
+
+    if entry_name:
+        walk(comps[entry_name], 1.0)
+    return HloSummary(collective_bytes=float(sum(breakdown.values())),
+                      collective_breakdown=dict(breakdown),
+                      dot_flops=total_flops,
+                      while_trip_counts=trips_seen,
+                      traffic_bytes=traffic)

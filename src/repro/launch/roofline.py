@@ -1,0 +1,134 @@
+"""Roofline analysis over the dry-run JSONs (EXPERIMENTS.md §Roofline).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+Per (arch × shape × mesh) cell, three per-chip time terms:
+
+  compute    = HLO_FLOPs_per_device / 197e12
+  memory     = HLO_bytes_per_device / 819e9
+  collective = collective_bytes_per_device / 50e9
+
+Sources: FLOPs/bytes use the LOOP-CORRECTED HLO walk (hlo_analysis.py) —
+``cost_analysis()`` visits while bodies once, so its raw numbers are also
+shown as the (undercounted) lower bound. MODEL_FLOPS = 6·N(_active)·tokens
+for train, 2·N_active·tokens for inference, GLOBAL, divided by chips for
+the ratio. The dominant term is the bottleneck; `useful` =
+MODEL_FLOPS / HLO_FLOPs catches remat/replication waste.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline [--dir experiments/dryrun]
+      [--json out.json] [--markdown out.md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12    # bf16 / chip
+HBM_BW = 819e9         # B/s / chip
+ICI_BW = 50e9          # B/s / link
+
+TERM_NAMES = ("compute", "memory", "collective")
+
+
+def cell_terms(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["chips"]
+    hlo = rec["hlo"]
+    kind = rec["model"]["kind"]
+    # per-device quantities (SPMD module shapes are shard-local)
+    flops_dev = hlo["dot_flops"]
+    traffic_dev = hlo["traffic_bytes"]
+    coll_dev = hlo["collective_bytes"]
+    cost_flops = rec["cost"].get("flops", 0.0)
+    cost_bytes = rec["cost"].get("bytes accessed", 0.0)
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = traffic_dev / HBM_BW
+    coll_s = coll_dev / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    n = rec["model"]["active_params"]
+    tokens = rec["tokens"]
+    mult = 6.0 if kind == "train" else 2.0
+    model_flops_global = mult * n * tokens
+    model_flops_dev = model_flops_global / chips
+    step_s = max(terms.values())
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "dominant": dominant,
+        "step_time_s": step_s,
+        "model_flops_global": model_flops_global,
+        "hlo_flops_dev": flops_dev,
+        "useful_flops_ratio": (model_flops_dev / flops_dev)
+        if flops_dev else 0.0,
+        "roofline_fraction": (model_flops_dev / PEAK_FLOPS) / step_s
+        if step_s else 0.0,
+        "mfu_bound": (model_flops_global / (chips * PEAK_FLOPS)) / step_s
+        if step_s else 0.0,
+        "cost_flops_dev_raw": cost_flops,
+        "cost_bytes_dev_raw": cost_bytes,
+        "collective_breakdown": hlo["collective_breakdown"],
+        "mem_gib_dev": rec["memory"]["per_device_total_bytes"] / 2 ** 30,
+        "fits_16g": rec["memory"]["per_device_total_bytes"] < 16 * 2 ** 30,
+    }
+
+
+def load_cells(d: Path) -> list[dict]:
+    out = []
+    for f in sorted(d.glob("*.json")):
+        rec = json.loads(f.read_text())
+        t = cell_terms(rec)
+        if t:
+            out.append(t)
+        elif rec.get("status") == "skip":
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "mesh": rec["mesh"], "skip": rec["reason"]})
+    return out
+
+
+def to_markdown(cells: list[dict]) -> str:
+    rows = ["| arch | shape | mesh | compute s | memory s | collective s |"
+            " dominant | MFU-bound | useful | GiB/dev | fits |",
+            "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        if "skip" in c:
+            rows.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+                        f"— | — | — | SKIP | — | — | — | — |")
+            continue
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+            f"| {c['compute_s']:.3e} | {c['memory_s']:.3e} "
+            f"| {c['collective_s']:.3e} | **{c['dominant']}** "
+            f"| {c['mfu_bound']:.2%} | {c['useful_flops_ratio']:.2f} "
+            f"| {c['mem_gib_dev']:.1f} "
+            f"| {'✓' if c['fits_16g'] else '✗'} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--json", default="experiments/roofline.json")
+    ap.add_argument("--markdown", default="experiments/roofline.md")
+    ap.add_argument("--mesh", default=None, choices=[None, "single",
+                                                     "multi"])
+    args = ap.parse_args()
+    cells = load_cells(Path(args.dir))
+    if args.mesh:
+        cells = [c for c in cells if c["mesh"] == args.mesh]
+    Path(args.json).parent.mkdir(parents=True, exist_ok=True)
+    Path(args.json).write_text(json.dumps(cells, indent=1))
+    md = to_markdown(cells)
+    Path(args.markdown).write_text(md + "\n")
+    print(md)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Assigned input-shape cells and ShapeDtypeStruct builders.
+
+Every (arch × shape) cell is defined here; ``input_specs`` returns
+allocation-free ShapeDtypeStruct stand-ins for the step function's inputs
+(the shannon/kernels pattern): weak-type-correct, shardable.
+
+``long_500k`` runs only for sub-quadratic archs (ssm / hybrid /
+mostly-sliding-window gemma3) — the skip list is data, not policy, so the
+dry-run driver and EXPERIMENTS.md table stay in sync with DESIGN.md
+§Arch-applicability."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, canonical, get_config
+from repro.models import make_decode_caches
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524_288, 1),
+}
+
+# archs with a sub-quadratic (or O(1)-state) long-context path
+LONG_CONTEXT_OK = {"falcon_mamba_7b", "jamba_1_5_large_398b", "gemma3_1b"}
+
+
+def cell_is_runnable(arch: str, shape: str) -> tuple[bool, str]:
+    arch = canonical(arch)
+    if shape == "long_500k" and arch not in LONG_CONTEXT_OK:
+        return False, ("pure full-attention arch: 500k context has no "
+                       "sub-quadratic path (DESIGN.md §Arch-applicability)")
+    return True, ""
+
+
+def all_cells():
+    for arch in ARCHS:
+        for shape in SHAPES:
+            yield arch, shape
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind == "train":
+        out = {"labels": _sds((b, s), jnp.int32)}
+        if cfg.stub_frontend:
+            out["embeddings"] = _sds((b, s, cfg.d_model), jnp.bfloat16)
+        else:
+            out["tokens"] = _sds((b, s), jnp.int32)
+        return out
+    if cell.kind == "prefill":
+        if cfg.stub_frontend:
+            return {"embeddings": _sds((b, s, cfg.d_model), jnp.bfloat16)}
+        return {"tokens": _sds((b, s), jnp.int32)}
+    # decode: one new token against a seq_len cache
+    return {"tokens": _sds((b, 1), jnp.int32)}
+
+
+def decode_state_specs(cfg: ModelConfig, cell: ShapeCell):
+    caches = jax.eval_shape(functools.partial(
+        make_decode_caches, cfg, cell.global_batch, cell.seq_len))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return caches, pos
+
+
+def input_specs(arch: str, shape: str) -> dict:
+    """Everything the cell's step function consumes, as SDS pytrees."""
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    out = {"batch": batch_specs(cfg, cell)}
+    if cell.kind == "decode":
+        caches, pos = decode_state_specs(cfg, cell)
+        out["caches"], out["pos"] = caches, pos
+    return out

@@ -1,0 +1,145 @@
+"""Step functions (train / prefill / decode) + their sharded jit builders.
+
+``build_*`` return (jitted_fn, example_inputs_SDS, in_shardings) ready for
+``.lower().compile()`` — used by both the dry-run driver and the real
+train/serve entrypoints."""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import (DecodeState, decode_step, init_params, loss_fn,
+                          param_specs, prefill)
+from repro.models import sharding as shd
+from repro.models.config import ModelConfig
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+
+from .shapes import SHAPES, batch_specs, decode_state_specs
+
+
+# ------------------------------------------------------------ step fns
+
+
+def _rules_ctx(mesh, cfg, kind):
+    """Activation pins are installed at TRACE time: the with-block inside
+    the step function executes while jit traces it."""
+    if mesh is None:
+        return contextlib.nullcontext()
+    return shd.activation_rules(
+        mesh, shd.default_activation_rules(mesh, cfg, kind))
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh | None = None,
+                    peak_lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10_000):
+    def train_step(params, opt, batch):
+        with _rules_ctx(mesh, cfg, "train"):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, cfg, batch), has_aux=True)(params)
+            lr = cosine_schedule(opt.step, peak_lr, warmup, total_steps)
+            new_p, new_opt, gnorm = adamw_update(params, grads, opt, lr=lr)
+        out = {"loss": loss, "ce": metrics["ce"], "aux": metrics["aux"],
+               "gnorm": gnorm, "lr": lr}
+        return new_p, new_opt, out
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh | None = None):
+    def prefill_step(params, batch):
+        with _rules_ctx(mesh, cfg, "prefill"):
+            return prefill(params, cfg, batch)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh | None = None):
+    def serve_decode(params, tokens, caches, pos):
+        with _rules_ctx(mesh, cfg, "decode"):
+            logits, st = decode_step(params, cfg, tokens,
+                                     DecodeState(caches=caches, pos=pos))
+        return logits, st.caches, st.pos
+
+    return serve_decode
+
+
+# --------------------------------------------------------- jit builders
+
+
+def _ns(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree)
+
+
+def optimizer_specs(cfg: ModelConfig, p_sds):
+    return jax.eval_shape(
+        functools.partial(adamw_init,
+                          moment_dtype=jnp.dtype(cfg.moment_dtype)), p_sds)
+
+
+def build_train(cfg: ModelConfig, mesh: Mesh, cell):
+    p_sds = param_specs(cfg)
+    o_sds = optimizer_specs(cfg, p_sds)
+    b_sds = batch_specs(cfg, cell)
+    p_sh = shd.param_shardings(mesh, cfg, p_sds)
+    o_sh = _opt_shardings(mesh, cfg, o_sds, p_sh)
+    b_sh = _ns(mesh, shd.batch_pspecs(mesh, b_sds))
+    fn = make_train_step(cfg, mesh)
+    jfn = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh),
+                  out_shardings=(p_sh, o_sh, None),
+                  donate_argnums=(0, 1))
+    return jfn, (p_sds, o_sds, b_sds)
+
+
+def _opt_shardings(mesh, cfg, o_sds, p_sh):
+    """Moments inherit parameter shardings; step scalar replicated."""
+    step_sh = NamedSharding(mesh, P())
+    return type(o_sds)(step=step_sh,
+                       m=jax.tree.map(lambda s, _: s, p_sh, o_sds.m),
+                       v=jax.tree.map(lambda s, _: s, p_sh, o_sds.v))
+
+
+def build_prefill(cfg: ModelConfig, mesh: Mesh, cell):
+    p_sds = param_specs(cfg)
+    b_sds = batch_specs(cfg, cell)
+    p_sh = shd.param_shardings(mesh, cfg, p_sds)
+    b_sh = _ns(mesh, shd.batch_pspecs(mesh, b_sds))
+    cache_sds = jax.eval_shape(
+        lambda p, b: make_prefill_step(cfg)(p, b)[1], p_sds, b_sds)
+    cache_sh = _ns(mesh, shd.cache_pspecs(mesh, cfg, cache_sds,
+                                          shard_seq="none"))
+    fn = make_prefill_step(cfg, mesh)
+    jfn = jax.jit(fn, in_shardings=(p_sh, b_sh),
+                  out_shardings=(None, cache_sh))
+    return jfn, (p_sds, b_sds)
+
+
+def build_decode(cfg: ModelConfig, mesh: Mesh, cell):
+    p_sds = param_specs(cfg)
+    b_sds = batch_specs(cfg, cell)
+    cache_sds, pos_sds = decode_state_specs(cfg, cell)
+    seq_mode = "all" if cell.global_batch == 1 else "model"
+    p_sh = shd.param_shardings(mesh, cfg, p_sds)
+    b_sh = _ns(mesh, shd.batch_pspecs(mesh, b_sds))
+    c_sh = _ns(mesh, shd.cache_pspecs(mesh, cfg, cache_sds,
+                                      shard_seq=seq_mode))
+    pos_sh = NamedSharding(mesh, P())
+    fn = make_decode_step(cfg, mesh)
+    jfn = jax.jit(fn, in_shardings=(p_sh, b_sh["tokens"], c_sh, pos_sh),
+                  out_shardings=(None, c_sh, pos_sh),
+                  donate_argnums=(2,))
+    return jfn, (p_sds, b_sds["tokens"], cache_sds, pos_sds)
+
+
+def build_cell(cfg: ModelConfig, mesh: Mesh, shape_name: str):
+    cell = SHAPES[shape_name]
+    if cell.kind == "train":
+        return build_train(cfg, mesh, cell)
+    if cell.kind == "prefill":
+        return build_prefill(cfg, mesh, cell)
+    return build_decode(cfg, mesh, cell)

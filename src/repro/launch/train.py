@@ -1,0 +1,95 @@
+"""End-to-end training driver with checkpoint/restart, watchdog retry and
+straggler accounting — runnable on this CPU container with a reduced config
+(examples/train_lm.py) and shaped for the production mesh on real hardware.
+
+Usage (CPU-scale):
+  PYTHONPATH=src python -m repro.launch.train --arch gemma3_1b --smoke \
+      --steps 30 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.configs import get_config, get_smoke_config
+from repro.data.tokens import synthetic_lm_batches
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import make_train_step
+from repro.models import init_params
+from repro.models.config import ModelConfig
+from repro.optim import adamw_init
+from repro.runtime import StepWatchdog, WatchdogConfig
+
+
+def train_loop(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
+               ckpt_dir: str | None = None, ckpt_every: int = 10,
+               seed: int = 0, mesh=None, log_every: int = 5,
+               resume: bool = True):
+    key = jax.random.PRNGKey(seed)
+    params = init_params(key, cfg)
+    opt = adamw_init(params, moment_dtype=jnp.dtype(cfg.moment_dtype))
+    start_step = 0
+    fingerprint = ckpt.config_fingerprint(cfg)
+    if ckpt_dir and resume and ckpt.latest_step(ckpt_dir) is not None:
+        (params, opt), start_step = ckpt.restore(
+            ckpt_dir, (params, opt), config_hash=fingerprint)
+        print(f"[train] resumed from step {start_step}")
+
+    step_fn = jax.jit(make_train_step(cfg, mesh))
+    watchdog = StepWatchdog(WatchdogConfig(min_deadline_s=60.0))
+    batches = synthetic_lm_batches(cfg, batch, seq, seed=seed,
+                                   start=start_step)
+    losses = []
+    t0 = time.perf_counter()
+    for step, data in zip(range(start_step, steps), batches):
+        def do_step(data=data):
+            nonlocal params, opt
+            params, opt, metrics = step_fn(params, opt, data)
+            return metrics
+
+        metrics = watchdog.run_step(step, do_step)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % log_every == 0 or step == steps - 1:
+            dt = time.perf_counter() - t0
+            print(f"[train] step {step:5d} loss {loss:8.4f} "
+                  f"gnorm {float(metrics['gnorm']):7.3f} "
+                  f"({dt / max(len(losses), 1):.2f}s/step)")
+        if ckpt_dir and (step + 1) % ckpt_every == 0:
+            ckpt.save(ckpt_dir, step + 1, (params, opt),
+                      config_hash=fingerprint)
+    if ckpt_dir:
+        ckpt.save(ckpt_dir, steps, (params, opt), config_hash=fingerprint)
+    return params, opt, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU-scale)")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    cfg = get_smoke_config(args.arch) if args.smoke \
+        else get_config(args.arch)
+    mesh = make_host_mesh()
+    with mesh:
+        _, _, losses = train_loop(cfg, steps=args.steps, batch=args.batch,
+                                  seq=args.seq, ckpt_dir=args.ckpt_dir,
+                                  seed=args.seed, mesh=mesh)
+    print(f"[train] first loss {losses[0]:.4f} → last {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

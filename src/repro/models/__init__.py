@@ -1,0 +1,8 @@
+from .config import ModelConfig, scaled_down
+from .model import (DecodeState, decode_cache_specs, decode_step,
+                    embed_inputs, init_params, loss_fn, make_decode_caches,
+                    param_specs, prefill)
+
+__all__ = ["ModelConfig", "scaled_down", "DecodeState", "decode_step",
+           "decode_cache_specs", "embed_inputs", "init_params", "loss_fn",
+           "make_decode_caches", "param_specs", "prefill"]

@@ -1,0 +1,194 @@
+"""Core transformer layers: RMSNorm, RoPE, GQA attention (chunked for long
+context, KV-cached for decode), gated/plain MLPs. Pure JAX; distribution
+comes from pjit sharding constraints (models/sharding.py)."""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .sharding import act
+
+# --------------------------------------------------------------- norms
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions i32[...]; returns (sin, cos) f32[..., head_dim/2]."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half) * 2.0 / head_dim))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., half]
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x [..., S, H, Dh]; sin/cos [..., S, half] broadcast over heads."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    s, c = sin[..., None, :], cos[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+# ----------------------------------------------------------- attention
+
+
+class AttnParams(NamedTuple):
+    wq: jax.Array            # [D, H, Dh]
+    wk: jax.Array            # [D, Hkv, Dh]
+    wv: jax.Array            # [D, Hkv, Dh]
+    wo: jax.Array            # [H, Dh, D]
+    bq: jax.Array | None = None
+    bk: jax.Array | None = None
+    bv: jax.Array | None = None
+
+
+def init_attn(key, cfg: ModelConfig, dtype) -> dict:
+    d, h, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    std = d ** -0.5
+    p = {
+        "wq": jax.random.normal(k1, (d, h, dh), dtype) * std,
+        "wk": jax.random.normal(k2, (d, hkv, dh), dtype) * std,
+        "wv": jax.random.normal(k3, (d, hkv, dh), dtype) * std,
+        "wo": jax.random.normal(k4, (h, dh, d), dtype) * std,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, dh), dtype)
+        p["bk"] = jnp.zeros((hkv, dh), dtype)
+        p["bv"] = jnp.zeros((hkv, dh), dtype)
+    return p
+
+
+def _qkv(p, cfg: ModelConfig, x, positions):
+    q = act(jnp.einsum("bsd,dhk->bshk", x, p["wq"]), "q_heads")
+    k = act(jnp.einsum("bsd,dhk->bshk", x, p["wk"]), "kv")
+    v = act(jnp.einsum("bsd,dhk->bshk", x, p["wv"]), "kv")
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    sin, cos = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+    return apply_rope(q, sin, cos), apply_rope(k, sin, cos), v
+
+
+def attention(p, cfg: ModelConfig, x, positions, window: int = 0):
+    """Self-attention over full sequences (train / prefill).
+
+    Causal; optional sliding window. Query-chunked (``attn_q_chunk``) so the
+    largest transient is [B, H, qc, S] — flash-style memory shape without a
+    custom kernel (XLA fuses the row-softmax into the QK product).
+    Returns (y, (k, v)) — k/v returned for prefill cache construction.
+    """
+    b, s, d = x.shape
+    q, k, v = _qkv(p, cfg, x, positions)
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    rep = h // hkv
+    scale = dh ** -0.5
+    qc = min(cfg.attn_q_chunk, s)
+    n_chunks = (s + qc - 1) // qc
+    assert s % qc == 0, f"seq {s} not divisible by q-chunk {qc}"
+    # REP-MAJOR head layout (H = r·hkv + g): the (r, g) → H merge after the
+    # chunk loop then carries the model-axis sharding on its OUTER
+    # component, which SPMD can express — minor-dim sharding forced an
+    # "involuntary full rematerialization" (replicated wo matmuls, +45%
+    # step FLOPs on llama3-405b train; see §Perf). Weight layouts are
+    # initialized in this convention (checkpoints would be permuted once
+    # at load).
+    qg = q.reshape(b, s, rep, hkv, dh)
+    kpos = positions
+
+    def one_chunk(i):
+        qi = jax.lax.dynamic_slice_in_dim(qg, i * qc, qc, axis=1)
+        qpos = jax.lax.dynamic_slice_in_dim(positions, i * qc, qc, axis=-1)
+        logits = jnp.einsum("bqrgk,bsgk->brgqs", qi, k) * scale
+        logits = act(logits.astype(jnp.float32), "attn_logits")
+        mask = qpos[..., :, None] >= kpos[..., None, :]  # causal [B, qc, S]
+        if window:
+            mask &= (qpos[..., :, None] - kpos[..., None, :]) < window
+        logits = jnp.where(mask[:, None, None], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        return act(jnp.einsum("brgqs,bsgk->bqrgk", w, v), "attn_out")
+
+    if n_chunks == 1:
+        o = one_chunk(0)
+    else:
+        # checkpoint each chunk: lax.map otherwise stacks every chunk's
+        # logits as backward residuals — the full S×S matrix we chunked to
+        # avoid (measured: 16 GiB/layer on the gemma3 train cell)
+        o = jax.lax.map(jax.checkpoint(one_chunk), jnp.arange(n_chunks))
+        o = jnp.moveaxis(o, 0, 1).reshape(b, s, rep, hkv, dh)
+    # bf16 output dtype on the TP-reduced projection → the partial-sum
+    # all-reduce ships bf16, not f32 (MXU still accumulates f32) — PERF#3
+    y = jnp.einsum("bshk,hkd->bsd", o.reshape(b, s, h, dh), p["wo"],
+                   preferred_element_type=x.dtype)
+    return y, (k, v)
+
+
+def decode_attention(p, cfg: ModelConfig, x, cache_k, cache_v, pos,
+                     window: int = 0):
+    """One-token decode against a KV cache.
+
+    x [B, 1, D]; cache_k/v [B, Smax, Hkv, Dh]; pos scalar i32 (current index).
+    Returns (y [B,1,D], new_cache_k, new_cache_v).
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _qkv(p, cfg, x, positions)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    rep = h // hkv
+    smax = cache_k.shape[1]
+    qg = q.reshape(b, 1, rep, hkv, dh)  # rep-major (see attention())
+    logits = jnp.einsum("bqrgk,bsgk->brgqs", qg, cache_k) * dh ** -0.5
+    # [B, r, g, 1, Smax] — the rule's trailing axis is the cache seq,
+    # sharded at decode (flash-decoding-style partition)
+    logits = act(logits.astype(jnp.float32), "attn_logits")
+    kpos = jnp.arange(smax)
+    mask = kpos <= pos
+    if window:
+        mask &= kpos > pos - window
+    logits = jnp.where(mask[None, None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    o = jnp.einsum("brgqs,bsgk->bqrgk", w, cache_v)
+    y = jnp.einsum("bshk,hkd->bsd", o.reshape(b, 1, h, dh), p["wo"])
+    return y, cache_k, cache_v
+
+
+# ----------------------------------------------------------------- MLP
+
+
+def init_mlp(key, cfg: ModelConfig, dtype, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    std = d ** -0.5
+    if cfg.mlp_variant == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"wi": jax.random.normal(k1, (d, f), dtype) * std,
+                "wg": jax.random.normal(k2, (d, f), dtype) * std,
+                "wo": jax.random.normal(k3, (f, d), dtype) * f ** -0.5}
+    k1, k2 = jax.random.split(key, 2)
+    return {"wi": jax.random.normal(k1, (d, f), dtype) * std,
+            "wo": jax.random.normal(k2, (f, d), dtype) * f ** -0.5}
+
+
+def mlp(p, cfg: ModelConfig, x):
+    if cfg.mlp_variant == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    else:
+        h = jax.nn.gelu(x @ p["wi"])
+    # bf16-out on the TP-reduced projection (see attention wo) — PERF#3
+    return jnp.einsum("bsf,fd->bsd", act(h, "ffn_inner"), p["wo"],
+                      preferred_element_type=x.dtype)

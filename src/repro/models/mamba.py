@@ -1,0 +1,138 @@
+"""Mamba-1 selective SSM block (falcon-mamba / jamba mixers).
+
+TPU adaptation: the CUDA "selective scan" kernel becomes a **chunked
+associative scan** — the sequence is cut into ``mamba_chunk`` pieces; inside
+a chunk the diagonal recurrence h_t = a_t·h_{t-1} + b_t runs as
+``lax.associative_scan`` (log-depth, VPU-friendly), and a tiny sequential
+``lax.scan`` carries the state across chunks. This bounds the live
+intermediate to [B, chunk, d_inner, d_state] instead of the full sequence —
+the same blocking idea the paper applies to episode state (fit the working
+set in fast memory, carry a small boundary state).
+
+Decode is O(1): one recurrence step on the carried state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .sharding import act
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> dict:
+    d, din, st = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    ks = jax.random.split(key, 7)
+    p = {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * din), dtype) * d ** -0.5,
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, din), dtype) * 0.2,
+        "conv_b": jnp.zeros((din,), dtype),
+        "x_proj": jax.random.normal(ks[2], (din, 2 * st + 1), dtype)
+        * din ** -0.5,
+        "dt_bias": jnp.zeros((din,), jnp.float32) + 0.5,
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, st + 1, dtype=jnp.float32), (din, st))),
+        "d_skip": jnp.ones((din,), jnp.float32),
+        "out_proj": jax.random.normal(ks[3], (din, d), dtype) * din ** -0.5,
+    }
+    return p
+
+
+def _ssm_inputs(p, cfg: ModelConfig, xz):
+    """Shared front: conv + projections. xz [B, L, 2*din] from in_proj.
+    Returns (x [B,L,din] post-conv/silu, z, delta, bmat, cmat)."""
+    din, st = cfg.d_inner, cfg.ssm_state
+    x, z = jnp.split(xz, 2, axis=-1)
+    # causal depthwise conv over L
+    pad = cfg.ssm_conv - 1
+    xp = jnp.pad(x, ((0, 0), (pad, 0), (0, 0)))
+    x = sum(xp[:, i: i + x.shape[1]] * p["conv_w"][i]
+            for i in range(cfg.ssm_conv)) + p["conv_b"]
+    x = jax.nn.silu(x)
+    proj = x @ p["x_proj"]                                   # [B, L, 2st+1]
+    dt = jax.nn.softplus(proj[..., 0:1].astype(jnp.float32)
+                         + p["dt_bias"])                     # [B, L, din]
+    bmat = proj[..., 1: 1 + st].astype(jnp.float32)          # [B, L, st]
+    cmat = proj[..., 1 + st:].astype(jnp.float32)            # [B, L, st]
+    return x, z, dt, bmat, cmat
+
+
+def _scan_chunked(a, b, h0, chunk: int):
+    """h_t = a_t * h_{t-1} + b_t over axis 1, chunked associative scan.
+    a/b [B, L, din, st]; h0 [B, din, st]. Returns (h_all [B,L,din,st], h_L).
+    """
+    bsz, l, din, st = a.shape
+    nc = l // chunk
+    assert l % chunk == 0, f"L={l} % chunk={chunk} != 0"
+    ar = a.reshape(bsz, nc, chunk, din, st)
+    br = b.reshape(bsz, nc, chunk, din, st)
+
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, ay * bx + by
+
+    def chunk_step(h, ab):
+        ac, bc = ab  # [B, chunk, din, st] (scanned over nc)
+        pa, pb = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_all = pa * h[:, None] + pb
+        return h_all[:, -1], h_all
+
+    hL, h_states = jax.lax.scan(chunk_step, h0,
+                                (jnp.moveaxis(ar, 1, 0),
+                                 jnp.moveaxis(br, 1, 0)))
+    h_states = jnp.moveaxis(h_states, 0, 1).reshape(bsz, l, din, st)
+    return h_states, hL
+
+
+def mamba_layer(p, cfg: ModelConfig, x_in, h0=None, conv_state=None):
+    """Full-sequence mixer. x_in [B, L, D] → (y [B, L, D], (h_L, conv_tail)).
+
+    The returned state makes prefill → decode handoff possible."""
+    bsz, l, _ = x_in.shape
+    din, st = cfg.d_inner, cfg.ssm_state
+    xz = x_in @ p["in_proj"]
+    x, z, dt, bmat, cmat = _ssm_inputs(p, cfg, xz)
+    a = -jnp.exp(p["a_log"])                                  # [din, st]
+    abar = act(jnp.exp(dt[..., None] * a), "mamba_state")     # [B,L,din,st]
+    bbar = act(dt[..., None] * bmat[..., None, :]
+               * x.astype(jnp.float32)[..., None], "mamba_state")
+    if h0 is None:
+        h0 = jnp.zeros((bsz, din, st), jnp.float32)
+    h_states, hL = _scan_chunked(abar, bbar, h0, min(cfg.mamba_chunk, l))
+    y = jnp.einsum("blds,bls->bld", h_states, cmat)
+    y = y + x.astype(jnp.float32) * p["d_skip"]
+    y = (y.astype(x_in.dtype)) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    conv_tail = xz[:, -(cfg.ssm_conv - 1):, :din] if cfg.ssm_conv > 1 \
+        else None
+    return out, (hL, conv_tail)
+
+
+def mamba_decode(p, cfg: ModelConfig, x_in, h, conv_state):
+    """One-token step. x_in [B, 1, D]; h [B, din, st];
+    conv_state [B, ssm_conv-1, din] (raw in_proj x history).
+    Returns (y [B,1,D], h', conv_state')."""
+    din, st = cfg.d_inner, cfg.ssm_state
+    xz = x_in @ p["in_proj"]                                  # [B, 1, 2din]
+    x_raw = xz[..., :din]
+    z = xz[..., din:]
+    window = jnp.concatenate([conv_state, x_raw], axis=1)     # [B, conv, din]
+    x = (window * p["conv_w"]).sum(axis=1, keepdims=True) + p["conv_b"]
+    x = jax.nn.silu(x)
+    proj = x @ p["x_proj"]
+    dt = jax.nn.softplus(proj[..., 0:1].astype(jnp.float32) + p["dt_bias"])
+    bmat = proj[..., 1: 1 + st].astype(jnp.float32)
+    cmat = proj[..., 1 + st:].astype(jnp.float32)
+    a = -jnp.exp(p["a_log"])
+    abar = jnp.exp(dt[:, 0, :, None] * a)                     # [B, din, st]
+    bbar = dt[:, 0, :, None] * bmat[:, 0, None, :] \
+        * x.astype(jnp.float32)[:, 0, :, None]
+    h = abar * h + bbar
+    y = jnp.einsum("bds,bs->bd", h, cmat[:, 0])[:, None, :]
+    y = y + x.astype(jnp.float32) * p["d_skip"]
+    y = y.astype(x_in.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    new_conv = jnp.concatenate([conv_state[:, 1:], x_raw], axis=1)
+    return out, h, new_conv

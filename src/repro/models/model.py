@@ -1,0 +1,167 @@
+"""Top-level LM: embeddings → block stack → norm → (chunked) logits/loss,
+plus prefill/decode entry points with explicit cache pytrees.
+
+[audio]/[vlm] archs use the stubbed frontend: the batch carries precomputed
+frame/patch embeddings [B, S, D] instead of token ids (backbone-only scope,
+per the assignment)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import rms_norm
+from .sharding import act
+from .transformer import apply_stack, init_stack
+
+AUX_LOSS_COEF = 0.01
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ------------------------------------------------------------------ init
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    ke, ks, kh = jax.random.split(key, 3)
+    dtype = _dtype(cfg)
+    p = {
+        "blocks": init_stack(ks, cfg, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "lm_head": jax.random.normal(
+            kh, (cfg.d_model, cfg.vocab_size), dtype) * cfg.d_model ** -0.5,
+    }
+    if not cfg.stub_frontend:
+        p["embed"] = jax.random.normal(
+            ke, (cfg.vocab_size, cfg.d_model), dtype)
+    else:  # frontend stub still needs an embed for decode-time token feeds
+        p["embed"] = jax.random.normal(
+            ke, (cfg.vocab_size, cfg.d_model), dtype)
+    return p
+
+
+def param_specs(cfg: ModelConfig) -> Any:
+    """ShapeDtypeStruct pytree of params — dry-run without allocation."""
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# ----------------------------------------------------------------- embed
+
+
+def embed_inputs(params, cfg: ModelConfig, batch) -> jax.Array:
+    if "embeddings" in batch:  # stubbed modality frontend
+        return act(batch["embeddings"].astype(_dtype(cfg)), "hidden")
+    return act(params["embed"][batch["tokens"]].astype(_dtype(cfg)),
+               "hidden")
+
+
+# ------------------------------------------------------------------ loss
+
+
+def chunked_ce_loss(h, lm_head, labels, chunk: int):
+    """Cross-entropy without materializing [B, S, V] logits: scan over
+    sequence chunks (memory hot-spot fix for 128k-vocab archs)."""
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+
+    @jax.checkpoint  # don't stack per-chunk logits as scan residuals
+    def chunk_loss(i):
+        hc = jax.lax.dynamic_slice_in_dim(h, i * chunk, chunk, axis=1)
+        yc = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, axis=1)
+        logits = act((hc @ lm_head).astype(jnp.float32),   # [B, c, V]
+                     "logits_chunk")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None],
+                                   axis=-1)[..., 0]
+        return jnp.sum(lse - gold)
+
+    def body(acc, i):
+        return acc + chunk_loss(i), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                            jnp.arange(nc))
+    return total / (b * s)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """Next-token CE (+ MoE aux). batch: tokens|embeddings, labels."""
+    x = embed_inputs(params, cfg, batch)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h, _, aux = apply_stack(params["blocks"], cfg, x, positions, "train")
+    h = rms_norm(h, params["final_norm"])
+    ce = chunked_ce_loss(h, params["lm_head"], batch["labels"],
+                         cfg.logits_chunk)
+    return ce + AUX_LOSS_COEF * aux, {"ce": ce, "aux": aux}
+
+
+# -------------------------------------------------------------- serving
+
+
+class DecodeState(NamedTuple):
+    caches: Any        # per-period-position stacked cache pytrees
+    pos: jax.Array     # scalar i32 — next write index
+
+
+def make_decode_caches(cfg: ModelConfig, batch_size: int, max_seq: int):
+    """Zero-initialized cache pytree (structure mirrors apply_stack ys)."""
+    dtype = _dtype(cfg)
+
+    def one(j, reps=None):
+        lead = (reps,) if reps is not None else ()
+        if cfg.layer_kind(j) == "attn":
+            shp = lead + (batch_size, max_seq, cfg.num_kv_heads,
+                          cfg.head_dim)
+            return (jnp.zeros(shp, dtype), jnp.zeros(shp, dtype))
+        h = jnp.zeros(lead + (batch_size, cfg.d_inner, cfg.ssm_state),
+                      jnp.float32)
+        conv = jnp.zeros(lead + (batch_size, cfg.ssm_conv - 1, cfg.d_inner),
+                         dtype)
+        return (h, conv)
+
+    return {"scan": [one(j, cfg.num_periods) for j in range(cfg.period)],
+            "tail": [one(j) for j in range(cfg.tail_layers)]}
+
+
+def decode_cache_specs(cfg: ModelConfig, batch_size: int, max_seq: int):
+    return jax.eval_shape(
+        functools.partial(make_decode_caches, cfg, batch_size, max_seq))
+
+
+def prefill(params, cfg: ModelConfig, batch):
+    """Forward over a full prompt; returns (last-position logits,
+    per-layer caches). Attention caches cover [0, S); decode continues at S.
+    """
+    x = embed_inputs(params, cfg, batch)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h, caches, _ = apply_stack(params["blocks"], cfg, x, positions,
+                               "prefill")
+    h = rms_norm(h, params["final_norm"])
+    logits = (h[:, -1:, :] @ params["lm_head"]).astype(jnp.float32)
+    return logits, caches
+
+
+def decode_step(params, cfg: ModelConfig, tokens, state: DecodeState):
+    """One serving step: tokens [B, 1] i32 → (logits [B, 1, V], new state).
+    For stub-frontend archs the decoded modality token still goes through
+    the (stub) embed table — backbone-only scope."""
+    x = params["embed"][tokens].astype(_dtype(cfg))
+    b = x.shape[0]
+    positions = jnp.full((b, 1), state.pos, jnp.int32)
+    h, new_caches, _ = apply_stack(params["blocks"], cfg, x, positions,
+                                   "decode", caches=state.caches,
+                                   pos=state.pos)
+    h = rms_norm(h, params["final_norm"])
+    logits = (h @ params["lm_head"]).astype(jnp.float32)
+    return logits, DecodeState(caches=new_caches, pos=state.pos + 1)

@@ -1,0 +1,106 @@
+"""Capacity-factor top-k MoE (GShard/Switch-style dense dispatch).
+
+Routing is expressed as one-hot dispatch/combine einsums so the layer is
+fully shardable under pjit: experts live on the ``model`` mesh axis, tokens
+on ``data``; XLA lowers the dispatch einsums to all-to-all-style collectives
+on the expert axis. Over-capacity tokens are dropped (standard
+capacity-factor semantics) — the combine weights of dropped tokens are zero
+so the residual stream passes them through.
+
+Shapes: tokens grouped per sequence (G=batch, S=seq); capacity
+C = ceil(S · top_k · cf / E). Transients are [G, S, E, C] one-hots —
+per-device this is modest after sharding but is the layer's memory hot spot
+(see EXPERIMENTS.md §Perf for the capacity/layout iteration).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import init_mlp, mlp
+from .sharding import act
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.d_ff
+    kr, ke, ks = jax.random.split(key, 3)
+    if cfg.mlp_variant == "swiglu":
+        k1, k2, k3 = jax.random.split(ke, 3)
+        experts = {
+            "wi": jax.random.normal(k1, (e, d, f), dtype) * d ** -0.5,
+            "wg": jax.random.normal(k2, (e, d, f), dtype) * d ** -0.5,
+            "wo": jax.random.normal(k3, (e, f, d), dtype) * f ** -0.5,
+        }
+    else:
+        k1, k2 = jax.random.split(ke, 2)
+        experts = {
+            "wi": jax.random.normal(k1, (e, d, f), dtype) * d ** -0.5,
+            "wo": jax.random.normal(k2, (e, f, d), dtype) * f ** -0.5,
+        }
+    p = {"router": jax.random.normal(kr, (d, e), jnp.float32) * d ** -0.5,
+         "experts": experts}
+    if cfg.d_ff_shared:
+        p["shared"] = init_mlp(ks, cfg, dtype, d_ff=cfg.d_ff_shared)
+    return p
+
+
+def capacity(cfg: ModelConfig, s: int) -> int:
+    c = int(s * cfg.top_k * cfg.capacity_factor / cfg.num_experts) + 1
+    return min(max(c, cfg.top_k), s)
+
+
+def moe_layer(p, cfg: ModelConfig, x):
+    """x [G, S, D] → [G, S, D]."""
+    g, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    c = capacity(cfg, s)
+    logits = (x.astype(jnp.float32) @ p["router"])  # [G, S, E]
+    gates = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(gates, k)                       # [G, S, K]
+    topv = topv / jnp.clip(topv.sum(-1, keepdims=True), 1e-9)  # renormalize
+    # position of each (token, k) within its expert's buffer
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.int32)          # [G, S, K, E]
+    pos = jnp.cumsum(onehot.reshape(g, s * k, e), axis=1)
+    pos = (pos.reshape(g, s, k, e) - 1) * onehot - (1 - onehot)
+    pos = pos.max(axis=-1)                                     # [G, S, K]
+    keep = (pos >= 0) & (pos < c)
+    # combine[g,s,e,c] = gate weight of token s in slot c of expert e.
+    # PERF#5: the [G,S,E,C] one-hots are the layer's dominant transient —
+    # build them in the model dtype (bf16 gate weights are plenty: they are
+    # renormalized probabilities), halving dispatch traffic/memory.
+    ohdtype = x.dtype
+    combine = jnp.einsum(
+        "gske,gskc->gsec",
+        jax.nn.one_hot(topi, e, dtype=ohdtype)
+        * (topv * keep)[..., None].astype(ohdtype),
+        jax.nn.one_hot(jnp.where(keep, pos, 0), c, dtype=ohdtype)
+        * keep[..., None].astype(ohdtype))
+    combine = act(combine, "moe_dispatch")
+    dispatch = (combine > 0.0)
+    xe = act(jnp.einsum("gsec,gsd->gecd", dispatch.astype(x.dtype), x),
+             "moe_inner")
+    h = _expert_ffn(p["experts"], cfg, xe)                     # [G, E, C, D]
+    h = act(h, "moe_inner")
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), h)
+    if cfg.d_ff_shared:
+        y = y + mlp(p["shared"], cfg, x)
+    return y, _aux_loss(gates, topi, e)
+
+
+def _expert_ffn(pe, cfg: ModelConfig, xe):
+    """xe [G, E, C, D] → [G, E, C, D] through per-expert FFNs."""
+    if cfg.mlp_variant == "swiglu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, pe["wg"])) \
+            * jnp.einsum("gecd,edf->gecf", xe, pe["wi"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", xe, pe["wi"]))
+    return jnp.einsum("gecf,efd->gecd", h, pe["wo"])
+
+
+def _aux_loss(gates, topi, e):
+    """Switch-style load-balancing auxiliary loss."""
+    me = gates.mean(axis=(0, 1))                                  # [E]
+    ce = jax.nn.one_hot(topi[..., 0], e).mean(axis=(0, 1))        # [E]
+    return e * jnp.sum(me * ce)

@@ -1,0 +1,278 @@
+"""Sharding policy: parameter PartitionSpecs + activation constraints.
+
+2-D sharding: parameters are FSDP-sharded over the data axes (``data``, and
+``pod`` when present) and tensor-parallel over ``model``. Activations keep
+batch on data axes and let XLA SPMD insert the TP collectives implied by the
+weight shardings. KV caches shard their *sequence* dim over ``model`` at
+decode (flash-decoding-style partition — XLA emits the partial-softmax
+combine collectives), and over (data×model) for the 500k single-sequence
+cell.
+
+Every rule guards divisibility — a dim that doesn't divide the axis product
+falls back to replication (e.g. kv-heads=8 on a 16-wide model axis).
+
+``act()`` is the activation-constraint shim: model code tags activations by
+name; the launcher installs a mesh-aware rule set; with none installed it is
+an identity (single-device tests)."""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .config import ModelConfig
+
+# ------------------------------------------------------- activation shim
+
+_TLS = threading.local()
+
+
+def act(x, name: str):
+    """Apply the installed activation constraint for ``name`` (or no-op).
+
+    The spec is sanitized against the concrete shape: axes that don't divide
+    their dim fall back to replicated, missing trailing dims are padded with
+    None — one rule serves every arch/cell combination.
+
+    An entry ``"model?"`` marks a *candidate* dim: exactly one of the
+    candidates — the first whose size divides the model axis — receives
+    "model". This lets e.g. attention logits [B, g, r, qc, S] shard over
+    kv-heads when they divide (llama r=16), else over q-groups, else over
+    the q-chunk dim (always 128-multiple) — GQA head counts vary per arch.
+    """
+    rules = getattr(_TLS, "rules", None)
+    mesh = getattr(_TLS, "mesh", None)
+    if not rules or name not in rules or mesh is None:
+        return x
+    spec = rules[name]
+    entries = list(spec) + [None] * (x.ndim - len(spec))
+    fixed = []
+    placed = False
+    for dim, axes in zip(x.shape, entries[: x.ndim]):
+        if axes == "model?":
+            if not placed and dim % axis_size(mesh, "model") == 0 \
+                    and dim > 0:
+                fixed.append("model")
+                placed = True
+            else:
+                fixed.append(None)
+            continue
+        if axes is not None and dim % axis_size(mesh, axes) != 0:
+            axes = None
+        fixed.append(axes)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))
+
+
+@contextlib.contextmanager
+def activation_rules(mesh, rules: dict):
+    old = (getattr(_TLS, "rules", None), getattr(_TLS, "mesh", None))
+    _TLS.rules, _TLS.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _TLS.rules, _TLS.mesh = old
+
+
+# ------------------------------------------------------------ mesh utils
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The data-parallel/FSDP axes: ('pod','data') on multi-pod meshes."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _maybe(mesh: Mesh, axes, dim: int):
+    """axes if dim divides their product else None (replicate)."""
+    return axes if dim % axis_size(mesh, axes) == 0 else None
+
+
+# ----------------------------------------------------------- param rules
+
+
+# Rules: leaf-path suffix → axis assignment for the TRAILING dims. Leading
+# dims (e.g. the stacked [num_periods] axis of scanned blocks — absent on
+# tail layers) are padded with None, so one rule serves both layouts.
+_TRAILING_RULES: list[tuple[tuple[str, ...], tuple]] = [
+    (("attn.wq", "attn.wk", "attn.wv"), ("DP", "TP", None)),
+    (("attn.wo",), ("TP", None, "DP")),
+    (("attn.bq", "attn.bk", "attn.bv"), ("TP", None)),
+    (("mlp.wi", "mlp.wg", "shared.wi", "shared.wg"), ("DP", "TP")),
+    (("mlp.wo", "shared.wo"), ("TP", "DP")),
+    (("experts.wi", "experts.wg"), ("TP", "DP", None)),
+    (("experts.wo",), ("TP", None, "DP")),
+    (("router",), ("DP", None)),
+    (("mamba.in_proj",), ("DP", "TP")),
+    (("mamba.out_proj",), ("TP", "DP")),
+    (("mamba.conv_w",), (None, "TP")),
+    (("mamba.conv_b", "mamba.dt_bias", "mamba.d_skip"), ("TP",)),
+    (("mamba.x_proj", "mamba.a_log"), ("TP", None)),
+]
+
+
+def _leaf_spec(mesh: Mesh, cfg: ModelConfig, path: str, shape) -> P:
+    dp = dp_axes(mesh)
+    nd = len(shape)
+
+    def m(axes, dim):  # shorthand with divisibility guard
+        if axes == "DP":
+            axes = dp
+        elif axes == "TP":
+            axes = "model"
+        return _maybe(mesh, axes, dim) if axes is not None else None
+
+    if path.endswith("embed"):
+        return P(m("TP", shape[0]), m("DP", shape[1]))
+    if path.endswith("lm_head"):
+        return P(m("DP", shape[0]), m("TP", shape[1]))
+    if "norm" in path or path.endswith(("ln1", "ln2")):
+        return P(*([None] * nd))
+    for suffixes, axes in _TRAILING_RULES:
+        if path.endswith(suffixes):
+            k = len(axes)
+            tail = [m(a, shape[nd - k + i]) for i, a in enumerate(axes)]
+            return P(*([None] * (nd - k) + tail))
+    return P(*([None] * nd))  # default: replicate
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return ".".join(parts)
+
+
+def param_pspecs(mesh: Mesh, cfg: ModelConfig, param_tree) -> Any:
+    """PartitionSpec tree matching ``param_tree`` (arrays or SDS)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(mesh, cfg, _path_str(path),
+                                      leaf.shape),
+        param_tree)
+
+
+def param_shardings(mesh: Mesh, cfg: ModelConfig, param_tree) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(mesh, cfg, param_tree))
+
+
+# ----------------------------------------------------------- batch rules
+
+
+def batch_pspecs(mesh: Mesh, batch_tree) -> Any:
+    """tokens/labels [B,S] and embeddings [B,S,D]: batch over dp axes
+    (replicated when B doesn't divide — the B=1 long-context cell)."""
+    dp = dp_axes(mesh)
+
+    def spec(leaf):
+        b = leaf.shape[0]
+        rest = [None] * (len(leaf.shape) - 1)
+        return P(_maybe(mesh, dp, b), *rest)
+
+    return jax.tree.map(spec, batch_tree)
+
+
+def cache_pspecs(mesh: Mesh, cfg: ModelConfig, cache_tree,
+                 shard_seq: str = "model") -> Any:
+    """Decode-cache specs. Attention KV [reps, B, Smax, Hkv, Dh]: batch→dp,
+    seq→``shard_seq`` ("model", "all" = data+model for B=1, or "none").
+    Mamba h [reps, B, din, st] / conv [reps, B, conv-1, din]: din→model."""
+    dp = dp_axes(mesh)
+    seq_axes = {"model": "model", "all": dp + ("model",),
+                "none": None}[shard_seq]
+
+    def spec(leaf):
+        shp = leaf.shape
+        nd = len(shp)
+        lead = [None] * (nd - 4)  # scanned caches carry [num_periods]
+        if nd >= 4 and shp[-1] == cfg.head_dim \
+                and shp[-2] == cfg.num_kv_heads:   # attn KV [.., B, S, H, Dh]
+            return P(*lead, _maybe(mesh, dp, shp[-4]),
+                     _maybe(mesh, seq_axes, shp[-3]),
+                     _maybe(mesh, "model", shp[-2]) if seq_axes is None
+                     else None, None)
+        lead = [None] * (nd - 3)
+        if nd >= 3 and shp[-1] == cfg.ssm_state:   # mamba h [.., B, din, st]
+            return P(*lead, _maybe(mesh, dp, shp[-3]),
+                     _maybe(mesh, "model", shp[-2]), None)
+        if nd >= 3 and shp[-1] == cfg.d_inner:     # conv tail [.., B, c-1, di]
+            return P(*lead, _maybe(mesh, dp, shp[-3]), None,
+                     _maybe(mesh, "model", shp[-1]))
+        return P(*([None] * nd))
+
+    return jax.tree.map(spec, cache_tree)
+
+
+def default_activation_rules(mesh: Mesh, cfg: ModelConfig,
+                             kind: str = "train") -> dict:
+    """Activation pins by tag. These are what keep XLA's SPMD propagation
+    honest inside scan/remat bodies (without them the partitioner replicates
+    whole-batch attention logits — measured: 60× FLOP/memory blow-up on the
+    gemma3 train cell)."""
+    dp = dp_axes(mesh)
+    if kind == "decode":
+        attn_logits = P(dp, None, None, None, "model")  # S = cache, sharded
+        hidden = P(dp, None, None)
+        q_heads = P(dp, None, None, None)  # model axis is spent on cache-S
+    else:
+        # PERF#1a: q/head-sharded attention logits — one "model?" candidate
+        # lands on kv-groups (llama r=16) or the q-chunk dim (always
+        # divisible) for awkward head counts (yi 56H, qwen 40H).
+        attn_logits = P(dp, "model?", "model?", "model?", None)
+        # PERF#1b: sequence-parallel residual stream (Megatron-SP): the
+        # scan-saved per-layer carry shards S over model → 16× less
+        # activation memory; XLA inserts all-gather at qkv / reduce-scatter
+        # after wo (collective cost measured in §Perf).
+        # PERF#4: NOT for ssm/hybrid families — mamba's chunked scan wants
+        # the full local sequence, and SP only added per-layer gathers
+        # (measured: falcon-mamba train 7.9% → 6.1% MFU-bound regression,
+        # reverted for those families).
+        sp = not (cfg.family in ("ssm", "hybrid") or cfg.attn_every)
+        hidden = P(dp, "model" if sp else None, None)
+        # PERF#2: q heads TP-sharded (the projection was otherwise computed
+        # replicated across the model axis: +16× qkv/wo FLOPs)
+        q_heads = P(dp, None, "model?", None)
+    return {
+        # [B, S, D] block boundaries / embeddings
+        "hidden": hidden,
+        # [B, r, g, qc, S] attention logits (rep-major head layout)
+        "attn_logits": attn_logits,
+        # [B, qc, r, g, Dh] per-chunk attention outputs — pin so the
+        # (r,g)→H merge stays expressible (or gathers, never replicates)
+        "attn_out": P(dp, None, "model?", "model?", None),
+        # [B, S, H, Dh] q projection (TP on heads when divisible)
+        "q_heads": q_heads,
+        # [B, S, Hkv, Dh] k/v projections (kv-head counts rarely divide TP;
+        # replicated-over-model is the cheap, correct default)
+        "kv": P(dp, None, None, None),
+        # [B, S, F] dense FFN inner
+        "ffn_inner": P(dp, None, "model"),
+        # [G, S, E, C] routing one-hots
+        "moe_dispatch": P(dp, None, "model", None),
+        # [G, E, C, D/F] expert compute
+        "moe_inner": P(dp, "model", None, None),
+        # [B, L, din, st] mamba scan elements/states
+        "mamba_state": P(dp, None, "model", None),
+        # [B, chunk, V] CE-loss logits
+        "logits_chunk": P(dp, None, "model"),
+    }

@@ -1,0 +1,174 @@
+"""Block stack: heterogeneous layers (attn/mamba × dense/MoE × local/global)
+arranged as a repeating period, scanned over periods with rematerialization.
+
+Scanning over periods (not layers) keeps the compiled HLO O(period) while
+supporting jamba's 1:7 attn:mamba interleave and gemma's 5:1 local:global
+pattern exactly. Per-position parameters/caches are pytrees stacked along a
+leading [num_periods] axis — `lax.scan` consumes them directly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (attention, decode_attention, init_attn, init_mlp, mlp,
+                     rms_norm)
+from .mamba import init_mamba, mamba_decode, mamba_layer
+from .moe import init_moe, moe_layer
+from .sharding import act
+
+
+# ------------------------------------------------------------------ init
+
+
+def init_block(key, cfg: ModelConfig, i: int, dtype) -> dict:
+    """Parameters for layer i (structure depends only on i % period)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: dict[str, Any] = {"ln1": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if cfg.layer_kind(i) == "attn":
+        p["attn"] = init_attn(k1, cfg, dtype)
+    else:
+        p["mamba"] = init_mamba(k1, cfg, dtype)
+    if cfg.family != "ssm":
+        p["ln2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        if cfg.is_moe_layer(i):
+            p["moe"] = init_moe(k2, cfg, dtype)
+        else:
+            p["mlp"] = init_mlp(k2, cfg, dtype)
+    return p
+
+
+def init_stack(key, cfg: ModelConfig, dtype) -> dict:
+    """{"scan": per-period-position params stacked over num_periods,
+    "tail": unstacked params for the remainder layers}."""
+    period, reps, tail = cfg.period, cfg.num_periods, cfg.tail_layers
+    kscan, ktail = jax.random.split(key)
+    out = []
+    keys = jax.random.split(kscan, period * reps).reshape(period, reps, 2)
+    for j in range(period):
+        per_rep = [init_block(keys[j, r], cfg, j, dtype)
+                   for r in range(reps)]
+        out.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep))
+    tkeys = jax.random.split(ktail, max(tail, 1))
+    tail_params = [init_block(tkeys[j], cfg, j, dtype) for j in range(tail)]
+    return {"scan": out, "tail": tail_params}
+
+
+# ----------------------------------------------------------------- apply
+
+
+def apply_block(p, cfg: ModelConfig, i: int, x, positions,
+                mode: str, cache=None, pos=None):
+    """One layer. mode: "train" | "prefill" | "decode".
+    Returns (x, new_cache_or_None, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    x = act(x, "hidden")
+    h = rms_norm(x, p["ln1"])
+    kind = cfg.layer_kind(i)
+    window = 0 if cfg.is_global_attn(i) else cfg.window
+    if kind == "attn":
+        if mode == "decode":
+            y, ck, cv = decode_attention(p["attn"], cfg, h, cache[0],
+                                         cache[1], pos, window=window)
+            new_cache = (ck, cv)
+        else:
+            y, (k, v) = attention(p["attn"], cfg, h, positions,
+                                  window=window)
+            new_cache = (k, v) if mode == "prefill" else None
+    else:
+        if mode == "decode":
+            y, hs, conv = mamba_decode(p["mamba"], cfg, h, cache[0],
+                                       cache[1])
+            new_cache = (hs, conv)
+        else:
+            y, (hs, conv) = mamba_layer(p["mamba"], cfg, h)
+            new_cache = (hs, conv) if mode == "prefill" else None
+    # pin mixer/MLP outputs to the residual sharding BEFORE the add (helps
+    # SPMD place the TP partial-sum reduction next to the slice); decode
+    # defers the reduction instead (PERF#4: the early pin cost ~0.3 ms on
+    # the O(1)-state long_500k cells)
+    pin = (lambda t: t) if mode == "decode" else (lambda t: act(t, "hidden"))
+    x = x + pin(y)
+    if cfg.family != "ssm":
+        h2 = rms_norm(x, p["ln2"])
+        if cfg.is_moe_layer(i):
+            y2, aux = moe_layer(p["moe"], cfg, h2)
+        else:
+            y2 = mlp(p["mlp"], cfg, h2)
+        x = x + pin(y2)
+    return act(x, "hidden"), new_cache, aux
+
+
+def apply_stack(stack, cfg: ModelConfig, x, positions, mode: str,
+                caches=None, pos=None):
+    """Scan the full periods, then apply the tail layers unstacked.
+    caches: {"scan": per-position stacked pytrees, "tail": per-layer list}.
+    Returns (x, new_caches_or_None, total_aux)."""
+    scan_params, tail_params = stack["scan"], stack["tail"]
+    scan_caches = caches["scan"] if caches is not None else None
+    tail_caches = caches["tail"] if caches is not None else None
+
+    def one_block(params_j, j, xc, cache_j):
+        return apply_block(params_j, cfg, j, xc, positions, mode,
+                           cache=cache_j, pos=pos)
+
+    if cfg.remat:
+        # per-block remat INSIDE the period scan: the period backward then
+        # keeps at most one block's internals live (a period can hold 8
+        # heterogeneous layers — jamba), while the scan saves only the
+        # period-boundary carry.
+        one_block = jax.checkpoint(
+            one_block, policy=jax.checkpoint_policies.nothing_saveable,
+            static_argnums=(1,))
+
+    def period_body(carry, xs):
+        xc, auxc = carry
+        params_j, caches_j = xs
+        new_caches_j = []
+        for j in range(cfg.period):
+            cj = caches_j[j] if caches_j is not None else None
+            xc, nc, aux = one_block(params_j[j], j, xc, cj)
+            new_caches_j.append(nc)
+            auxc = auxc + aux
+        ys = new_caches_j if mode != "train" else None
+        return (xc, auxc), ys
+
+    body = period_body
+    aux0 = jnp.zeros((), jnp.float32)
+    if cfg.num_periods > 0 and cfg.scan_layers:
+        (x, aux), ys = jax.lax.scan(body, (x, aux0),
+                                    (scan_params, scan_caches))
+    elif cfg.num_periods > 0:
+        aux = aux0
+        ys_list = []
+        for r in range(cfg.num_periods):
+            params_r = jax.tree.map(lambda a: a[r], scan_params)
+            caches_r = jax.tree.map(lambda a: a[r], scan_caches) \
+                if scan_caches is not None else None
+            (x, aux), ys_r = body((x, aux), (params_r, caches_r))
+            ys_list.append(ys_r)
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys_list) \
+            if ys_list and ys_list[0] is not None else None
+    else:
+        aux, ys = aux0, None
+
+    # ---- tail layers (remainder of an incomplete final period)
+    new_tail = []
+    for j, pj in enumerate(tail_params):
+        cj = tail_caches[j] if tail_caches is not None else None
+        blk = functools.partial(apply_block, pj, cfg, j, mode=mode, pos=pos)
+        if cfg.remat:
+            blk = jax.checkpoint(
+                blk, policy=jax.checkpoint_policies.nothing_saveable,
+                static_argnums=())
+        x, nc, auxj = blk(x, positions, cache=cj)
+        aux = aux + auxj
+        new_tail.append(nc)
+    if mode == "train":
+        return x, None, aux
+    return x, {"scan": ys, "tail": new_tail}, aux

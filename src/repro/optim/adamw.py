@@ -1,0 +1,59 @@
+"""Sharded AdamW. Moments inherit each parameter's sharding (specs are
+shape-preserving pytrees), so FSDP keeps optimizer state fully sharded.
+``moment_dtype`` lets the XXL configs halve optimizer memory (documented in
+the per-arch configs)."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array   # i32 scalar
+    m: Any            # pytree like params
+    v: Any
+
+
+def adamw_init(params, moment_dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def adamw_update(params, grads, state: AdamWState, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, max_grad_norm: float = 1.0):
+    """Returns (new_params, new_state, grad_norm)."""
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mn = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        vn = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        u = (mn / c1) / (jnp.sqrt(vn / c2) + eps)
+        pn = p.astype(jnp.float32) * (1.0 - lr * weight_decay) - lr * u
+        return pn.astype(p.dtype), mn.astype(m.dtype), vn.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_p = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, AdamWState(step, new_m, new_v), gnorm

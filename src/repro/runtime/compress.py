@@ -1,0 +1,61 @@
+"""Error-feedback int8 gradient compression for the cross-pod all-reduce.
+
+The ``pod`` axis crosses the slow inter-pod links; compressing the gradient
+all-reduce there is the classic distributed-optimization trick (1-bit
+Adam / error-feedback SGD lineage). We use per-tensor-scaled int8 with an
+error-feedback residual so compression noise is unbiased over time:
+
+    q = round(g / s);  residual' = g - q·s;  allreduce(q)·s / n_pods
+
+``compressed_psum_ef`` is written for shard_map over the pod axis; the
+compression wrapper is exercised numerically in tests (error feedback →
+convergence-preserving) and its collective-bytes saving shows up in the
+§Perf log of the multi-pod train cells."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g, scale=None):
+    """g → (int8 q, f32 scale). Symmetric per-tensor scaling."""
+    amax = jnp.max(jnp.abs(g)) if scale is None else scale
+    s = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / s), -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def dequantize(q, s):
+    return q.astype(jnp.float32) * s
+
+
+def compressed_psum_ef(grads: Any, residual: Any, axis_name: str):
+    """Error-feedback int8 psum over ``axis_name`` (inside shard_map).
+
+    Scale agreement FIRST (pmax of local amax — per-device scales cannot be
+    summed), then quantize, int8-wire psum, dequantize once. The residual
+    carries each device's quantization error into the next step, making the
+    compression noise unbiased over time. Returns (sum_tree, residual')."""
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        amax = jax.lax.pmax(jnp.max(jnp.abs(gf)), axis_name)
+        s = jnp.maximum(amax, 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / s), -127, 127).astype(jnp.int8)
+        new_r = gf - q.astype(jnp.float32) * s
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        return total.astype(jnp.float32) * s, new_r
+
+    flat = jax.tree.map(one, grads, residual,
+                        is_leaf=lambda x: hasattr(x, "dtype"))
+    out = jax.tree.map(lambda t: t[0], flat,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    r = jax.tree.map(lambda t: t[1], flat,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    return out, r
+
+
+def zero_residual(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)

@@ -1,0 +1,49 @@
+"""Model-telemetry → event-stream bridge (the chip-on-chip integration).
+
+The paper's loop is: one chip (MEA) emits spike events, another mines them
+in real time. A training/serving pod is itself a spiking system: MoE
+routers fire discrete (layer, expert) events per token. This module turns
+those routing decisions into ``EventStream``s in the miner's tick domain,
+so the SAME two-pass engine that mines cortical cultures mines expert
+co-activation cascades ("which expert sequences fire together, in order,
+within k tokens") — used by examples/chip_on_chip.py.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.events import EventStream
+
+
+def routing_events(topk_indices: np.ndarray, num_experts: int,
+                   layers: list[int] | None = None,
+                   ticks_per_token: int = 1) -> EventStream:
+    """Encode expert-routing decisions as an event stream.
+
+    Args:
+      topk_indices: i32[L, T, K] — per layer, per token, the top-k expert
+        ids chosen by the router (batch already flattened into T).
+      num_experts: router width E.
+      layers: which layers to encode (default: all).
+      ticks_per_token: time distance between consecutive tokens.
+
+    Event alphabet: type = layer_pos * E + expert_id; time = token index.
+    Simultaneous events (same token, k experts, several layers) are exactly
+    the tie case the engine's inclusive-lower A2 handles (DESIGN.md §2).
+    """
+    l, t, k = topk_indices.shape
+    layers = list(range(l)) if layers is None else layers
+    pairs = []
+    for li, layer in enumerate(layers):
+        for tok in range(t):
+            for j in range(k):
+                e = int(topk_indices[layer, tok, j])
+                pairs.append((li * num_experts + e,
+                              (tok + 1) * ticks_per_token))
+    return EventStream.from_pairs(pairs, num_types=len(layers) * num_experts)
+
+
+def decode_expert_episode(etype: int, num_experts: int) -> tuple[int, int]:
+    """type → (layer_pos, expert_id)."""
+    return etype // num_experts, etype % num_experts

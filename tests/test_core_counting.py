@@ -1,0 +1,164 @@
+"""Counting-engine correctness: vectorized == sequential oracles, exactly."""
+
+import numpy as np
+import pytest
+
+from repro.core import (EpisodeBatch, EventStream, count_a1, count_a2,
+                        count_a1_vectorized, count_single_slot,
+                        count_a1_sequential, count_a2_sequential,
+                        count_occurrences_naive, mapconcatenate)
+from repro.data import embedded_chain_stream, random_stream
+
+
+def _random_batch(rng, m, n, num_types, tmax_iv=12):
+    et = rng.integers(0, num_types, size=(m, n)).astype(np.int32)
+    tlo = rng.integers(0, tmax_iv // 2, size=(m, n - 1)).astype(np.int32)
+    thi = (tlo + rng.integers(1, tmax_iv, size=(m, n - 1))).astype(np.int32)
+    return EpisodeBatch(et, tlo, thi)
+
+
+# ------------------------------------------------------------- paper figure 2
+
+
+def test_paper_fig2_example():
+    """The worked example of §2: exactly one occurrence of
+    A --(5,10]--> B --(10,15]--> C in the Fig. 2 stream."""
+    # Fig.2-like stream: A@1 B@2 A@5 C@10 B@12 A@13 C@25 B@30 C@35 ...
+    types = [0, 1, 0, 2, 1, 0, 2, 1, 2]
+    times = [1, 2, 5, 10, 12, 13, 25, 30, 35]
+    st = EventStream(np.int32(types), np.int32(times), 3)
+    ep = EpisodeBatch.single([0, 1, 2], [5, 10], [10, 15])
+    # A@5 → B@12 (Δ=7∈(5,10]) → C@25 (Δ=13∈(10,15]) : one occurrence
+    assert count_a1_sequential(st, ep)[0] == 1
+    assert count_a1(st, ep, use_kernel=False)[0] == 1
+
+
+def test_nonoverlap_semantics():
+    """Fig. 2 of the paper: 8 total occurrences of A→B but only 2
+    non-overlapped (with loose constraints covering all of them)."""
+    # A A B A B A B B  — the classic example shape
+    types = [0, 0, 1, 0, 1, 0, 1, 1]
+    times = [1, 2, 3, 4, 5, 6, 7, 8]
+    st = EventStream(np.int32(types), np.int32(times), 2)
+    ep = EpisodeBatch.single([0, 1], [0], [100])
+    c = count_a1_sequential(st, ep)[0]
+    # greedy non-overlap: A@1→B@3, A@4→B@5, A@6→B@7 = 3 non-overlapped
+    assert c == 3
+    assert count_a1(st, ep, use_kernel=False)[0] == c
+
+
+# ------------------------------------------------- vectorized == sequential
+
+
+@pytest.mark.parametrize("n", [2, 3, 4, 5])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_a2_vectorized_equals_oracle(n, seed):
+    rng = np.random.default_rng(seed)
+    st = random_stream(6, 400, 600, seed=seed)
+    eps = _random_batch(rng, 37, n, 6).relaxed()
+    want = count_a2_sequential(st, eps)  # inclusive-lower strengthening
+    got = count_single_slot(st, eps, inclusive_lower=True)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_a2_matches_paper_algorithm3_on_tiefree_streams(seed):
+    """On strictly-increasing timestamps our strengthened A2 IS the paper's
+    literal Algorithm 3."""
+    rng = np.random.default_rng(seed)
+    times = np.cumsum(rng.integers(1, 5, size=300)).astype(np.int32)
+    types = rng.integers(0, 6, size=300).astype(np.int32)
+    st = EventStream(types, times, 6)
+    eps = _random_batch(rng, 23, 3, 6).relaxed()
+    paper = count_a2_sequential(st, eps, inclusive_lower=False)
+    ours = count_a2_sequential(st, eps, inclusive_lower=True)
+    vec = count_single_slot(st, eps, inclusive_lower=True)
+    np.testing.assert_array_equal(paper, ours)
+    np.testing.assert_array_equal(vec, ours)
+
+
+@pytest.mark.parametrize("n", [2, 3, 4, 5])
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_a1_vectorized_equals_oracle(n, seed):
+    rng = np.random.default_rng(100 + seed)
+    st = random_stream(5, 400, 500, seed=seed)  # dense stream stresses lists
+    eps = _random_batch(rng, 29, n, 5)
+    want = count_a1_sequential(st, eps)
+    got = count_a1(st, eps, use_kernel=False)  # includes overflow fallback
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("lcap", [1, 2, 8])
+def test_a1_lcap_overflow_fallback_restores_exactness(lcap):
+    """Tiny list capacities must still give exact results via the
+    live-eviction flag → sequential recount path."""
+    rng = np.random.default_rng(7)
+    st = random_stream(3, 500, 400, seed=9)  # very dense: many evictions
+    eps = _random_batch(rng, 17, 3, 3)
+    want = count_a1_sequential(st, eps)
+    got = count_a1(st, eps, lcap=lcap, use_kernel=False)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_a1_agrees_with_naive_earliest_completion():
+    """Cross-check Algorithm 1 against an independent greedy searcher on
+    small streams with distinct timestamps."""
+    rng = np.random.default_rng(3)
+    times = np.cumsum(rng.integers(1, 4, size=60)).astype(np.int32)
+    types = rng.integers(0, 3, size=60).astype(np.int32)
+    st = EventStream(types, times, 3)
+    eps = _random_batch(rng, 11, 3, 3)
+    a1 = count_a1_sequential(st, eps)
+    naive = count_occurrences_naive(st, eps)
+    np.testing.assert_array_equal(a1, naive)
+
+
+# ---------------------------------------------------------- Theorem 5.1
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_theorem_5_1_a2_upper_bounds_a1(seed):
+    rng = np.random.default_rng(seed)
+    st = random_stream(8, 300, 900, seed=seed)
+    eps = _random_batch(rng, 50, 4, 8)
+    a1 = count_a1_sequential(st, eps)
+    a2 = count_a2(st, eps, use_kernel=False)
+    assert (a2 >= a1).all(), (a1, a2)
+
+
+# ---------------------------------------------------------- MapConcatenate
+
+
+@pytest.mark.parametrize("num_segments", [2, 4, 8])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_mapconcatenate_equals_oracle(num_segments, seed):
+    rng = np.random.default_rng(40 + seed)
+    st = random_stream(6, 600, 3000, seed=seed)
+    eps = _random_batch(rng, 13, 3, 6)
+    want = count_a1_sequential(st, eps)
+    got = mapconcatenate(st, eps, num_segments=num_segments)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_mapconcatenate_embedded_chain():
+    st = embedded_chain_stream(10, [2, 5, 7], (5, 10), num_occurrences=50,
+                               noise_events=2000, t_max=60_000, seed=11)
+    ep = EpisodeBatch.single([2, 5, 7], [5, 5], [10, 10])
+    want = count_a1_sequential(st, ep)
+    got = mapconcatenate(st, ep, num_segments=8)
+    np.testing.assert_array_equal(got, want)
+    assert got[0] >= 50  # all planted occurrences found
+
+
+# ----------------------------------------------------------------- padding
+
+
+def test_padding_is_neutral():
+    st = random_stream(4, 100, 200, seed=5)
+    padded = st.padded_to(160)
+    rng = np.random.default_rng(2)
+    eps = _random_batch(rng, 9, 3, 4)
+    np.testing.assert_array_equal(count_a1(padded, eps, use_kernel=False),
+                                  count_a1(st, eps, use_kernel=False))
+    np.testing.assert_array_equal(count_a2(padded, eps, use_kernel=False),
+                                  count_a2(st, eps, use_kernel=False))

@@ -1,0 +1,82 @@
+"""Property-based tests (hypothesis) for the mining engine's invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (EpisodeBatch, EventStream, count_a1, count_a2,
+                        count_a1_sequential, count_a2_sequential,
+                        count_single_slot, mapconcatenate)
+
+
+@st.composite
+def stream_and_episode(draw, max_events=120, num_types=4, max_n=4):
+    n_ev = draw(st.integers(4, max_events))
+    gaps = draw(st.lists(st.integers(0, 6), min_size=n_ev, max_size=n_ev))
+    times = np.cumsum(np.array(gaps, np.int64)).astype(np.int32) + 1
+    types = np.array(
+        draw(st.lists(st.integers(0, num_types - 1), min_size=n_ev,
+                      max_size=n_ev)), np.int32)
+    stream = EventStream(types, times, num_types)
+    n = draw(st.integers(2, max_n))
+    et = np.array(draw(st.lists(st.integers(0, num_types - 1), min_size=n,
+                                max_size=n)), np.int32)
+    tlo = np.array(draw(st.lists(st.integers(0, 5), min_size=n - 1,
+                                 max_size=n - 1)), np.int32)
+    width = np.array(draw(st.lists(st.integers(1, 8), min_size=n - 1,
+                                   max_size=n - 1)), np.int32)
+    eps = EpisodeBatch(et[None], tlo[None], (tlo + width)[None])
+    return stream, eps
+
+
+@settings(max_examples=150, deadline=None)
+@given(stream_and_episode())
+def test_vectorized_a1_equals_oracle(se):
+    stream, eps = se
+    want = count_a1_sequential(stream, eps)
+    got = count_a1(stream, eps, use_kernel=False)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=150, deadline=None)
+@given(stream_and_episode())
+def test_vectorized_a2_equals_oracle(se):
+    stream, eps = se
+    want = count_a2_sequential(stream, eps.relaxed())
+    got = count_single_slot(stream, eps.relaxed(), inclusive_lower=True)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=150, deadline=None)
+@given(stream_and_episode())
+def test_theorem_5_1_unconditional(se):
+    """count(A2, α') >= count(A1, α) — with the inclusive-lower
+    strengthening this must hold on EVERY stream, ties included."""
+    stream, eps = se
+    a1 = count_a1_sequential(stream, eps)
+    a2 = count_a2(stream, eps, use_kernel=False)
+    assert (a2 >= a1).all()
+
+
+@settings(max_examples=60, deadline=None)
+@given(stream_and_episode(max_events=200), st.integers(1, 3))
+def test_mapconcatenate_segment_invariance(se, log_p):
+    """Counts are invariant to the number of segments (and equal to the
+    single-machine oracle) — the MapConcatenate correctness property."""
+    stream, eps = se
+    want = count_a1_sequential(stream, eps)
+    got = mapconcatenate(stream, eps, num_segments=2 ** log_p)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=80, deadline=None)
+@given(stream_and_episode(), st.integers(0, 50))
+def test_count_monotone_in_prefix(se, cut):
+    """Counting is monotone under stream extension: a prefix of the stream
+    never yields MORE occurrences (non-overlap counts only complete)."""
+    stream, eps = se
+    k = max(2, len(stream.types) - cut)
+    prefix = EventStream(stream.types[:k], stream.times[:k],
+                         stream.num_types)
+    a = count_a1_sequential(prefix, eps)
+    b = count_a1_sequential(stream, eps)
+    assert (b >= a).all()

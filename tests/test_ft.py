@@ -1,0 +1,129 @@
+"""Fault-tolerance substrate tests: checkpoint atomicity/restart, watchdog
+retry, straggler detection, elastic re-mesh planning."""
+
+import json
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.runtime import (StepFailure, StepWatchdog, WatchdogConfig,
+                           plan_elastic_mesh, ElasticRuntime)
+
+
+@pytest.fixture
+def tree():
+    return {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "opt": [np.ones(3, np.int32), np.zeros((2, 2), np.float32)]}
+
+
+def test_checkpoint_roundtrip(tmp_path, tree):
+    ckpt.save(tmp_path, 7, tree, config_hash="abc")
+    out, step = ckpt.restore(tmp_path, tree, config_hash="abc")
+    assert step == 7
+    np.testing.assert_array_equal(out["w"], tree["w"])
+    np.testing.assert_array_equal(out["opt"][1], tree["opt"][1])
+
+
+def test_restore_skips_torn_checkpoint(tmp_path, tree):
+    ckpt.save(tmp_path, 5, tree)
+    ckpt.save(tmp_path, 10, tree)
+    # simulate a crash mid-write of step 15: manifest missing
+    torn = tmp_path / "step_00000015"
+    torn.mkdir()
+    (torn / "w.p0.npy").write_bytes(b"garbage")
+    assert ckpt.latest_step(tmp_path) == 10
+    _, step = ckpt.restore(tmp_path, tree)
+    assert step == 10
+
+
+def test_restore_refuses_config_mismatch(tmp_path, tree):
+    ckpt.save(tmp_path, 3, tree, config_hash="modelA")
+    with pytest.raises(ValueError, match="config hash"):
+        ckpt.restore(tmp_path, tree, config_hash="modelB")
+
+
+def test_atomic_tmp_never_visible(tmp_path, tree):
+    ckpt.save(tmp_path, 1, tree)
+    leftover = tmp_path / "step_00000002.tmp"
+    leftover.mkdir()
+    (leftover / "MANIFEST.json").write_text("{}")
+    assert ckpt.latest_step(tmp_path) == 1  # .tmp dirs are never counted
+
+
+def test_watchdog_retries_then_succeeds():
+    wd = StepWatchdog(WatchdogConfig(max_retries=3))
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    assert wd.run_step(0, flaky) == "ok"
+    assert wd.retries == 2
+
+
+def test_watchdog_gives_up():
+    wd = StepWatchdog(WatchdogConfig(max_retries=2))
+    with pytest.raises(StepFailure):
+        wd.run_step(0, lambda: (_ for _ in ()).throw(RuntimeError("x")))
+
+
+def test_watchdog_flags_stragglers():
+    clock = {"t": 0.0}
+
+    def fake_clock():
+        return clock["t"]
+
+    wd = StepWatchdog(WatchdogConfig(window=50, deadline_factor=2.0,
+                                     min_deadline_s=0.5), clock=fake_clock)
+    for i in range(20):  # steady 0.1 s steps
+        wd.run_step(i, lambda: clock.__setitem__("t", clock["t"] + 0.1))
+    wd.run_step(99, lambda: clock.__setitem__("t", clock["t"] + 5.0))
+    assert 99 in wd.straggler_steps
+    assert all(i not in wd.straggler_steps for i in range(20))
+
+
+def test_elastic_mesh_plan_shrinks_to_usable_shape():
+    shape, axes = plan_elastic_mesh(256, model_parallel=16)
+    assert shape == (16, 16) and axes == ("data", "model")
+    # lose 3 devices → largest power-of-two data extent with TP intact
+    shape, axes = plan_elastic_mesh(253, model_parallel=16)
+    assert shape[0] * shape[1] <= 253 and shape[1] == 16
+    assert shape[0] & (shape[0] - 1) == 0  # power of two
+
+
+def test_elastic_runtime_remesh_on_failure():
+    live = {"devices": list(range(256))}
+    rt = ElasticRuntime(lambda: live["devices"], model_parallel=16)
+    changed, _ = rt.maybe_remesh()
+    assert not changed
+    live["devices"] = list(range(240))  # a host of 16 devices died
+    changed, state = rt.maybe_remesh()
+    assert changed and state.generation == 1
+    assert state.mesh_shape[0][1] == 16  # TP preserved
+
+
+def test_train_loop_resumes_from_checkpoint(tmp_path):
+    """End-to-end: run 6 steps, 'crash', re-launch, verify continuation."""
+    import dataclasses
+    from repro.configs import get_smoke_config
+    from repro.launch.train import train_loop
+
+    cfg = get_smoke_config("gemma3_1b")
+    cfg = dataclasses.replace(cfg, num_layers=2, d_model=32, num_heads=2,
+                              head_dim=16, d_ff=64, vocab_size=64,
+                              window=4, global_every=2)
+    kw = dict(batch=2, seq=16, ckpt_dir=str(tmp_path), ckpt_every=3,
+              log_every=100)
+    train_loop(cfg, steps=6, **kw)
+    assert ckpt.latest_step(tmp_path) == 6
+    # relaunch for 9 total: must resume at 6, not restart
+    _, _, losses = train_loop(cfg, steps=9, **kw)
+    assert len(losses) == 3  # only the new steps ran

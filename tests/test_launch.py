@@ -1,0 +1,111 @@
+"""Launch-layer units: shape cells, input specs, sharding rules (these run
+single-device; the full lower+compile path is exercised by the dry-run)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.launch.shapes import (SHAPES, LONG_CONTEXT_OK, batch_specs,
+                                 cell_is_runnable, input_specs)
+from repro.models import param_specs
+from repro.models import sharding as shd
+
+
+def test_40_cells_defined():
+    cells = [(a, s) for a in ARCHS for s in SHAPES]
+    assert len(cells) == 40
+    runnable = [c for c in cells if cell_is_runnable(*c)[0]]
+    # 7 full-attention archs skip long_500k
+    assert len(runnable) == 40 - 7
+    for a in LONG_CONTEXT_OK:
+        assert cell_is_runnable(a, "long_500k")[0]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_input_specs_shapes(arch):
+    for shape, cell in SHAPES.items():
+        if not cell_is_runnable(arch, shape)[0]:
+            continue
+        spec = input_specs(arch, shape)
+        cfg = get_config(arch)
+        b = spec["batch"]
+        if cell.kind == "train":
+            assert b["labels"].shape == (cell.global_batch, cell.seq_len)
+        if cell.kind == "decode":
+            assert b["tokens"].shape == (cell.global_batch, 1)
+            assert "caches" in spec and "pos" in spec
+        if cfg.stub_frontend and cell.kind != "decode":
+            assert b["embeddings"].shape[-1] == cfg.d_model
+            assert "tokens" not in b
+
+
+def test_param_spec_divisibility_guards():
+    """Every generated PartitionSpec must divide its dim on the 16×16 mesh
+    (validated abstractly — no 256 devices needed)."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    class FakeMesh:  # 16×16 shape view over the 1×1 physical mesh
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        sds = param_specs(cfg)
+        pspecs = shd.param_pspecs(FakeMesh(), cfg, sds)
+
+        def check(leaf, spec):
+            for dim, axes in zip(leaf.shape, tuple(spec)):
+                if axes is None:
+                    continue
+                assert dim % shd.axis_size(FakeMesh(), axes) == 0, \
+                    f"{arch}: {leaf.shape} vs {spec}"
+
+        jax.tree.map(check, sds, pspecs,
+                     is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def test_act_sanitizes_indivisible_dims():
+    mesh = jax.make_mesh((1,), ("model",))
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    with shd.activation_rules(FakeMesh(), {"x": P("data", "model?",
+                                                  "model?")}):
+        # act() should fall back without error paths even for odd dims;
+        # we only validate the spec surgery (no real 256-device apply)
+        import repro.models.sharding as S
+        rules = S._TLS.rules
+        assert "x" in rules
+
+
+def test_hybrid_dispatcher_capacity_aware(monkeypatch):
+    from repro.core import hybrid
+    assert hybrid.parallel_units() >= 1
+    # single device → crossover 0 → PTPE always
+    monkeypatch.setattr(hybrid, "parallel_units", lambda: 1)
+    assert hybrid.crossover(4) == 0
+    monkeypatch.setattr(hybrid, "parallel_units", lambda: 257)
+    assert hybrid.crossover(2) > hybrid.crossover(8) > 0
+
+
+def test_roofline_cell_terms():
+    from repro.launch.roofline import cell_terms
+    rec = {
+        "status": "ok", "chips": 256, "arch": "x", "shape": "train_4k",
+        "mesh": "single", "tokens": 1000,
+        "hlo": {"dot_flops": 1e15, "traffic_bytes": 1e12,
+                "collective_bytes": 1e11, "collective_breakdown": {}},
+        "cost": {"flops": 1e13, "bytes accessed": 1e10},
+        "memory": {"per_device_total_bytes": 8 * 2 ** 30},
+        "model": {"params": 1e9, "active_params": 1e9, "seq_len": 4096,
+                  "global_batch": 256, "kind": "train"},
+    }
+    t = cell_terms(rec)
+    assert t["dominant"] == "compute"
+    assert t["fits_16g"]
+    np.testing.assert_allclose(t["compute_s"], 1e15 / 197e12)

@@ -1,0 +1,61 @@
+"""Window-based (WINEPI) baseline + connectivity reconstruction tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EpisodeBatch, EventStream, mine
+from repro.core.connectivity import reconstruct
+from repro.core.windows import (count_windows, count_windows_bruteforce,
+                                frequency_windows)
+from repro.data import embedded_chain_stream
+
+
+def test_windows_simple():
+    # A@1 B@3 A@10 B@11 — episode A→B, window 5
+    st_ = EventStream(np.int32([0, 1, 0, 1]), np.int32([1, 3, 10, 11]), 2)
+    ep = EpisodeBatch.single([0, 1], [0], [100])
+    got = count_windows(st_, ep, window=5)
+    want = count_windows_bruteforce(st_, ep, window=5)
+    np.testing.assert_array_equal(got, want)
+    assert got[0] > 0
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 3), st.integers(2, 12))
+def test_windows_equals_bruteforce(seed, n, window):
+    rng = np.random.default_rng(seed)
+    k = rng.integers(5, 40)
+    times = np.cumsum(rng.integers(0, 4, size=k)).astype(np.int32) + 1
+    types = rng.integers(0, 3, size=k).astype(np.int32)
+    stream = EventStream(types, times, 3)
+    et = rng.integers(0, 3, size=(4, n)).astype(np.int32)
+    eps = EpisodeBatch(et, np.zeros((4, n - 1), np.int32),
+                       np.full((4, n - 1), 5, np.int32))
+    got = count_windows(stream, eps, window)
+    want = count_windows_bruteforce(stream, eps, window)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_window_frequency_monotone_in_window():
+    stream = embedded_chain_stream(6, [0, 1, 2], (2, 6), 40, 500, 30_000,
+                                   seed=2)
+    ep = EpisodeBatch.single([0, 1, 2], [0, 0], [6, 6])
+    f1 = frequency_windows(stream, ep, window=10)
+    f2 = frequency_windows(stream, ep, window=40)
+    assert 0 <= f1[0] <= f2[0] <= 1.0  # larger windows catch more
+
+
+def test_connectivity_recovers_planted_edges():
+    chain, interval = [1, 3, 5], (2, 8)
+    stream = embedded_chain_stream(8, chain, interval, num_occurrences=80,
+                                   noise_events=1200, t_max=90_000, seed=4)
+    res = mine(stream, intervals=[interval], theta=40, max_level=3)
+    g = reconstruct(stream, res)
+    top = {(a, b) for a, b, w, c in g.top_edges(4)}
+    assert (1, 3) in top and (3, 5) in top
+    # planted edges must outrank any noise edge
+    w_planted = min(g.weights[1, 3], g.weights[3, 5])
+    noise = g.weights.copy()
+    noise[1, 3] = noise[3, 5] = -np.inf
+    assert w_planted > noise.max()
