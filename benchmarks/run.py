@@ -24,7 +24,8 @@ def main() -> None:
     seconds = 8 if args.quick else 20
 
     from . import (fig7_mapping, fig8_crossover, fig9_twopass,
-                   fig10_resources, fig11_engine_vs_sequential)
+                   fig10_resources, fig11_engine_vs_sequential,
+                   streaming_throughput)
     figs = {
         "fig7": lambda: fig7_mapping.run(seconds=min(seconds, 20)),
         "fig8": lambda: fig8_crossover.run(seconds=min(seconds, 15)),
@@ -32,6 +33,8 @@ def main() -> None:
         "fig10": lambda: fig10_resources.run(seconds=min(seconds, 20)),
         "fig11": lambda: fig11_engine_vs_sequential.run(
             seconds=min(seconds, 10)),
+        "stream": lambda: streaming_throughput.run(
+            seconds=min(seconds, 12)),
     }
     chosen = args.only.split(",") if args.only else list(figs)
     t0 = time.perf_counter()

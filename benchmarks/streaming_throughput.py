@@ -1,0 +1,117 @@
+"""Sustained streaming throughput: carried machines vs restart-per-window.
+
+The companion accelerator paper (arXiv:0905.2203) makes sustained
+events/sec across stream partitions the figure of merit. This benchmark
+counts a fixed candidate batch over a sym26 spike stream window-by-window
+two ways:
+
+* ``carry``   — ``StreamingCounter.run``: machine state threaded across
+  windows, shape-bucketed staging (warm jit caches after window 1),
+  window p+1 staged while window p counts. Exact across boundaries.
+* ``restart`` — the seed behavior: a fresh one-shot count per window
+  (state rebuilt, per-window shapes recompiled as they vary, boundary
+  occurrences lost).
+
+Reported per window size: sustained events/sec (whole session), steady
+events/sec (first, compile-warming window excluded), and the boundary
+occurrences the restart baseline lost (carry is the oracle: its final
+cumulative counts are asserted equal to one-shot counting on the full
+stream before any timing is trusted).
+
+Usage:
+  PYTHONPATH=src python benchmarks/streaming_throughput.py \
+      [--seconds 12] [--m 128] [--n 3] [--windows-ms 2000 4000 8000]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+import numpy as np
+
+try:  # package mode (python -m benchmarks.run)
+    from .common import Report, random_candidates, sym26_stream
+except ImportError:  # direct script mode
+    sys.path.insert(0, str(Path(__file__).resolve().parent))
+    from common import Report, random_candidates, sym26_stream
+
+from repro.core import StreamingCounter, count_a1  # noqa: E402
+from repro.data import partition_windows  # noqa: E402
+from repro.telemetry import ThroughputMeter  # noqa: E402
+
+
+def bench_carry(windows, eps, engine):
+    ctr = StreamingCounter(eps, engine=engine)
+    meter = ThroughputMeter()
+    gen = ctr.run(windows)
+    for w in windows:
+        meter.start()
+        out = next(gen)
+        meter.stop(len(w))
+    return out, meter
+
+
+def bench_restart(windows, eps):
+    meter = ThroughputMeter()
+    total = np.zeros(eps.M, np.int64)
+    for w in windows:
+        meter.start()
+        total += count_a1(w, eps, use_kernel=False)
+        meter.stop(len(w))
+    return total, meter
+
+
+def run(seconds: int = 12, m: int = 128, n: int = 3,
+        windows_ms=(2000, 4000, 8000), engine: str = "ptpe"):
+    stream, truth = sym26_stream(seconds=seconds)
+    eps = random_candidates(m, n,
+                            include=[truth["short"][0], truth["long"][0]])
+    oracle = count_a1(stream, eps, use_kernel=False)
+    rep = Report("streaming_throughput")
+
+    for wms in windows_ms:
+        windows = list(partition_windows(stream, wms))
+        final, meter_c = bench_carry(windows, eps, engine)
+        np.testing.assert_array_equal(
+            final, oracle,
+            err_msg=f"carry counts diverged from one-shot at {wms}ms")
+        restart_total, meter_r = bench_restart(windows, eps)
+        lost = int((oracle - restart_total).sum())
+        sc, sr = meter_c.summary(), meter_r.summary()
+        rep.add(f"carry/w{wms}", sc["seconds"],
+                windows=sc["windows"], events=sc["events"],
+                ev_per_s=round(sc["events_per_sec"]),
+                steady_ev_per_s=round(sc["steady_events_per_sec"]))
+        rep.add(f"restart/w{wms}", sr["seconds"],
+                windows=sr["windows"], events=sr["events"],
+                ev_per_s=round(sr["events_per_sec"]),
+                steady_ev_per_s=round(sr["steady_events_per_sec"]),
+                boundary_occurrences_lost=lost)
+        speedup = (sr["seconds"] / sc["seconds"]) if sc["seconds"] else 0.0
+        print(f"[stream-bench] window {wms} ms: carry "
+              f"{sc['steady_events_per_sec']:,.0f} ev/s steady vs restart "
+              f"{sr['steady_events_per_sec']:,.0f} ev/s "
+              f"({speedup:.2f}x wall), restart lost {lost} boundary "
+              f"occurrences")
+    rep.save()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seconds", type=int, default=12)
+    ap.add_argument("--m", type=int, default=128,
+                    help="candidate batch size")
+    ap.add_argument("--n", type=int, default=3, help="episode size")
+    ap.add_argument("--windows-ms", type=int, nargs="+",
+                    default=[2000, 4000, 8000])
+    ap.add_argument("--engine", default="ptpe",
+                    choices=["ptpe", "mapconcatenate", "hybrid"])
+    args = ap.parse_args()
+    run(seconds=args.seconds, m=args.m, n=args.n,
+        windows_ms=args.windows_ms, engine=args.engine)
+
+
+if __name__ == "__main__":
+    main()

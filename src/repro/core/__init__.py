@@ -9,26 +9,35 @@ Public API:
 """
 
 from .candidates import join_next_level, level1, level2
-from .count_a1 import count_a1, count_a1_vectorized
-from .count_a2 import count_a2, count_single_slot
+from .count_a1 import A1State, count_a1, count_a1_vectorized, init_a1_state
+from .count_a2 import A2State, count_a2, count_single_slot, init_a2_state
 from .episodes import EpisodeBatch
-from .events import PAD_TYPE, TIME_NEG_INF, EventStream
+from .events import (PAD_TYPE, TIME_NEG_INF, EventStream, count_level1,
+                     type_histogram)
 from .hybrid import count_dispatch, crossover, f_of_n
-from .mapconcat import concatenate_tree, make_segments, mapconcatenate
+from .mapconcat import (concatenate_tree, fold_pair, make_segments,
+                        mapconcatenate)
 from .miner import MiningResult, mine, mine_partitions
 from .connectivity import ConnectivityGraph, reconstruct
 from .ref import (count_a1_sequential, count_a2_sequential,
                   count_occurrences_naive)
-from .twopass import TwoPassResult, count_one_pass, count_two_pass
+from .streaming import (StreamingA2Counter, StreamingCounter, StreamingMiner,
+                        bucket_size)
+from .twopass import (TwoPassResult, TwoPassState, count_one_pass,
+                      count_two_pass)
 from .windows import count_windows, frequency_windows
 
 __all__ = [
     "EventStream", "EpisodeBatch", "PAD_TYPE", "TIME_NEG_INF",
+    "type_histogram", "count_level1",
     "count_a1", "count_a1_vectorized", "count_a2", "count_single_slot",
-    "mapconcatenate", "concatenate_tree", "make_segments",
-    "count_two_pass", "count_one_pass", "TwoPassResult",
+    "A1State", "A2State", "init_a1_state", "init_a2_state",
+    "mapconcatenate", "concatenate_tree", "fold_pair", "make_segments",
+    "count_two_pass", "count_one_pass", "TwoPassResult", "TwoPassState",
     "count_dispatch", "crossover", "f_of_n",
     "mine", "mine_partitions", "MiningResult",
+    "StreamingCounter", "StreamingA2Counter", "StreamingMiner",
+    "bucket_size",
     "level1", "level2", "join_next_level",
     "count_a1_sequential", "count_a2_sequential", "count_occurrences_naive",
     "count_windows", "frequency_windows", "reconstruct",

@@ -18,6 +18,7 @@ Tests sweep LCAP and assert the flag ⇒ recount path restores oracle equality.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -26,7 +27,7 @@ import numpy as np
 
 from . import ref
 from .episodes import EpisodeBatch
-from .events import TIME_NEG_INF, EventStream
+from .events import TIME_NEG_INF, EventStream, count_level1
 
 DEFAULT_LCAP = 4
 
@@ -93,43 +94,124 @@ def dup_flags(ev_types, ev_times):
     return nxt_same
 
 
+@dataclasses.dataclass
+class A1State:
+    """Carry of the M bounded-list machines between stream chunks.
+
+    Device arrays; thread the state returned by one chunk's scan into the
+    next chunk's call — after a carried call the *passed* state may have been
+    donated (its buffers reused), so never touch it again. ``ovf`` is sticky:
+    once an episode's bounded lists may have evicted a live witness, every
+    later count for it must be restored by an oracle recount over the full
+    concatenated history (``StreamingCounter`` does this automatically).
+    """
+
+    s: jax.Array      # i32[M, N, L] circular timestamp buffers
+    ptr: jax.Array    # i32[M, N] next write slot
+    count: jax.Array  # i32[M] completions so far
+    ovf: jax.Array    # bool[M] possibly-live-eviction flag (sticky)
+
+
+def init_a1_state(eps: EpisodeBatch, lcap: int = DEFAULT_LCAP) -> A1State:
+    """Fresh (empty-list) machines for ``eps``."""
+    return A1State(
+        s=jnp.full((eps.M, eps.N, lcap), TIME_NEG_INF, dtype=jnp.int32),
+        ptr=jnp.zeros((eps.M, eps.N), dtype=jnp.int32),
+        count=jnp.zeros((eps.M,), dtype=jnp.int32),
+        ovf=jnp.zeros((eps.M,), dtype=jnp.bool_))
+
+
+def _a1_scan_core(etypes, tlo, thi, ev_types, ev_times, s, ptr, c, ovf):
+    dups = dup_flags(ev_types, ev_times)
+
+    def body(carry, ev):
+        s_, ptr_, c_, ovf_ = carry
+        e, t, d = ev
+        return step_bounded_list(s_, ptr_, c_, ovf_, etypes, tlo, thi, e, t,
+                                 d), None
+
+    carry, _ = jax.lax.scan(body, (s, ptr, c, ovf),
+                            (ev_types, ev_times, dups))
+    return carry
+
+
+@functools.lru_cache(maxsize=None)
+def _a1_carry_scan():
+    """jit'd carried scan; donates the state buffers so a long-running
+    stream reuses one persistent allocation per shape bucket (donation is a
+    no-op warning on backends that don't support it, e.g. CPU)."""
+    donate = (5, 6, 7, 8) if jax.default_backend() != "cpu" else ()
+    return jax.jit(_a1_scan_core, donate_argnums=donate)
+
+
 @jax.jit
 def _scan_count_a1(etypes, tlo, thi, ev_types, ev_times, s0):
     m, n = etypes.shape
     ptr0 = jnp.zeros((m, n), dtype=jnp.int32)
     c0 = jnp.zeros((m,), dtype=jnp.int32)
     ovf0 = jnp.zeros((m,), dtype=jnp.bool_)
-    dups = dup_flags(ev_types, ev_times)
-
-    def body(carry, ev):
-        s, ptr, c, ovf = carry
-        e, t, d = ev
-        return step_bounded_list(s, ptr, c, ovf, etypes, tlo, thi, e, t,
-                                 d), None
-
-    (_, _, count, ovf), _ = jax.lax.scan(
-        body, (s0, ptr0, c0, ovf0), (ev_types, ev_times, dups))
+    _, _, count, ovf = _a1_scan_core(etypes, tlo, thi, ev_types, ev_times,
+                                     s0, ptr0, c0, ovf0)
     return count, ovf
 
 
 def count_a1_vectorized(stream: EventStream, eps: EpisodeBatch,
-                        lcap: int = DEFAULT_LCAP):
-    """Bounded-list scan. Returns (count i64[M], overflow bool[M])."""
+                        lcap: int = DEFAULT_LCAP, state: A1State | None = None,
+                        return_state: bool = False):
+    """Bounded-list scan. Returns (count i64[M], overflow bool[M]) — plus the
+    carried ``A1State`` when ``return_state`` is set.
+
+    With ``state`` the machines resume where the previous chunk left them
+    instead of rebuilding per call; chunked counting is then bit-identical to
+    one call on the concatenation **provided chunk boundaries never split a
+    group of equal timestamps** (the successor-duplicate flags feeding the
+    eviction accounting are computed per chunk). ``StreamingCounter`` holds
+    back the trailing tie group to guarantee that invariant.
+    """
     if eps.N == 1:
-        counts = np.array(
-            [(stream.types == e).sum() for e in eps.etypes[:, 0]], np.int64)
+        counts = count_level1(stream, eps.etypes[:, 0])
+        if state is not None:
+            counts = counts + np.asarray(state.count, np.int64)
+        if return_state:
+            # 1-node machines never store timestamps; only the count moves
+            st = state if state is not None else init_a1_state(eps, lcap)
+            st = dataclasses.replace(st,
+                                     count=jnp.asarray(counts, jnp.int32))
+            return counts, np.zeros(eps.M, dtype=bool), st
         return counts, np.zeros(eps.M, dtype=bool)
-    s0 = jnp.full((eps.M, eps.N, lcap), TIME_NEG_INF, dtype=jnp.int32)
-    count, ovf = _scan_count_a1(
+    if state is None:
+        state = init_a1_state(eps, lcap)
+    s, ptr, c, ovf = _a1_carry_scan()(
         jnp.asarray(eps.etypes), jnp.asarray(eps.tlo), jnp.asarray(eps.thi),
-        jnp.asarray(stream.types), jnp.asarray(stream.times), s0)
-    return np.asarray(count, np.int64), np.asarray(ovf)
+        jnp.asarray(stream.types), jnp.asarray(stream.times),
+        state.s, state.ptr, state.count, state.ovf)
+    new_state = A1State(s=s, ptr=ptr, count=c, ovf=ovf)
+    counts = np.asarray(c, np.int64)
+    ovf_np = np.asarray(ovf)
+    if return_state:
+        return counts, ovf_np, new_state
+    return counts, ovf_np
 
 
 def count_a1(stream: EventStream, eps: EpisodeBatch,
-             lcap: int = DEFAULT_LCAP, use_kernel: bool = True) -> np.ndarray:
+             lcap: int = DEFAULT_LCAP, use_kernel: bool = True,
+             state: A1State | None = None, return_state: bool = False):
     """Exact Algorithm-1 counts: vectorized fast path + oracle fallback for
-    episodes whose bounded lists may have evicted a live witness."""
+    episodes whose bounded lists may have evicted a live witness.
+
+    Stateful mode (``state``/``return_state``): the scan resumes from the
+    carried machines and returns ``(counts, A1State)`` with *cumulative*
+    counts over everything the state has seen. The Pallas kernel path is
+    bypassed (kernels don't expose machine state yet) and the oracle
+    fallback cannot run here — the caller sees only this chunk, so exactness
+    for ``state.ovf``-flagged episodes must be restored by recounting the
+    concatenated history (``StreamingCounter.counts`` does).
+    """
+    if state is not None or return_state:
+        out = count_a1_vectorized(stream, eps, lcap=lcap, state=state,
+                                  return_state=True)
+        counts, _, new_state = out
+        return counts, new_state
     if use_kernel:
         try:
             from repro.kernels import ops as kops

@@ -13,6 +13,7 @@ in tests to show why A1 needs lists — the paper's motivation for Obs. 5.1).
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -20,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .episodes import EpisodeBatch
-from .events import TIME_NEG_INF, EventStream
+from .events import TIME_NEG_INF, EventStream, count_level1
 
 
 def step_single_slot(s, count, etypes, tlo, thi, e, t):
@@ -49,48 +50,108 @@ def step_single_slot(s, count, etypes, tlo, thi, e, t):
     return s_new, count + complete.astype(count.dtype)
 
 
+@dataclasses.dataclass
+class A2State:
+    """Carry of the M single-slot machines between stream chunks.
+
+    Unlike A1's bounded lists, a single slot per level is *complete* state
+    (Obs. 5.1) — carrying it across any chunk boundary is unconditionally
+    bit-exact, ties included. After a carried call the passed state may have
+    been donated; never reuse it.
+    """
+
+    s: jax.Array      # i32[M, N] last-accepted timestamp per level
+    count: jax.Array  # i32[M]
+
+
+def init_a2_state(eps: EpisodeBatch) -> A2State:
+    return A2State(
+        s=jnp.full(eps.etypes.shape, TIME_NEG_INF, dtype=jnp.int32),
+        count=jnp.zeros((eps.M,), dtype=jnp.int32))
+
+
+def _a2_scan_core(etypes, tlo, thi, ev_types, ev_times, s, c):
+    def body(carry, ev):
+        s_, c_ = carry
+        e, t = ev
+        return step_single_slot(s_, c_, etypes, tlo, thi, e, t), None
+
+    carry, _ = jax.lax.scan(body, (s, c), (ev_types, ev_times))
+    return carry
+
+
+@functools.lru_cache(maxsize=None)
+def _a2_carry_scan():
+    donate = (5, 6) if jax.default_backend() != "cpu" else ()
+    return jax.jit(_a2_scan_core, donate_argnums=donate)
+
+
 @functools.partial(jax.jit, static_argnames=())
 def _scan_count(etypes, tlo, thi, ev_types, ev_times):
     m, _ = etypes.shape
     s0 = jnp.full(etypes.shape, TIME_NEG_INF, dtype=jnp.int32)
     c0 = jnp.zeros((m,), dtype=jnp.int32)
-
-    def body(carry, ev):
-        s, c = carry
-        e, t = ev
-        s, c = step_single_slot(s, c, etypes, tlo, thi, e, t)
-        return (s, c), None
-
-    (_, count), _ = jax.lax.scan(body, (s0, c0), (ev_types, ev_times))
+    _, count = _a2_scan_core(etypes, tlo, thi, ev_types, ev_times, s0, c0)
     return count
 
 
 def count_single_slot(stream: EventStream, eps: EpisodeBatch,
-                      inclusive_lower: bool = False) -> np.ndarray:
+                      inclusive_lower: bool = False,
+                      state: A2State | None = None,
+                      return_state: bool = False):
     """Single-slot scan with eps' own bounds (A2 ⇔ bounds already relaxed).
 
     ``inclusive_lower`` applies Δ ∈ [tlo.., thi] by shifting the exclusive
     integer bound down one tick — see ref.count_a2_sequential for why A2
-    needs this on streams with repeated timestamps."""
+    needs this on streams with repeated timestamps.
+
+    With ``state``/``return_state`` the scan resumes carried machines and
+    also returns the new ``A2State``; cumulative counts over chunks are
+    bit-identical to one scan over the concatenation."""
     if eps.N == 1:
-        return np.array([(stream.types == e).sum() for e in eps.etypes[:, 0]],
-                        dtype=np.int64)
+        counts = count_level1(stream, eps.etypes[:, 0])
+        if state is not None:
+            counts = counts + np.asarray(state.count, np.int64)
+        if return_state:
+            st = state if state is not None else init_a2_state(eps)
+            st = dataclasses.replace(st,
+                                     count=jnp.asarray(counts, jnp.int32))
+            return counts, st
+        return counts
     tlo = jnp.asarray(eps.tlo) - (1 if inclusive_lower else 0)
-    count = _scan_count(jnp.asarray(eps.etypes), tlo,
-                        jnp.asarray(eps.thi), jnp.asarray(stream.types),
-                        jnp.asarray(stream.times))
-    return np.asarray(count, dtype=np.int64)
+    if state is None and not return_state:
+        count = _scan_count(jnp.asarray(eps.etypes), tlo,
+                            jnp.asarray(eps.thi), jnp.asarray(stream.types),
+                            jnp.asarray(stream.times))
+        return np.asarray(count, dtype=np.int64)
+    st = state if state is not None else init_a2_state(eps)
+    s, count = _a2_carry_scan()(
+        jnp.asarray(eps.etypes), tlo, jnp.asarray(eps.thi),
+        jnp.asarray(stream.types), jnp.asarray(stream.times),
+        st.s, st.count)
+    new_state = A2State(s=s, count=count)
+    counts = np.asarray(count, dtype=np.int64)
+    if return_state:
+        return counts, new_state
+    return counts
 
 
 def count_a2(stream: EventStream, eps: EpisodeBatch,
-             use_kernel: bool = True) -> np.ndarray:
+             use_kernel: bool = True, state: A2State | None = None,
+             return_state: bool = False):
     """Paper Algorithm 3: upper-bound counts of the relaxed episodes α'.
 
     Dispatches to the Pallas kernel path when available (TPU target;
     interpret-mode on CPU is slower than the XLA scan, so default CPU path is
-    the scan — see kernels/ops.py for the dispatch policy).
+    the scan — see kernels/ops.py for the dispatch policy). Stateful calls
+    (``state``/``return_state``) bypass the kernel — kernels don't expose
+    machine state yet — and return ``(counts, A2State)`` with cumulative
+    counts over everything the carried machines have seen.
     """
     relaxed = eps.relaxed()
+    if state is not None or return_state:
+        return count_single_slot(stream, relaxed, inclusive_lower=True,
+                                 state=state, return_state=True)
     if use_kernel:
         try:
             from repro.kernels import ops as kops

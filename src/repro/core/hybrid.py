@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .count_a1 import count_a1 as _count_a1
+from .count_a1 import A1State, DEFAULT_LCAP, count_a1 as _count_a1
 from .mapconcat import mapconcatenate as _mapconcatenate
 from .episodes import EpisodeBatch
 from .events import EventStream
@@ -46,14 +46,34 @@ def crossover(n: int) -> int:
 
 def count_dispatch(stream: EventStream, eps: EpisodeBatch,
                    engine: str = "hybrid", use_kernel: bool = True,
-                   num_segments: int = 8) -> np.ndarray:
-    """Exact A1 counts through the selected computation-to-core mapping."""
+                   num_segments: int = 8, lcap: int = DEFAULT_LCAP,
+                   state: A1State | None = None,
+                   return_state: bool = False):
+    """Exact A1 counts through the selected computation-to-core mapping.
+
+    ``use_kernel`` and ``lcap`` are plumbed into every mapping — including
+    MapConcatenate's exactness fallback — so hybrid/mapconcatenate callers
+    control the fallback engine the same way ptpe callers do.
+
+    Stateful mode (``state``/``return_state``) carries the bounded-list
+    machines across calls and returns ``(counts, A1State)`` with cumulative
+    raw counts (see ``count_a1``). Cross-window machine carry is inherently a
+    single sequential scan, so every engine routes to the carried ptpe scan
+    here; segment-parallel *streaming* (the tuple-fold analogue of
+    MapConcatenate) lives in ``streaming.StreamingCounter``, which callers
+    should prefer for window-by-window workloads.
+    """
+    if state is not None or return_state:
+        return _count_a1(stream, eps, lcap=lcap, use_kernel=use_kernel,
+                         state=state, return_state=True)
     if engine == "ptpe":
-        return _count_a1(stream, eps, use_kernel=use_kernel)
+        return _count_a1(stream, eps, lcap=lcap, use_kernel=use_kernel)
     if engine == "mapconcatenate":
-        return _mapconcatenate(stream, eps, num_segments=num_segments)
+        return _mapconcatenate(stream, eps, num_segments=num_segments,
+                               lcap=lcap, use_kernel=use_kernel)
     if engine == "hybrid":
         if eps.M > crossover(eps.N):
-            return _count_a1(stream, eps, use_kernel=use_kernel)
-        return _mapconcatenate(stream, eps, num_segments=num_segments)
+            return _count_a1(stream, eps, lcap=lcap, use_kernel=use_kernel)
+        return _mapconcatenate(stream, eps, num_segments=num_segments,
+                               lcap=lcap, use_kernel=use_kernel)
     raise ValueError(f"unknown engine {engine!r}")

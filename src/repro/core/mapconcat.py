@@ -6,10 +6,14 @@ K = N phase-shifted A1 machines per episode — machine k starts
 / (N-k)-after boundary splits of Fig. 4. Each machine emits a tuple
 ``(a, count, b)`` (Fig. 5):
 
-  a — end time of its first completion in ``(τ_p, τ_p + W)``  (else τ_p)
+  a — end time of its first completion in ``(τ_p, τ_p + W]``  (else τ_p)
   count — completions with end time in ``(τ_p, τ_{p+1}]``
   b — end time of its first completion after τ_{p+1}, found by crossing into
-      the next segment up to ``τ_{p+1} + W``  (else τ_{p+1})
+      the next segment up to ``τ_{p+1} + W`` inclusive  (else τ_{p+1})
+      — inclusive because an occurrence spanning exactly W from a first
+      event exactly on the boundary completes at ``τ + W``; excluding that
+      tick made both sides blind to the straddler and the stitch silently
+      continued with the wrong phase machine (no flag, undercount)
 
 Machines reset on every completion (non-overlap), which makes them memoryless
 at completion points — that is what lets a log₂(P) Concatenate tree stitch
@@ -37,7 +41,7 @@ import numpy as np
 from .count_a1 import DEFAULT_LCAP, count_a1 as _count_a1_exact, \
     dup_flags, step_bounded_list
 from .episodes import EpisodeBatch
-from .events import PAD_TYPE, TIME_NEG_INF, EventStream
+from .events import PAD_TYPE, TIME_NEG_INF, EventStream, count_level1
 
 
 # ---------------------------------------------------------------- Map step
@@ -80,7 +84,11 @@ def _segment_scan(ev_types, ev_times, etypes, tlo, thi, starts, tau_lo,
     def body(carry, ev):
         s, ptr, cnt, ovf, a, b, done, a_set = carry
         e, t, d = ev
-        in_window = (t > starts) & (t < tau_hi + w[None, :]) & ~done  # [K,M]
+        # zones are inclusive at tau + W: an occurrence spanning exactly W
+        # whose first event sits exactly on the boundary completes at
+        # tau + W, and both the a-record and the b-crossing must see it or
+        # the stitch silently defaults to the wrong phase machine
+        in_window = (t > starts) & (t <= tau_hi + w[None, :]) & ~done  # [K,M]
         # Run the raw machine step, then mask its effects per (phase, episode)
         s2, ptr2, cdelta, ovf2 = step(s, ptr, jnp.zeros_like(cnt), ovf,
                                       etypes, tlo, thi, e, t, d)
@@ -92,7 +100,7 @@ def _segment_scan(ev_types, ev_times, etypes, tlo, thi, starts, tau_lo,
         # bookkeeping on completions
         in_seg = complete & (t > tau_lo) & (t <= tau_hi)
         cnt = cnt + in_seg.astype(cnt.dtype)
-        rec_a = in_seg & ~a_set & (t < tau_lo + w[None, :])
+        rec_a = in_seg & ~a_set & (t <= tau_lo + w[None, :])
         a = jnp.where(rec_a, t, a)
         a_set = a_set | rec_a
         crossing = complete & (t > tau_hi)
@@ -109,6 +117,28 @@ def _segment_scan(ev_types, ev_times, etypes, tlo, thi, starts, tau_lo,
 # ------------------------------------------------------- Concatenate step
 
 
+def fold_pair(left, right):
+    """Stitch adjacent tuple blocks (paper Fig. 6, one tree level).
+
+    ``left``/``right`` are (a, c, b, flag) with shape [..., K, M] — the K
+    axis is the phase-machine axis, any leading axes broadcast (the balanced
+    tree passes [P/2, K, M]; the streaming left-fold passes [K, M]). Matches
+    left machine k's crossing end-time ``b`` against the right block's first
+    in-zone completions ``a`` and returns the merged block. The operation is
+    associative, which is what lets the streaming engine replace the
+    balanced tree with an incremental left fold over arriving windows.
+    """
+    al, cl, bl, fl = left
+    ar, cr, br, fr = right
+    eq = bl[..., :, None, :] == ar[..., None, :, :]  # [..., K, K', M]
+    matched = eq.any(axis=-2)  # [..., K, M]
+    idx = jnp.argmax(eq, axis=-2)  # [..., K, M] first matching k'
+    cr_g = jnp.take_along_axis(cr, idx, axis=-2)
+    br_g = jnp.take_along_axis(br, idx, axis=-2)
+    fr_g = jnp.take_along_axis(fr, idx, axis=-2)
+    return al, cl + cr_g, br_g, fl | fr_g | ~matched
+
+
 def concatenate_tree(a, c, b, flag):
     """Fold P segments' tuples pairwise, log2(P) levels (paper Fig. 6).
 
@@ -117,20 +147,9 @@ def concatenate_tree(a, c, b, flag):
     """
     p = a.shape[0]
     while p > 1:
-        al, ar = a[0::2], a[1::2]
-        cl, cr = c[0::2], c[1::2]
-        bl, br = b[0::2], b[1::2]
-        fl, fr = flag[0::2], flag[1::2]
-        # match left machine k's crossing end-time with right machines' a
-        eq = bl[:, :, None, :] == ar[:, None, :, :]  # [P/2, K, K', M]
-        matched = eq.any(axis=2)  # [P/2, K, M]
-        idx = jnp.argmax(eq, axis=2)  # [P/2, K, M] first matching k'
-        cr_g = jnp.take_along_axis(cr, idx, axis=1)
-        br_g = jnp.take_along_axis(br, idx, axis=1)
-        fr_g = jnp.take_along_axis(fr, idx, axis=1)
-        a, c = al, cl + cr_g
-        b = br_g
-        flag = fl | fr_g | ~matched
+        a, c, b, flag = fold_pair(
+            (a[0::2], c[0::2], b[0::2], flag[0::2]),
+            (a[1::2], c[1::2], b[1::2], flag[1::2]))
         p //= 2
     return c[0, 0], flag[0, 0]
 
@@ -157,7 +176,7 @@ def make_segments(stream: EventStream, num_segments: int, w_max: int):
     windows = []
     for i in range(p):
         lo = np.searchsorted(ts, tau[i] - w_max, side="right")
-        hi = np.searchsorted(ts, tau[i + 1] + w_max, side="left")
+        hi = np.searchsorted(ts, tau[i + 1] + w_max, side="right")
         windows.append((lo, hi))
     lw = max(hi - lo for lo, hi in windows) if windows else 1
     wt = np.full((p, lw), PAD_TYPE, np.int32)
@@ -187,24 +206,25 @@ def _map_all_segments(wt, wtt, etypes, tlo, thi, tau, w, lcap):
 
 def mapconcatenate_sharded(stream: EventStream, eps: EpisodeBatch,
                            mesh, axis: str = "data",
-                           lcap: int = DEFAULT_LCAP) -> np.ndarray:
+                           lcap: int = DEFAULT_LCAP,
+                           use_kernel: bool = False) -> np.ndarray:
     """Distributed MapConcatenate: the Map step shard_maps over the mesh
     ``axis`` (one segment per device — the paper's one-thread-block-per-
     segment), the O(P·N) tuples are all_gather'd, and the Concatenate tree
-    folds replicated. Exactness fallback as in ``mapconcatenate``."""
+    folds replicated. Exactness fallback as in ``mapconcatenate``;
+    ``use_kernel`` selects the fallback engine."""
     import jax
     from jax.sharding import PartitionSpec as P
 
     if eps.N == 1:
-        return np.array([(stream.types == e).sum() for e in eps.etypes[:, 0]],
-                        dtype=np.int64)
+        return count_level1(stream, eps.etypes[:, 0])
     p = mesh.shape[axis]
     w = eps.max_span
     w_max = int(w.max())
     tau, wt, wtt = make_segments(stream, p, w_max)
     if wt.shape[0] != p:  # stream too short for p segments — fall back
         return mapconcatenate(stream, eps, num_segments=wt.shape[0],
-                              lcap=lcap)
+                              lcap=lcap, use_kernel=use_kernel)
     n = eps.N
     cum = np.cumsum(np.concatenate(
         [np.zeros_like(eps.thi[:, :1]), eps.thi], axis=1), axis=1)  # [M, N]
@@ -236,21 +256,24 @@ def mapconcatenate_sharded(stream: EventStream, eps: EpisodeBatch,
         idx = np.nonzero(bad)[0]
         count = count.copy()
         count[idx] = _count_a1_exact(stream, eps.select(idx), lcap=lcap,
-                                     use_kernel=False)
+                                     use_kernel=use_kernel)
     return count
 
 
 def mapconcatenate(stream: EventStream, eps: EpisodeBatch,
                    num_segments: int = 8,
-                   lcap: int = DEFAULT_LCAP) -> np.ndarray:
+                   lcap: int = DEFAULT_LCAP,
+                   use_kernel: bool = False) -> np.ndarray:
     """Exact A1 counts via segment-parallel Map + Concatenate tree.
 
     Falls back to the single-scan engine for episodes whose tuples failed to
-    stitch or whose bounded lists flagged a live eviction.
+    stitch or whose bounded lists flagged a live eviction; ``use_kernel``
+    controls whether that fallback may take the Pallas kernel path (plumbed
+    from ``hybrid.count_dispatch`` so hybrid/mapconcatenate callers steer the
+    fallback the same way ptpe callers do).
     """
     if eps.N == 1:
-        return np.array([(stream.types == e).sum() for e in eps.etypes[:, 0]],
-                        dtype=np.int64)
+        return count_level1(stream, eps.etypes[:, 0])
     w = eps.max_span
     w_max = int(w.max())
     tau, wt, wtt = make_segments(stream, num_segments, w_max)
@@ -266,5 +289,5 @@ def mapconcatenate(stream: EventStream, eps: EpisodeBatch,
         idx = np.nonzero(bad)[0]
         count = count.copy()
         count[idx] = _count_a1_exact(stream, eps.select(idx), lcap=lcap,
-                                     use_kernel=False)
+                                     use_kernel=use_kernel)
     return count

@@ -17,7 +17,7 @@ import numpy as np
 from . import candidates as _cand
 from . import twopass as _tp
 from .episodes import EpisodeBatch
-from .events import EventStream
+from .events import PAD_TYPE, EventStream, count_level1
 
 
 @dataclasses.dataclass
@@ -45,11 +45,10 @@ def mine(stream: EventStream, intervals, theta: int, max_level: int = 4,
     """
     frequent, counts, stats = [], [], []
 
-    # level 1 — plain occurrence counts
+    # level 1 — plain occurrence counts (histogram; see events.count_level1)
     t0 = time.perf_counter()
     c1 = _cand.level1(stream.num_types)
-    cnt1 = np.array([(stream.types == e).sum() for e in c1.etypes[:, 0]],
-                    dtype=np.int64)
+    cnt1 = count_level1(stream, c1.etypes[:, 0])
     keep = cnt1 >= theta
     frequent.append(c1.select(keep))
     counts.append(cnt1[keep])
@@ -78,9 +77,47 @@ def mine(stream: EventStream, intervals, theta: int, max_level: int = 4,
 
 
 def mine_partitions(streams, intervals, theta_per_window: int,
-                    max_level: int = 4, **kw):
+                    max_level: int = 4, mode: str = "per_window",
+                    carry: bool = True, overlap_dedup: bool = True, **kw):
     """Chip-on-chip streaming mode: mine each partition window in turn and
-    yield (window_index, MiningResult). θ applies per window."""
-    for i, st in enumerate(streams):
-        yield i, mine(st, intervals, theta_per_window, max_level=max_level,
-                      **kw)
+    yield (window_index, MiningResult).
+
+    ``carry=True`` (default) threads every counting machine across window
+    boundaries via ``streaming.StreamingMiner``, so occurrences spanning a
+    boundary are counted in the window where they complete — the seed's
+    restart-per-window loop silently dropped them. θ applies per window
+    (``mode="per_window"``) or to cumulative counts (``mode="cumulative"``,
+    whose final window reproduces one-shot ``mine`` on the concatenation).
+
+    ``overlap_dedup`` drops events at-or-before the previous window's last
+    timestamp, so legacy overlapping windows (``partition_windows`` with
+    ``overlap_ms > 0`` — the old workaround for the boundary loss this
+    engine fixes) aren't double-counted. Disable it when feeding a true
+    partition whose boundary may split a group of equal timestamps.
+
+    ``carry=False`` reproduces the legacy restart-per-window miner exactly.
+    """
+    if not carry:
+        for i, st in enumerate(streams):
+            yield i, mine(st, intervals, theta_per_window,
+                          max_level=max_level, **kw)
+        return
+    from .streaming import StreamingMiner
+    miner = StreamingMiner(intervals, theta_per_window, max_level=max_level,
+                           mode=mode, **kw)
+    t_seen = None
+    idx = 0
+    it = iter(streams)
+    cur = next(it, None)
+    while cur is not None:
+        nxt = next(it, None)
+        st = cur
+        keep = st.types != PAD_TYPE
+        if overlap_dedup and t_seen is not None:
+            keep = keep & (st.times > t_seen)
+        st = EventStream(st.types[keep], st.times[keep], st.num_types)
+        if len(st):
+            t_seen = int(st.times[st.types != PAD_TYPE][-1])
+        yield idx, miner.update(st, final=nxt is None)
+        idx += 1
+        cur = nxt

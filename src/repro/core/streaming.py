@@ -1,0 +1,612 @@
+"""Exact cross-window streaming engine (chip-on-chip loop, PR 1 tentpole).
+
+The paper's real-time claim rests on "processing partitions of the data
+stream in turn"; the companion accelerator-transformation paper
+(arXiv:0905.2203) makes *sustained* throughput across those partitions the
+benchmark that matters. The seed's ``mine_partitions`` rebuilt every counting
+machine at each window boundary, silently losing occurrences that span
+partitions. This module replaces that with carried machines whose
+window-by-window counts are **bit-identical to one-shot counting on the
+concatenated stream**:
+
+``StreamingCounter``
+    Exact cumulative non-overlapped A1 counts for a fixed ``EpisodeBatch``
+    over incrementally arriving windows. Three engines:
+
+    * ``"ptpe"``        — the bounded-list scan with its (s, ptr, count, ovf)
+      carry threaded across windows (episode-parallel, one machine set).
+    * ``"mapconcatenate"`` — segment-parallel streaming: each window is cut
+      into phase-shifted segment scans and their (a, count, b) tuples are
+      stitched onto a carried tuple with an incremental left fold — the
+      associative form of the paper's Concatenate tree (Fig. 6). Because a
+      segment's tuple needs ``W`` ticks of lookahead (its crossing zone), the
+      commit frontier trails the ingest frontier by ``W``; ``finalize()``
+      flushes the tail.
+    * ``"hybrid"``      — Eq. 2 dispatcher applied once at construction.
+
+    Exactness containment is inherited from the one-shot engines: bounded
+    lists flag possibly-live evictions (``ovf``) and unstitchable tuples flag
+    ``unmatched``; flagged episodes are recounted by the exact engine over
+    the retained concatenated history, so ``counts()`` is always exact.
+
+    Two boundary subtleties make the bit-exact claim real:
+
+    * *tie-group holdback* — the per-chunk successor-duplicate flags that
+      feed A1's eviction accounting can't see across a boundary that splits
+      a group of equal timestamps, so ingestion holds back the trailing tie
+      group and prepends it to the next window (``finalize()`` flushes it);
+    * *shape-bucketed staging* — each window is padded to a power-of-two
+      event-buffer bucket before hitting the jit'd scans, so windows after
+      the first reuse warm compile caches and (off-CPU) donated state
+      buffers; ``run()`` additionally stages window p+1's device transfer
+      while window p counts.
+
+``StreamingA2Counter``
+    The relaxed upper-bound machines (Obs. 5.1: single slot per level is
+    complete state) carried the same way — unconditionally exact under any
+    partitioning, used by the streaming two-pass cull.
+
+``StreamingMiner``
+    Level-wise mining over the carried counters with per-window θ
+    (``mode="per_window"``: θ applies to counts *completed in* each window,
+    boundary-spanning occurrences included) or cumulative θ
+    (``mode="cumulative"``: θ applies to counts over the whole stream so
+    far; the final window's report equals one-shot ``mine`` on the
+    concatenation). Two-pass culling stays sound across windows: cumulative
+    A2 dominates cumulative A1 (Thm. 5.1 on the concatenation), and the
+    per-window cull uses the safe bound
+    ``a1_delta(p) <= a2_cum(p) - a1_known(p-1)``. Episodes are promoted to
+    exact counting lazily; a promoted episode's machines catch up by
+    replaying the retained window history.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import candidates as _cand
+from .count_a1 import (A1State, DEFAULT_LCAP, _a1_carry_scan, count_a1,
+                       init_a1_state)
+from .count_a2 import count_single_slot, init_a2_state
+from .episodes import EpisodeBatch
+from .events import PAD_TYPE, EventStream, count_level1, type_histogram
+from .hybrid import crossover
+from .mapconcat import _map_all_segments, fold_pair
+from .miner import LevelStats, MiningResult
+
+_EMPTY_I32 = np.empty(0, np.int32)
+
+
+def bucket_size(n: int, minimum: int = 128) -> int:
+    """Next power-of-two event-buffer length >= max(n, minimum) — bounds the
+    number of distinct scan shapes (and therefore jit compiles) to
+    O(log max_window)."""
+    b = max(minimum, 1)
+    while b < n:
+        b *= 2
+    return b
+
+
+def _split_tie_tail(types: np.ndarray, times: np.ndarray):
+    """Split off the trailing group of events sharing the final timestamp.
+
+    Everything before the cut can be fed to the carried scans now: each fed
+    event's successor-duplicate flag is decidable without future events
+    (the tie tail's own flags may depend on the *next* window's first
+    timestamp)."""
+    if times.size == 0:
+        return (types, times), (types[:0], times[:0])
+    cut = int(np.searchsorted(times, times[-1], side="left"))
+    return (types[:cut], times[:cut]), (types[cut:], times[cut:])
+
+
+@dataclasses.dataclass
+class _Staged:
+    """A window prepared for dispatch: holdback applied, history recorded,
+    (ptpe) padded + transferred to device ahead of the blocking read."""
+
+    feed_types: object   # np.ndarray (mapc) or jax.Array (ptpe, padded)
+    feed_times: object
+    n: int               # real fed events
+    final: bool
+
+
+class StreamingCounter:
+    """Exact cumulative A1 counts of ``eps`` over an arriving partition.
+
+    Feed successive non-overlapping, time-ordered windows with ``update``
+    (or the prefetching ``run``); call ``finalize`` after the last window to
+    flush the holdback/commit tail. ``counts()``/``update()`` return exact
+    int64[M] cumulative counts — flagged episodes are restored against the
+    retained history, exactly like the one-shot engines restore against the
+    full stream.
+    """
+
+    def __init__(self, eps: EpisodeBatch, engine: str = "hybrid",
+                 lcap: int = DEFAULT_LCAP, num_segments: int = 8,
+                 use_kernel: bool = False, keep_history: bool = True,
+                 min_bucket: int = 128):
+        if engine not in ("ptpe", "mapconcatenate", "hybrid"):
+            raise ValueError(f"unknown engine {engine!r}")
+        self.eps = eps
+        self.lcap = lcap
+        self.num_segments = num_segments
+        self.use_kernel = use_kernel
+        self.keep_history = keep_history
+        self.min_bucket = min_bucket
+        self.snapshots: list[np.ndarray] = []  # exact cum counts per window
+        self.windows_seen = 0
+        self.finalized = False
+        self._num_types: int | None = None
+        self._held_t = _EMPTY_I32
+        self._held_tt = _EMPTY_I32
+        self._hist: list[tuple[np.ndarray, np.ndarray]] = []
+        self._consumed = 0  # events dispatched into the machines so far
+        self._t_last: int | None = None
+        if eps.N == 1:
+            self.engine = "level1"
+            self._cum = np.zeros(eps.M, np.int64)
+            return
+        if engine == "hybrid":
+            engine = "ptpe" if eps.M > crossover(eps.N) else "mapconcatenate"
+        self.engine = engine
+        self._et = jnp.asarray(eps.etypes)
+        self._tlo = jnp.asarray(eps.tlo)
+        self._thi = jnp.asarray(eps.thi)
+        if engine == "ptpe":
+            self._state = init_a1_state(eps, lcap)
+        else:
+            self._w = np.asarray(eps.max_span, np.int64)
+            self._w_dev = jnp.asarray(self._w, jnp.int32)
+            self._wmax = int(self._w.max())
+            self._carry = None        # (a, c, b, flag) each jnp [K, M]
+            self._ovf = np.zeros(eps.M, bool)
+            self._tau_c: int | None = None
+            self._buf_t = _EMPTY_I32  # committed-lookback + pending events
+            self._buf_tt = _EMPTY_I32
+
+    # ------------------------------------------------------------ ingest
+
+    def _prepare(self, window: EventStream | None, final: bool) -> _Staged:
+        """Host side of one window: strip padding, validate the partition
+        contract, apply tie-group holdback, record history, and (ptpe) stage
+        the padded chunk onto the device. Mutates holdback/history, so
+        prepare calls must stay in window order — but none of this depends
+        on the *device* state, which is what lets ``run`` overlap window
+        p+1's transfer with window p's scan."""
+        if window is None:
+            t = tt = _EMPTY_I32
+        else:
+            real = window.types != PAD_TYPE
+            t = window.types[real]
+            tt = window.times[real]
+            if self._num_types is None:
+                self._num_types = window.num_types
+        if t.size:
+            if self._t_last is not None and int(tt[0]) < self._t_last:
+                raise ValueError(
+                    "streaming windows must be a time-ordered partition "
+                    f"(window starts at {int(tt[0])} < frontier "
+                    f"{self._t_last}); dedup overlapping windows first")
+            self._t_last = int(tt[-1])
+            if self.keep_history:
+                self._hist.append((t, tt))
+        chunk_t = np.concatenate([self._held_t, t])
+        chunk_tt = np.concatenate([self._held_tt, tt])
+        if final:
+            feed, held = (chunk_t, chunk_tt), (_EMPTY_I32, _EMPTY_I32)
+        else:
+            feed, held = _split_tie_tail(chunk_t, chunk_tt)
+        self._held_t, self._held_tt = held
+        n = feed[0].size
+        if self.engine == "ptpe" and n:
+            b = bucket_size(n, self.min_bucket)
+            ft = np.full(b, PAD_TYPE, np.int32)
+            ftt = np.full(b, feed[1][-1], np.int32)
+            ft[:n] = feed[0]
+            ftt[:n] = feed[1]
+            return _Staged(jax.device_put(ft), jax.device_put(ftt), n, final)
+        return _Staged(feed[0], feed[1], n, final)
+
+    # ---------------------------------------------------------- dispatch
+
+    def _dispatch(self, staged: _Staged) -> None:
+        self._consumed += staged.n
+        if self.engine == "level1":
+            if staged.n:
+                sub = EventStream(staged.feed_types, staged.feed_times,
+                                  self._num_types)
+                self._cum += count_level1(sub, self.eps.etypes[:, 0])
+            return
+        if self.engine == "ptpe":
+            if staged.n:
+                st = self._state
+                s, ptr, c, ovf = _a1_carry_scan()(
+                    self._et, self._tlo, self._thi,
+                    staged.feed_types, staged.feed_times,
+                    st.s, st.ptr, st.count, st.ovf)
+                self._state = A1State(s=s, ptr=ptr, count=c, ovf=ovf)
+            return
+        self._dispatch_mapc(staged)
+
+    def _dispatch_mapc(self, staged: _Staged) -> None:
+        if staged.n:
+            self._buf_t = np.concatenate([self._buf_t, staged.feed_types])
+            self._buf_tt = np.concatenate([self._buf_tt, staged.feed_times])
+        if self._buf_tt.size == 0:
+            return
+        if self._tau_c is None:
+            self._tau_c = int(self._buf_tt[0]) - 1
+        t_f = int(self._buf_tt[-1])
+        w = self._wmax
+        if staged.final:
+            tau_next = t_f
+            if tau_next <= self._tau_c:
+                return
+        else:
+            # a segment's tuple needs W ticks of lookahead (crossing zone),
+            # and segments shorter than W are not stitch-safe — commit only
+            # when the frontier has moved far enough past the last commit
+            tau_next = t_f - w
+            if tau_next - self._tau_c <= w:
+                return
+        span = tau_next - self._tau_c
+        q = 1
+        while q * 2 <= self.num_segments and span // (q * 2) > w:
+            q *= 2
+        tau = np.round(np.linspace(self._tau_c, tau_next,
+                                   q + 1)).astype(np.int64)
+        tau[0], tau[-1] = self._tau_c, tau_next
+        lo = np.searchsorted(self._buf_tt, tau[:-1] - w, side="right")
+        hi = np.searchsorted(self._buf_tt, tau[1:] + w, side="right")
+        lw = bucket_size(int((hi - lo).max()), self.min_bucket)
+        wt = np.full((q, lw), PAD_TYPE, np.int32)
+        wtt = np.zeros((q, lw), np.int32)
+        for i in range(q):
+            wt[i, : hi[i] - lo[i]] = self._buf_t[lo[i]: hi[i]]
+            wtt[i, : hi[i] - lo[i]] = self._buf_tt[lo[i]: hi[i]]
+        a, c, b, ovf = _map_all_segments(
+            jnp.asarray(wt), jnp.asarray(wtt), self._et, self._tlo,
+            self._thi, jnp.asarray(tau), self._w_dev, self.lcap)
+        self._ovf |= np.asarray(ovf.any(axis=(0, 1)))
+        i0 = 0
+        if self._carry is None:
+            self._carry = (a[0], c[0], b[0],
+                           jnp.zeros(a[0].shape, jnp.bool_))
+            i0 = 1
+        for i in range(i0, q):
+            self._carry = fold_pair(
+                self._carry,
+                (a[i], c[i], b[i], jnp.zeros(a[i].shape, jnp.bool_)))
+        self._tau_c = tau_next
+        keep = self._buf_tt > tau_next - w  # retain next segment's lookback
+        self._buf_t = self._buf_t[keep]
+        self._buf_tt = self._buf_tt[keep]
+
+    # ------------------------------------------------------------ reads
+
+    def counts(self) -> np.ndarray:
+        """Exact cumulative counts over everything committed so far (for
+        mapconcatenate, the commit frontier trails ingestion by W until
+        ``finalize``)."""
+        if self.engine == "level1":
+            return self._cum.copy()
+        if self.engine == "ptpe":
+            c = np.asarray(self._state.count, np.int64)
+            flagged = np.asarray(self._state.ovf).copy()
+        else:
+            if self._carry is None:
+                return np.zeros(self.eps.M, np.int64)
+            c = np.asarray(self._carry[1][0], np.int64)
+            flagged = np.asarray(self._carry[3][0]) | self._ovf
+        if flagged.any():
+            c = self._restore_exact(c, flagged)
+        return c
+
+    def _restore_exact(self, c: np.ndarray, flagged: np.ndarray):
+        """Recount flagged episodes with the exact one-shot engine over the
+        retained history (trimmed to what the machines have consumed)."""
+        if not self.keep_history:
+            raise RuntimeError(
+                "episodes were flagged for exact recount but keep_history "
+                "is off; re-run with keep_history=True")
+        types = np.concatenate([t for t, _ in self._hist] or [_EMPTY_I32])
+        times = np.concatenate([tt for _, tt in self._hist] or [_EMPTY_I32])
+        if self.engine == "ptpe":
+            # dispatched events are always a prefix of the ingested history;
+            # count them explicitly — run() may already have *prepared* (and
+            # history-recorded) the next window while this one's counts are
+            # being read
+            n = self._consumed
+        else:
+            n = int(np.searchsorted(times, self._tau_c, side="right"))
+        stream = EventStream(types[:n], times[:n], self._num_types)
+        idx = np.nonzero(flagged)[0]
+        c = c.copy()
+        c[idx] = count_a1(stream, self.eps.select(idx), lcap=self.lcap,
+                          use_kernel=self.use_kernel)
+        return c
+
+    def _snapshot(self) -> np.ndarray:
+        out = self.counts()
+        self.snapshots.append(out)
+        self.windows_seen += 1
+        return out
+
+    # ----------------------------------------------------------- public
+
+    def update(self, window: EventStream, final: bool = False) -> np.ndarray:
+        """Ingest one window; returns exact cumulative counts. ``final``
+        additionally flushes the holdback/commit tail (equivalent to calling
+        ``finalize`` but folded into this window's snapshot)."""
+        if self.finalized:
+            raise RuntimeError("counter already finalized")
+        self._dispatch(self._prepare(window, final))
+        self.finalized = final
+        return self._snapshot()
+
+    def finalize(self) -> np.ndarray:
+        """Flush held-back events and commit the mapconcatenate tail; the
+        returned counts cover every event ever ingested and equal one-shot
+        counting on the concatenation."""
+        if self.finalized:
+            return self.snapshots[-1]
+        self._dispatch(self._prepare(None, final=True))
+        self.finalized = True
+        return self._snapshot()
+
+    def run(self, windows, final: bool = True):
+        """Pipelined generator over ``windows``: window p+1's host work and
+        device transfer are issued before blocking on window p's counts, so
+        the accelerator never waits on ingest. Yields one exact cumulative
+        count vector per window; the last one is finalized."""
+        it = iter(windows)
+        cur = next(it, None)
+        if cur is None:
+            return
+        nxt = next(it, None)
+        staged = self._prepare(cur, final and nxt is None)
+        while staged is not None:
+            self._dispatch(staged)
+            last = nxt is None
+            cur, nxt = nxt, (next(it, None) if nxt is not None else None)
+            staged = (self._prepare(cur, final and nxt is None)
+                      if cur is not None else None)
+            self.finalized = self.finalized or (final and last)
+            yield self._snapshot()
+
+
+class StreamingA2Counter:
+    """Carried relaxed upper-bound (Algorithm 3) machines. A single slot per
+    level is complete state (Obs. 5.1), so chunked counting is
+    unconditionally bit-exact — no holdback, no flags, no history."""
+
+    def __init__(self, eps: EpisodeBatch, min_bucket: int = 128):
+        self.eps = eps
+        self._relaxed = eps.relaxed()
+        self.min_bucket = min_bucket
+        self.snapshots: list[np.ndarray] = []
+        self.windows_seen = 0
+        if eps.N == 1:
+            self._state = None
+            self._cum = np.zeros(eps.M, np.int64)
+        else:
+            self._state = init_a2_state(self._relaxed)
+
+    def update(self, window: EventStream, final: bool = False) -> np.ndarray:
+        real = window.types != PAD_TYPE
+        n = int(real.sum())
+        if self.eps.N == 1:
+            if n:
+                self._cum += count_level1(window, self.eps.etypes[:, 0])
+            out = self._cum.copy()
+        elif n == 0:
+            out = np.asarray(self._state.count, np.int64)
+        else:
+            sub = EventStream(window.types[real], window.times[real],
+                              window.num_types)
+            padded = sub.padded_to(bucket_size(n, self.min_bucket))
+            out, self._state = count_single_slot(
+                padded, self._relaxed, inclusive_lower=True,
+                state=self._state, return_state=True)
+        self.snapshots.append(out)
+        self.windows_seen += 1
+        return out
+
+
+class StreamingMiner:
+    """Level-wise frequent-episode mining over carried counting machines.
+
+    ``update(window)`` returns a per-window ``MiningResult``; in
+    ``mode="per_window"`` its counts are per-window *deltas* of the exact
+    cumulative counts — boundary-spanning occurrences included (the seed's
+    restart-per-window loop lost exactly those). Attribution can trail the
+    ingest frontier slightly: the tie-group holdback defers the last
+    timestamp group, and the mapconcatenate engine commits W ticks behind
+    ingestion, so an occurrence completing in window p's final W ticks may
+    land in window p+1's delta. The deltas always sum to the exact total.
+    In ``mode="cumulative"`` counts are totals over the stream so far, and
+    the final window's report is bit-identical to one-shot ``mine`` on the
+    concatenated stream.
+
+    Candidate sets evolve with the frequent sets, so counters are keyed by
+    batch content; a batch (or a two-pass promotion) appearing mid-stream
+    replays the retained window history to catch its machines up — exactness
+    is never traded for the cull. Memory grows with history; windowed
+    eviction is a ROADMAP follow-on.
+    """
+
+    def __init__(self, intervals, theta: int, max_level: int = 4,
+                 mode: str = "per_window", engine: str = "hybrid",
+                 two_pass: bool = True, use_kernel: bool = True,
+                 lcap: int = DEFAULT_LCAP, num_segments: int = 8):
+        if mode not in ("per_window", "cumulative"):
+            raise ValueError(f"unknown mode {mode!r}")
+        self.intervals = intervals
+        self.theta = theta
+        self.max_level = max_level
+        self.mode = mode
+        self.engine = engine
+        self.two_pass = two_pass
+        self.use_kernel = use_kernel
+        self.lcap = lcap
+        self.num_segments = num_segments
+        self._history: list[EventStream] = []
+        self._p = 0
+        self._num_types: int | None = None
+        self._l1_cum: np.ndarray | None = None
+        self._l1_prev: np.ndarray | None = None
+        self._a2: dict = {}       # batch key -> StreamingA2Counter
+        self._exact: dict = {}    # batch key -> (tracked idx, StreamingCounter)
+        self._known: dict = {}    # batch key -> exact cum known last window
+        self._known2: dict = {}   # batch key -> exact cum known 2 windows ago
+
+    @staticmethod
+    def _key(eps: EpisodeBatch):
+        return (eps.N, eps.etypes.tobytes(), eps.tlo.tobytes(),
+                eps.thi.tobytes())
+
+    def _sync(self, counter, window: EventStream, final: bool) -> np.ndarray:
+        """Feed any history windows this counter has not seen (a batch that
+        first appears — or grows — at window p replays windows 0..p-1), then
+        the current window."""
+        while counter.windows_seen < self._p:
+            counter.update(self._history[counter.windows_seen])
+        return counter.update(window, final=final)
+
+    def _count_level(self, cand: EpisodeBatch, window: EventStream,
+                     final: bool):
+        """Counts + masks for one candidate batch at the current window.
+        Returns (counts, frequent, survived, seed).
+
+        ``seed`` gates candidate *generation* for the next level. In
+        per-window mode an occurrence completing in window p may lean on
+        sub-episode occurrences that completed up to W ticks before p
+        started, so sub-episodes are seeded on their support over the last
+        TWO windows (sound whenever windows are at least W long) — the
+        reported ``frequent`` mask still uses the true per-window delta.
+        """
+        key = self._key(cand)
+        m = cand.M
+        zeros = np.zeros(m, np.int64)
+        if self.two_pass:
+            a2c = self._a2.get(key)
+            if a2c is None:
+                a2c = self._a2[key] = StreamingA2Counter(cand)
+            a2_cum = self._sync(a2c, window, final)
+            a2_prev = (a2c.snapshots[-2] if len(a2c.snapshots) >= 2
+                       else zeros)
+            if self.mode == "per_window":
+                # safe cull: a1_delta(p) <= a2_cum(p) - a1_known(p-1)
+                survived = a2_cum - self._known.get(key, zeros) >= self.theta
+            else:
+                survived = a2_cum >= self.theta  # Thm 5.1 on the concat
+            tracked_prev = self._exact[key][0] if key in self._exact \
+                else np.empty(0, np.int64)
+            tracked = np.union1d(tracked_prev, np.nonzero(survived)[0])
+        else:
+            a2_cum = a2_prev = None
+            survived = np.ones(m, bool)
+            tracked = np.arange(m, dtype=np.int64)
+        ctr = None
+        if tracked.size:
+            prev = self._exact.get(key)
+            if prev is not None and prev[0].size == tracked.size:
+                ctr = prev[1]
+            else:
+                ctr = StreamingCounter(
+                    cand.select(tracked), engine=self.engine, lcap=self.lcap,
+                    num_segments=self.num_segments,
+                    use_kernel=self.use_kernel)
+            self._exact[key] = (tracked, ctr)
+            cum_t = self._sync(ctr, window, final)
+            prev_t = (ctr.snapshots[-2] if len(ctr.snapshots) >= 2
+                      else np.zeros(tracked.size, np.int64))
+            prev2_t = (ctr.snapshots[-3] if len(ctr.snapshots) >= 3
+                       else np.zeros(tracked.size, np.int64))
+        if self.mode == "per_window":
+            counts = (a2_cum - a2_prev) if self.two_pass else zeros.copy()
+            if tracked.size:
+                counts[tracked] = cum_t - prev_t
+            # two-window support: exact for tracked, safe UB for culled
+            if self.two_pass:
+                seed_ub = a2_cum - self._known2.get(key, zeros)
+            else:
+                seed_ub = zeros.copy()
+            if tracked.size:
+                seed_ub[tracked] = cum_t - prev2_t
+            seed = seed_ub >= self.theta
+        else:
+            counts = a2_cum.copy() if self.two_pass else zeros.copy()
+            if tracked.size:
+                counts[tracked] = cum_t
+            seed = None  # cumulative: seed == frequent
+        known = zeros.copy()
+        if tracked.size:
+            known[tracked] = cum_t
+        self._known2[key] = self._known.get(key, zeros)
+        self._known[key] = known
+        frequent = survived & (counts >= self.theta)
+        if seed is None:
+            seed = frequent
+        return counts, frequent, survived, seed
+
+    def update(self, window: EventStream, final: bool = False) -> MiningResult:
+        """Mine one partition window; returns a per-window ``MiningResult``
+        (same shape the one-shot miner produces)."""
+        real = window.types != PAD_TYPE
+        w = EventStream(window.types[real], window.times[real],
+                        window.num_types)
+        if self._num_types is None:
+            self._num_types = w.num_types
+            self._l1_cum = np.zeros(w.num_types, np.int64)
+        frequent, counts, stats = [], [], []
+
+        t0 = time.perf_counter()
+        wh = type_histogram(w)
+        self._l1_cum += wh
+        c1 = _cand.level1(self._num_types)
+        if self.mode == "per_window":
+            l1 = wh[c1.etypes[:, 0]]
+            prev = (self._l1_prev if self._l1_prev is not None
+                    else np.zeros_like(wh))
+            seed1 = (wh + prev)[c1.etypes[:, 0]] >= self.theta
+            self._l1_prev = wh
+        else:
+            l1 = self._l1_cum[c1.etypes[:, 0]]
+            seed1 = l1 >= self.theta
+        keep1 = l1 >= self.theta
+        frequent.append(c1.select(keep1))
+        counts.append(l1[keep1])
+        stats.append(LevelStats(1, c1.M, c1.M, int(keep1.sum()),
+                                time.perf_counter() - t0))
+
+        # the seed chain drives candidate generation; the reported frequent
+        # sets use the mode's own θ criterion (identical in cumulative mode)
+        seed_batch = c1.select(seed1)
+        level = 2
+        while level <= self.max_level and seed_batch is not None \
+                and seed_batch.M > 0:
+            t0 = time.perf_counter()
+            if level == 2:
+                cand = _cand.level2(seed_batch.etypes[:, 0], self.intervals)
+            else:
+                cand = _cand.join_next_level(seed_batch)
+            if cand is None or cand.M == 0:
+                break
+            cvec, freq, surv, seed = self._count_level(cand, w, final)
+            frequent.append(cand.select(freq))
+            counts.append(cvec[freq])
+            stats.append(LevelStats(level, cand.M, int(surv.sum()),
+                                    int(freq.sum()),
+                                    time.perf_counter() - t0))
+            seed_batch = cand.select(seed)
+            level += 1
+        self._history.append(w)
+        self._p += 1
+        return MiningResult(frequent=frequent, counts=counts, stats=stats)

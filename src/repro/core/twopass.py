@@ -17,8 +17,8 @@ import dataclasses
 
 import numpy as np
 
-from .count_a1 import count_a1 as _count_a1
-from .count_a2 import count_a2 as _count_a2
+from .count_a1 import A1State, DEFAULT_LCAP
+from .count_a2 import A2State, count_a2 as _count_a2
 from .hybrid import count_dispatch as _count_dispatch
 from .episodes import EpisodeBatch
 from .events import EventStream
@@ -33,11 +33,52 @@ class TwoPassResult:
     eliminated_frac: float    # fraction culled in pass 1
 
 
+@dataclasses.dataclass
+class TwoPassState:
+    """Carried machines for streaming two-pass counting: the relaxed A2
+    upper-bound machines plus the exact A1 machines, both threaded across
+    window boundaries. Cull decisions use *cumulative* A2 counts, so
+    Theorem 5.1 keeps holding on the concatenated stream."""
+
+    a2: A2State
+    a1: A1State
+
+
 def count_two_pass(stream: EventStream, eps: EpisodeBatch, theta: int,
                    use_kernel: bool = True,
-                   engine: str = "hybrid") -> TwoPassResult:
+                   engine: str = "hybrid", lcap: int = DEFAULT_LCAP,
+                   state: TwoPassState | None = None,
+                   return_state: bool = False):
     """Algorithm 4. ``engine`` picks the pass-2 mapping: "ptpe",
-    "mapconcatenate", or "hybrid" (Eq. 2 dispatcher)."""
+    "mapconcatenate", or "hybrid" (Eq. 2 dispatcher).
+
+    Stateful mode (``state``/``return_state``) returns
+    ``(TwoPassResult, TwoPassState)`` where counts are cumulative over
+    everything the carried machines have seen. Both passes run carried
+    full-batch scans — the A2 cull then gates only the *reported* survivor
+    set, not pass-2 compute (a culled episode may become a survivor in a
+    later window, so its exact machines must have seen the whole stream;
+    ``StreamingMiner`` instead promotes lazily with history replay to keep
+    the compute saving). Exactness for ``state.a1.ovf``-flagged episodes
+    requires an oracle recount over the concatenated history — see
+    ``count_a1``; ``StreamingCounter`` automates it.
+    """
+    if state is not None or return_state:
+        a2_st = state.a2 if state is not None else None
+        a1_st = state.a1 if state is not None else None
+        a2, a2_new = _count_a2(stream, eps, use_kernel=use_kernel,
+                               state=a2_st, return_state=True)
+        exact, a1_new = _count_dispatch(stream, eps, engine=engine,
+                                        use_kernel=use_kernel, lcap=lcap,
+                                        state=a1_st, return_state=True)
+        survived = a2 >= theta
+        counts = np.where(survived, exact, a2)
+        frequent = survived & (counts >= theta)
+        res = TwoPassResult(
+            counts=counts, survived=survived, frequent=frequent,
+            a2_counts=a2,
+            eliminated_frac=float(1.0 - survived.mean()) if eps.M else 0.0)
+        return res, TwoPassState(a2=a2_new, a1=a1_new)
     a2 = _count_a2(stream, eps, use_kernel=use_kernel)
     survived = a2 >= theta
     counts = a2.copy()
@@ -45,7 +86,7 @@ def count_two_pass(stream: EventStream, eps: EpisodeBatch, theta: int,
         idx = np.nonzero(survived)[0]
         sub = eps.select(idx)
         exact = _count_dispatch(stream, sub, engine=engine,
-                                       use_kernel=use_kernel)
+                                use_kernel=use_kernel, lcap=lcap)
         counts[idx] = exact
     frequent = survived & (counts >= theta)
     return TwoPassResult(
@@ -55,11 +96,12 @@ def count_two_pass(stream: EventStream, eps: EpisodeBatch, theta: int,
 
 def count_one_pass(stream: EventStream, eps: EpisodeBatch, theta: int,
                    use_kernel: bool = True,
-                   engine: str = "hybrid") -> TwoPassResult:
+                   engine: str = "hybrid",
+                   lcap: int = DEFAULT_LCAP) -> TwoPassResult:
     """Baseline: run the exact engine on every candidate (paper's "one-pass"
     comparison arm in Fig. 9)."""
     exact = _count_dispatch(stream, eps, engine=engine,
-                                   use_kernel=use_kernel)
+                            use_kernel=use_kernel, lcap=lcap)
     frequent = exact >= theta
     return TwoPassResult(counts=exact, survived=np.ones(eps.M, bool),
                          frequent=frequent, a2_counts=exact,

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.episodes import EpisodeBatch
-from repro.core.events import PAD_TYPE, EventStream
+from repro.core.events import PAD_TYPE, EventStream, count_level1
 
 from .a1_count import a1_count_kernel
 from .a2_count import LANES, PAD_ROW_TYPE, SUBLANES, a2_count_kernel
@@ -85,8 +85,7 @@ def a2_count(stream: EventStream, eps: EpisodeBatch,
     ``eps`` must already be relaxed (tlo == 0). Returns int64[M]."""
     interpret = _mode(force)
     if eps.N == 1:
-        return np.array([(stream.types == e).sum() for e in eps.etypes[:, 0]],
-                        dtype=np.int64)
+        return count_level1(stream, eps.etypes[:, 0])
     et, tlo, thi = episode_layout(eps, inclusive_lower=True)
     ev = event_layout(stream, with_dup=False)
     out = a2_count_kernel(et, tlo, thi, ev, n_levels=eps.N,
@@ -101,9 +100,8 @@ def a1_count(stream: EventStream, eps: EpisodeBatch, lcap: int = 4,
     exactness-restoring fallback on flagged episodes."""
     interpret = _mode(force)
     if eps.N == 1:
-        counts = np.array(
-            [(stream.types == e).sum() for e in eps.etypes[:, 0]], np.int64)
-        return counts, np.zeros(eps.M, dtype=bool)
+        return count_level1(stream, eps.etypes[:, 0]), \
+            np.zeros(eps.M, dtype=bool)
     et, tlo, thi = episode_layout(eps, inclusive_lower=False)
     ev = event_layout(stream, with_dup=True)
     cnt, ovf = a1_count_kernel(et, tlo, thi, ev, n_levels=eps.N, lcap=lcap,

@@ -11,9 +11,62 @@ within k tokens") — used by examples/chip_on_chip.py.
 
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
 from repro.core.events import EventStream
+
+
+class ThroughputMeter:
+    """Sustained events/sec accounting for the streaming loop.
+
+    The chip-on-chip constraint is *sustained* throughput — the miner keeps
+    up with the MEA only if events/sec over the whole session stays above
+    the acquisition rate, not just within one warm window. Wrap each
+    window's processing in ``start()``/``stop(n_events)``; ``summary()``
+    reports both the sustained rate and the steady-state rate with the
+    first (compile-warming) window excluded.
+    """
+
+    def __init__(self):
+        self.rows: list[tuple[int, float]] = []  # (n_events, seconds)
+        self._t0: float | None = None
+
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def stop(self, n_events: int) -> float:
+        if self._t0 is None:
+            raise RuntimeError("stop() without start()")
+        dt = time.perf_counter() - self._t0
+        self._t0 = None
+        self.rows.append((int(n_events), dt))
+        return dt
+
+    @property
+    def events(self) -> int:
+        return sum(n for n, _ in self.rows)
+
+    @property
+    def seconds(self) -> float:
+        return sum(dt for _, dt in self.rows)
+
+    @property
+    def events_per_sec(self) -> float:
+        return self.events / self.seconds if self.seconds > 0 else 0.0
+
+    def summary(self) -> dict:
+        warm = self.rows[1:] if len(self.rows) > 1 else self.rows
+        warm_ev = sum(n for n, _ in warm)
+        warm_s = sum(dt for _, dt in warm)
+        return {
+            "windows": len(self.rows),
+            "events": self.events,
+            "seconds": self.seconds,
+            "events_per_sec": self.events_per_sec,
+            "steady_events_per_sec": warm_ev / warm_s if warm_s > 0 else 0.0,
+        }
 
 
 def routing_events(topk_indices: np.ndarray, num_experts: int,

@@ -1,7 +1,13 @@
 """Property-based tests (hypothesis) for the mining engine's invariants."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis; deterministic coverage of the "
+           "same invariants lives in test_core_counting/test_streaming")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (EpisodeBatch, EventStream, count_a1, count_a2,
                         count_a1_sequential, count_a2_sequential,

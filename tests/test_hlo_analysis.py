@@ -37,6 +37,8 @@ SCRIPT = textwrap.dedent("""
     comp = jax.jit(f, in_shardings=(w_sh, x_sh)).lower(w, x).compile()
     s = analyze(comp.as_text())
     cost = comp.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older JAX: one dict per device
+        cost = cost[0]
     print(json.dumps({
         "dot_flops": s.dot_flops,
         "collective_bytes": s.collective_bytes,
