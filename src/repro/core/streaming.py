@@ -62,7 +62,9 @@ concatenated stream**:
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import hashlib
 import time
 
 import jax
@@ -72,9 +74,10 @@ import numpy as np
 from . import candidates as _cand
 from .count_a1 import (A1State, DEFAULT_LCAP, _a1_carry_scan, count_a1,
                        init_a1_state)
-from .count_a2 import count_single_slot, init_a2_state
+from .count_a2 import A2State, count_single_slot, init_a2_state
 from .episodes import EpisodeBatch
-from .events import PAD_TYPE, EventStream, count_level1, type_histogram
+from .events import (PAD_TYPE, TIME_NEG_INF, EventStream, count_level1,
+                     type_histogram)
 from .hybrid import crossover
 from .mapconcat import _map_all_segments, fold_pair
 from .miner import LevelStats, MiningResult
@@ -105,6 +108,121 @@ def _split_tie_tail(types: np.ndarray, times: np.ndarray):
     return (types[:cut], times[:cut]), (types[cut:], times[cut:])
 
 
+def _opt_pack(v) -> np.ndarray:
+    """Optional int → i64[0 or 1] (checkpointable encoding of None)."""
+    return np.asarray([] if v is None else [int(v)], np.int64)
+
+
+def _opt_unpack(a) -> int | None:
+    a = np.asarray(a).reshape(-1)
+    return None if a.size == 0 else int(a[0])
+
+
+def _state_sub(d: dict, prefix: str) -> dict:
+    """Slice a flat state dict down to the keys under ``prefix``."""
+    return {k[len(prefix):]: v for k, v in d.items() if k.startswith(prefix)}
+
+
+class _OracleA1:
+    """Exact Algorithm-1 machine for ONE episode with explicit carried state
+    (``ref.count_a1_sequential``, stateful form).
+
+    Bounded-memory recovery rests on this: a flagged episode's count is
+    restored by replaying only the retained suffix from its known-exact
+    state at the suffix base, instead of re-scanning the whole stream from
+    genesis. ``lists[i]`` holds the level-``i`` partial-occurrence
+    timestamps in chronological order (the oracle walks them newest-first).
+    """
+
+    __slots__ = ("et", "tlo", "thi", "n", "lists", "count")
+
+    def __init__(self, etypes, tlo, thi, lists=None, count: int = 0):
+        self.et = [int(x) for x in np.asarray(etypes).reshape(-1)]
+        self.tlo = [int(x) for x in np.asarray(tlo).reshape(-1)]
+        self.thi = [int(x) for x in np.asarray(thi).reshape(-1)]
+        self.n = len(self.et)
+        self.lists = ([list(lst) for lst in lists] if lists is not None
+                      else [[] for _ in range(self.n)])
+        self.count = int(count)
+
+    def copy(self) -> "_OracleA1":
+        return _OracleA1(self.et, self.tlo, self.thi, self.lists, self.count)
+
+    def feed(self, types: np.ndarray, times: np.ndarray) -> int:
+        """Scan a chunk of events; returns the cumulative exact count."""
+        n, et, tlo, thi = self.n, self.et, self.tlo, self.thi
+        s, count = self.lists, self.count
+        for e, t in zip(np.asarray(types).tolist(),
+                        np.asarray(times).tolist()):
+            if e < 0:  # PAD_TYPE
+                continue
+            completed = False
+            for i in range(n - 1, -1, -1):  # top-down over levels
+                if e != et[i]:
+                    continue
+                if i == 0:
+                    s[0].append(t)
+                    continue
+                for t_prev in reversed(s[i - 1]):
+                    if tlo[i - 1] < t - t_prev <= thi[i - 1]:
+                        if i == n - 1:
+                            count += 1
+                            s = [[] for _ in range(n)]
+                            completed = True
+                        else:
+                            s[i].append(t)
+                        break
+                if completed:
+                    break
+        self.lists, self.count = s, count
+        return count
+
+    def pruned(self, t_frontier: int) -> list[list[int]]:
+        """Live entries only: a level-``i`` entry ``v`` is dead once
+        ``t - v > thi[i]`` for every future ``t >= t_frontier`` (its sole
+        consumer is level i+1 within ``thi[i]``)."""
+        out = []
+        for i in range(self.n):
+            if i >= self.n - 1:
+                out.append([])  # the top level never stores
+            else:
+                out.append([v for v in self.lists[i]
+                            if t_frontier - v <= self.thi[i]])
+        return out
+
+
+def _lists_from_slots(s_row: np.ndarray, ptr_row: np.ndarray):
+    """Bounded circular buffers → oracle lists (chronological order).
+
+    Valid as an *exact* oracle seed only for an unflagged episode: with
+    ``ovf`` clear every eviction so far was provably dead, so the surviving
+    entries are behaviorally complete state. Slot ``ptr`` is the next write
+    slot, hence slots ptr, ptr+1, … (mod cap) run oldest→newest."""
+    n, cap = s_row.shape
+    lists = []
+    for lvl in range(n):
+        p = int(ptr_row[lvl])
+        vals = [int(s_row[lvl, (p + k) % cap]) for k in range(cap)]
+        lists.append([v for v in vals if v > int(TIME_NEG_INF)])
+    return lists
+
+
+def _slots_from_lists(lists, lcap: int):
+    """Oracle lists → bounded circular buffers, or None if any level's live
+    entries overflow ``lcap`` (the episode then stays in the oracle
+    escrow)."""
+    n = len(lists)
+    s = np.full((n, lcap), TIME_NEG_INF, np.int32)
+    ptr = np.zeros(n, np.int32)
+    for lvl, vals in enumerate(lists):
+        if len(vals) > lcap:
+            return None
+        for k, v in enumerate(vals):
+            s[lvl, k] = v
+        ptr[lvl] = len(vals) % lcap
+    return s, ptr
+
+
 @dataclasses.dataclass
 class _Staged:
     """A window prepared for dispatch: holdback applied, history recorded,
@@ -130,16 +248,24 @@ class StreamingCounter:
     def __init__(self, eps: EpisodeBatch, engine: str = "hybrid",
                  lcap: int = DEFAULT_LCAP, num_segments: int = 8,
                  use_kernel: bool = False, keep_history: bool = True,
-                 min_bucket: int = 128):
+                 min_bucket: int = 128, executor=None,
+                 checkpoint_interval: int | None = None):
         if engine not in ("ptpe", "mapconcatenate", "hybrid"):
             raise ValueError(f"unknown engine {engine!r}")
+        if checkpoint_interval is not None and checkpoint_interval < 1:
+            raise ValueError("checkpoint_interval must be >= 1")
         self.eps = eps
         self.lcap = lcap
         self.num_segments = num_segments
         self.use_kernel = use_kernel
         self.keep_history = keep_history
         self.min_bucket = min_bucket
-        self.snapshots: list[np.ndarray] = []  # exact cum counts per window
+        self.executor = executor
+        self.ckpt_interval = checkpoint_interval
+        self.bounded = checkpoint_interval is not None
+        # exact cum counts per window (bounded mode caps the tail retained)
+        self.snapshots = (collections.deque(maxlen=8) if self.bounded
+                          else [])
         self.windows_seen = 0
         self.finalized = False
         self._num_types: int | None = None
@@ -169,6 +295,19 @@ class StreamingCounter:
             self._tau_c: int | None = None
             self._buf_t = _EMPTY_I32  # committed-lookback + pending events
             self._buf_tt = _EMPTY_I32
+        if self.bounded:
+            # suffix-only retention: fed chunks since the last machine-state
+            # checkpoint, the checkpointed state itself, and the oracle
+            # escrow for episodes whose exact lists overflow lcap
+            self._suffix: list[tuple[np.ndarray, np.ndarray]] = []
+            self._escrow: dict[int, _OracleA1] = {}
+            self._base_consumed = 0
+            self._wsb = 0  # fed windows since the last base advance
+            self._bstate = {
+                "s": np.full((eps.M, eps.N, lcap), TIME_NEG_INF, np.int32),
+                "ptr": np.zeros((eps.M, eps.N), np.int32),
+                "count": np.zeros(eps.M, np.int32),
+                "ovf": np.zeros(eps.M, bool)}
 
     # ------------------------------------------------------------ ingest
 
@@ -194,7 +333,7 @@ class StreamingCounter:
                     f"(window starts at {int(tt[0])} < frontier "
                     f"{self._t_last}); dedup overlapping windows first")
             self._t_last = int(tt[-1])
-            if self.keep_history:
+            if self.keep_history and not self.bounded:
                 self._hist.append((t, tt))
         chunk_t = np.concatenate([self._held_t, t])
         chunk_tt = np.concatenate([self._held_tt, tt])
@@ -204,6 +343,11 @@ class StreamingCounter:
             feed, held = _split_tie_tail(chunk_t, chunk_tt)
         self._held_t, self._held_tt = held
         n = feed[0].size
+        if self.bounded and self.engine != "level1" and n:
+            # fed (post-holdback) chunks: exactly what the machines consume,
+            # so a suffix replay from the base state reproduces the scans
+            self._suffix.append((np.asarray(feed[0], np.int32).copy(),
+                                 np.asarray(feed[1], np.int32).copy()))
         if self.engine == "ptpe" and n:
             b = bucket_size(n, self.min_bucket)
             ft = np.full(b, PAD_TYPE, np.int32)
@@ -226,13 +370,20 @@ class StreamingCounter:
         if self.engine == "ptpe":
             if staged.n:
                 st = self._state
-                s, ptr, c, ovf = _a1_carry_scan()(
-                    self._et, self._tlo, self._thi,
-                    staged.feed_types, staged.feed_times,
-                    st.s, st.ptr, st.count, st.ovf)
+                args = (self._et, self._tlo, self._thi,
+                        staged.feed_types, staged.feed_times,
+                        st.s, st.ptr, st.count, st.ovf)
+                if self.executor is not None:
+                    s, ptr, c, ovf = self.executor.a1_scan(args)
+                else:
+                    s, ptr, c, ovf = _a1_carry_scan()(*args)
                 self._state = A1State(s=s, ptr=ptr, count=c, ovf=ovf)
-            return
-        self._dispatch_mapc(staged)
+        else:
+            self._dispatch_mapc(staged)
+        if self.bounded:
+            self._wsb += 1
+            if staged.final or self._wsb >= self.ckpt_interval:
+                self._advance_base()
 
     def _dispatch_mapc(self, staged: _Staged) -> None:
         if staged.n:
@@ -270,9 +421,12 @@ class StreamingCounter:
         for i in range(q):
             wt[i, : hi[i] - lo[i]] = self._buf_t[lo[i]: hi[i]]
             wtt[i, : hi[i] - lo[i]] = self._buf_tt[lo[i]: hi[i]]
-        a, c, b, ovf = _map_all_segments(
-            jnp.asarray(wt), jnp.asarray(wtt), self._et, self._tlo,
-            self._thi, jnp.asarray(tau), self._w_dev, self.lcap)
+        margs = (jnp.asarray(wt), jnp.asarray(wtt), self._et, self._tlo,
+                 self._thi, jnp.asarray(tau), self._w_dev)
+        if self.executor is not None:
+            a, c, b, ovf = self.executor.mapc_scan(margs, self.lcap)
+        else:
+            a, c, b, ovf = _map_all_segments(*margs, self.lcap)
         self._ovf |= np.asarray(ovf.any(axis=(0, 1)))
         i0 = 0
         if self._carry is None:
@@ -305,7 +459,10 @@ class StreamingCounter:
             c = np.asarray(self._carry[1][0], np.int64)
             flagged = np.asarray(self._carry[3][0]) | self._ovf
         if flagged.any():
-            c = self._restore_exact(c, flagged)
+            if self.bounded:
+                c = self._restore_exact_bounded(c.copy(), flagged)
+            else:
+                c = self._restore_exact(c, flagged)
         return c
 
     def _restore_exact(self, c: np.ndarray, flagged: np.ndarray):
@@ -332,6 +489,130 @@ class StreamingCounter:
                           use_kernel=self.use_kernel)
         return c
 
+    # ------------------------------------------------- bounded memory
+
+    def _suffix_concat(self) -> tuple[np.ndarray, np.ndarray]:
+        if not self._suffix:
+            return _EMPTY_I32, _EMPTY_I32
+        return (np.concatenate([t for t, _ in self._suffix]),
+                np.concatenate([tt for _, tt in self._suffix]))
+
+    def _suffix_take(self, tt_all: np.ndarray) -> int:
+        """How many retained-suffix events the recovery replay must cover:
+        everything the machines consumed since the base (ptpe), or the
+        committed prefix up to the commit frontier τ_c (mapconcatenate) —
+        never the events ``run()`` has merely prefetched."""
+        if self.engine == "ptpe":
+            return self._consumed - self._base_consumed
+        if self._tau_c is None:
+            return 0
+        return int(np.searchsorted(tt_all, self._tau_c, side="right"))
+
+    def _restore_exact_bounded(self, c: np.ndarray, flagged: np.ndarray):
+        """Recount flagged episodes by replaying only the retained suffix
+        from their known-exact base state (checkpointed machine state for
+        episodes unflagged at the base, oracle escrow otherwise)."""
+        t_all, tt_all = self._suffix_concat()
+        take = self._suffix_take(tt_all)
+        for i in np.nonzero(flagged)[0].tolist():
+            orc = self._escrow.get(i)
+            if orc is not None:
+                orc = orc.copy()  # counts() is a read — never mutate escrow
+            else:
+                orc = _OracleA1(
+                    self.eps.etypes[i], self.eps.tlo[i], self.eps.thi[i],
+                    _lists_from_slots(self._bstate["s"][i],
+                                      self._bstate["ptr"][i]),
+                    int(self._bstate["count"][i]))
+            c[i] = orc.feed(t_all[:take], tt_all[:take])
+        return c
+
+    def _shadow_scan(self, feed_t: np.ndarray, feed_tt: np.ndarray):
+        """Advance the mapconcatenate engine's base shadow (a bounded-list
+        A1 state) over the consumed suffix in one carried scan — the
+        per-interval machine-state checkpoint the exact recovery replays
+        from."""
+        b = self._bstate
+        if feed_t.size == 0:
+            return (b["s"].copy(), b["ptr"].copy(), b["count"].copy(),
+                    b["ovf"].copy())
+        nb = bucket_size(feed_t.size, self.min_bucket)
+        ft = np.full(nb, PAD_TYPE, np.int32)
+        ftt = np.full(nb, feed_tt[-1], np.int32)
+        ft[:feed_t.size] = feed_t
+        ftt[:feed_tt.size] = feed_tt
+        s, ptr, cnt, ovf = _a1_carry_scan()(
+            self._et, self._tlo, self._thi, jnp.asarray(ft),
+            jnp.asarray(ftt), jnp.asarray(b["s"]), jnp.asarray(b["ptr"]),
+            jnp.asarray(b["count"]), jnp.asarray(b["ovf"]))
+        return (np.asarray(s).copy(), np.asarray(ptr).copy(),
+                np.asarray(cnt).copy(), np.asarray(ovf).copy())
+
+    def _advance_base(self) -> None:
+        """Per-interval machine-state checkpoint (bounded mode).
+
+        Resolves every flagged episode exactly — replaying the retained
+        suffix from the base state through its oracle — then folds resolved
+        machines back into the vectorized state (flags cleared), keeps
+        unresolvable ones in the oracle escrow, and drops the consumed
+        suffix. Retained history is thereby O(checkpoint interval) windows
+        regardless of stream length, and flags no longer accumulate into
+        ever-growing genesis recounts."""
+        self._wsb = 0
+        t_all, tt_all = self._suffix_concat()
+        take = self._suffix_take(tt_all)
+        feed_t, feed_tt = t_all[:take], tt_all[:take]
+        if self.engine == "ptpe":
+            st = self._state
+            s = np.asarray(st.s).copy()
+            ptr = np.asarray(st.ptr).copy()
+            cnt = np.asarray(st.count).copy()
+            ovf = np.asarray(st.ovf).copy()
+        else:
+            s, ptr, cnt, ovf = self._shadow_scan(feed_t, feed_tt)
+        pend = sorted(set(np.nonzero(ovf)[0].tolist()) | set(self._escrow))
+        if pend:
+            t_f = int(feed_tt[-1]) if take else None
+            escrow: dict[int, _OracleA1] = {}
+            for i in pend:
+                orc = self._escrow.get(i)
+                if orc is None:
+                    orc = _OracleA1(
+                        self.eps.etypes[i], self.eps.tlo[i], self.eps.thi[i],
+                        _lists_from_slots(self._bstate["s"][i],
+                                          self._bstate["ptr"][i]),
+                        int(self._bstate["count"][i]))
+                orc.feed(feed_t, feed_tt)
+                cnt[i] = orc.count
+                lists = orc.pruned(t_f) if t_f is not None else orc.lists
+                fit = _slots_from_lists(lists, self.lcap)
+                if fit is None:
+                    escrow[i] = orc
+                    ovf[i] = True
+                else:
+                    s[i], ptr[i] = fit
+                    ovf[i] = False
+            self._escrow = escrow
+        self._bstate = {"s": s, "ptr": ptr, "count": cnt, "ovf": ovf}
+        self._base_consumed += take
+        self._suffix = ([(t_all[take:], tt_all[take:])]
+                        if t_all.size > take else [])
+        if self.engine == "ptpe":
+            # fold the resolution back so future scans run from exact state
+            self._state = A1State(
+                s=jnp.asarray(s), ptr=jnp.asarray(ptr),
+                count=jnp.asarray(cnt), ovf=jnp.asarray(ovf))
+
+    @property
+    def retained_windows(self) -> int:
+        """Raw event-chunk windows currently held for exact recovery —
+        O(checkpoint interval) in bounded mode, O(stream) otherwise."""
+        if self.engine == "level1":
+            return 0
+        if self.bounded:
+            return len(self._suffix)
+        return len(self._hist)
+
     def _snapshot(self) -> np.ndarray:
         out = self.counts()
         self.snapshots.append(out)
@@ -339,6 +620,134 @@ class StreamingCounter:
         return out
 
     # ----------------------------------------------------------- public
+
+    def fast_forward(self, p: int) -> None:
+        """Declare the first ``p`` miner windows out of scope for this
+        (virgin) counter — bounded-history mining starts late-born counters
+        at the retained-suffix horizon instead of replaying from genesis."""
+        if self.windows_seen or self._consumed:
+            raise RuntimeError("fast_forward on a non-virgin counter")
+        self.windows_seen = p
+
+    def state_dict(self) -> dict[str, np.ndarray]:
+        """Dynamic machine state as a flat ``{str: np.ndarray}`` pytree —
+        checkpointable through ``checkpoint.ckpt`` and restorable with
+        ``load_state_dict`` onto a counter constructed with the same
+        configuration. Every leaf is an owned copy (safe to stash as a
+        retry snapshot while the counter keeps running)."""
+        d = {"windows_seen": np.asarray(self.windows_seen, np.int64),
+             "finalized": np.asarray(int(self.finalized), np.int64),
+             "consumed": np.asarray(self._consumed, np.int64),
+             "num_types": _opt_pack(self._num_types),
+             "t_last": _opt_pack(self._t_last),
+             "held_t": self._held_t.copy(),
+             "held_tt": self._held_tt.copy()}
+        for j, snap in enumerate(list(self.snapshots)[-3:]):
+            d[f"snap/{j}"] = np.asarray(snap, np.int64).copy()
+        if self.engine == "level1":
+            d["cum"] = self._cum.copy()
+            return d
+        if self.engine == "ptpe":
+            st = self._state
+            d["s"] = np.asarray(st.s).copy()
+            d["ptr"] = np.asarray(st.ptr).copy()
+            d["count"] = np.asarray(st.count).copy()
+            d["ovf"] = np.asarray(st.ovf).copy()
+        else:
+            d["mapc_ovf"] = self._ovf.copy()
+            d["tau_c"] = _opt_pack(self._tau_c)
+            d["buf_t"] = self._buf_t.copy()
+            d["buf_tt"] = self._buf_tt.copy()
+            if self._carry is not None:
+                for name, arr in zip(("a", "c", "b", "f"), self._carry):
+                    d[f"carry/{name}"] = np.asarray(arr).copy()
+        if self.bounded:
+            for k, v in self._bstate.items():
+                d[f"base/{k}"] = v.copy()
+            d["base_consumed"] = np.asarray(self._base_consumed, np.int64)
+            d["wsb"] = np.asarray(self._wsb, np.int64)
+            for j, (t, tt) in enumerate(self._suffix):
+                d[f"suffix/{j}/t"] = t.copy()
+                d[f"suffix/{j}/tt"] = tt.copy()
+            for i, orc in self._escrow.items():
+                d[f"escrow/{i}/count"] = np.asarray(orc.count, np.int64)
+                for j, lst in enumerate(orc.lists):
+                    d[f"escrow/{i}/l{j}"] = np.asarray(lst, np.int64)
+        elif self.keep_history:
+            for j, (t, tt) in enumerate(self._hist):
+                d[f"hist/{j}/t"] = t.copy()
+                d[f"hist/{j}/tt"] = tt.copy()
+        return d
+
+    def load_state_dict(self, d: dict) -> None:
+        """Inverse of ``state_dict`` (configuration must match)."""
+        d = {k: np.asarray(v) for k, v in d.items()}
+        self.windows_seen = int(d["windows_seen"])
+        self.finalized = bool(int(d["finalized"]))
+        self._consumed = int(d["consumed"])
+        self._num_types = _opt_unpack(d["num_types"])
+        self._t_last = _opt_unpack(d["t_last"])
+        self._held_t = d["held_t"].astype(np.int32)
+        self._held_tt = d["held_tt"].astype(np.int32)
+        snaps = [d[f"snap/{j}"].astype(np.int64) for j in range(3)
+                 if f"snap/{j}" in d]
+        if self.bounded:
+            self.snapshots = collections.deque(snaps,
+                                               maxlen=self.snapshots.maxlen)
+        else:
+            self.snapshots = snaps
+        if self.engine == "level1":
+            self._cum = d["cum"].astype(np.int64)
+            return
+        if self.engine == "ptpe":
+            self._state = A1State(
+                s=jnp.asarray(d["s"].astype(np.int32)),
+                ptr=jnp.asarray(d["ptr"].astype(np.int32)),
+                count=jnp.asarray(d["count"].astype(np.int32)),
+                ovf=jnp.asarray(d["ovf"].astype(bool)))
+        else:
+            self._ovf = d["mapc_ovf"].astype(bool)
+            self._tau_c = _opt_unpack(d["tau_c"])
+            self._buf_t = d["buf_t"].astype(np.int32)
+            self._buf_tt = d["buf_tt"].astype(np.int32)
+            if "carry/a" in d:
+                self._carry = tuple(
+                    jnp.asarray(d[f"carry/{name}"].astype(
+                        bool if name == "f" else np.int32))
+                    for name in ("a", "c", "b", "f"))
+            else:
+                self._carry = None
+        if self.bounded:
+            self._bstate = {
+                "s": d["base/s"].astype(np.int32),
+                "ptr": d["base/ptr"].astype(np.int32),
+                "count": d["base/count"].astype(np.int32),
+                "ovf": d["base/ovf"].astype(bool)}
+            self._base_consumed = int(d["base_consumed"])
+            self._wsb = int(d["wsb"])
+            self._suffix = []
+            j = 0
+            while f"suffix/{j}/t" in d:
+                self._suffix.append((d[f"suffix/{j}/t"].astype(np.int32),
+                                     d[f"suffix/{j}/tt"].astype(np.int32)))
+                j += 1
+            self._escrow = {}
+            for i in sorted({int(k.split("/")[1]) for k in d
+                             if k.startswith("escrow/")}):
+                lists, j = [], 0
+                while f"escrow/{i}/l{j}" in d:
+                    lists.append([int(x) for x in d[f"escrow/{i}/l{j}"]])
+                    j += 1
+                self._escrow[i] = _OracleA1(
+                    self.eps.etypes[i], self.eps.tlo[i], self.eps.thi[i],
+                    lists, int(d[f"escrow/{i}/count"]))
+        elif self.keep_history:
+            self._hist = []
+            j = 0
+            while f"hist/{j}/t" in d:
+                self._hist.append((d[f"hist/{j}/t"].astype(np.int32),
+                                   d[f"hist/{j}/tt"].astype(np.int32)))
+                j += 1
 
     def update(self, window: EventStream, final: bool = False) -> np.ndarray:
         """Ingest one window; returns exact cumulative counts. ``final``
@@ -386,17 +795,23 @@ class StreamingA2Counter:
     level is complete state (Obs. 5.1), so chunked counting is
     unconditionally bit-exact — no holdback, no flags, no history."""
 
-    def __init__(self, eps: EpisodeBatch, min_bucket: int = 128):
+    def __init__(self, eps: EpisodeBatch, min_bucket: int = 128,
+                 executor=None, bounded: bool = False):
         self.eps = eps
         self._relaxed = eps.relaxed()
         self.min_bucket = min_bucket
-        self.snapshots: list[np.ndarray] = []
+        self.executor = executor
+        self.bounded = bounded
+        self.snapshots = collections.deque(maxlen=8) if bounded else []
         self.windows_seen = 0
         if eps.N == 1:
             self._state = None
             self._cum = np.zeros(eps.M, np.int64)
         else:
             self._state = init_a2_state(self._relaxed)
+            self._et = jnp.asarray(self._relaxed.etypes)
+            self._tlo = jnp.asarray(self._relaxed.tlo) - 1  # inclusive lower
+            self._thi = jnp.asarray(self._relaxed.thi)
 
     def update(self, window: EventStream, final: bool = False) -> np.ndarray:
         real = window.types != PAD_TYPE
@@ -411,12 +826,56 @@ class StreamingA2Counter:
             sub = EventStream(window.types[real], window.times[real],
                               window.num_types)
             padded = sub.padded_to(bucket_size(n, self.min_bucket))
-            out, self._state = count_single_slot(
-                padded, self._relaxed, inclusive_lower=True,
-                state=self._state, return_state=True)
+            if self.executor is not None:
+                st = self._state
+                s, c = self.executor.a2_scan(
+                    (self._et, self._tlo, self._thi,
+                     jnp.asarray(padded.types), jnp.asarray(padded.times),
+                     st.s, st.count))
+                self._state = A2State(s=s, count=c)
+                out = np.asarray(c, np.int64)
+            else:
+                out, self._state = count_single_slot(
+                    padded, self._relaxed, inclusive_lower=True,
+                    state=self._state, return_state=True)
         self.snapshots.append(out)
         self.windows_seen += 1
         return out
+
+    def fast_forward(self, p: int) -> None:
+        """See ``StreamingCounter.fast_forward``."""
+        if self.windows_seen:
+            raise RuntimeError("fast_forward on a non-virgin counter")
+        self.windows_seen = p
+
+    def state_dict(self) -> dict[str, np.ndarray]:
+        d = {"windows_seen": np.asarray(self.windows_seen, np.int64)}
+        for j, snap in enumerate(list(self.snapshots)[-3:]):
+            d[f"snap/{j}"] = np.asarray(snap, np.int64).copy()
+        if self.eps.N == 1:
+            d["cum"] = self._cum.copy()
+        else:
+            d["s"] = np.asarray(self._state.s).copy()
+            d["count"] = np.asarray(self._state.count).copy()
+        return d
+
+    def load_state_dict(self, d: dict) -> None:
+        d = {k: np.asarray(v) for k, v in d.items()}
+        self.windows_seen = int(d["windows_seen"])
+        snaps = [d[f"snap/{j}"].astype(np.int64) for j in range(3)
+                 if f"snap/{j}" in d]
+        if self.bounded:
+            self.snapshots = collections.deque(snaps,
+                                               maxlen=self.snapshots.maxlen)
+        else:
+            self.snapshots = snaps
+        if self.eps.N == 1:
+            self._cum = d["cum"].astype(np.int64)
+        else:
+            self._state = dataclasses.replace(
+                self._state,
+                s=jnp.asarray(d["s"].astype(np.int32)),
+                count=jnp.asarray(d["count"].astype(np.int32)))
 
 
 class StreamingMiner:
@@ -437,16 +896,36 @@ class StreamingMiner:
     Candidate sets evolve with the frequent sets, so counters are keyed by
     batch content; a batch (or a two-pass promotion) appearing mid-stream
     replays the retained window history to catch its machines up — exactness
-    is never traded for the cull. Memory grows with history; windowed
-    eviction is a ROADMAP follow-on.
+    is never traded for the cull.
+
+    ``history_limit=K`` bounds memory for long-lived sessions: the retained
+    window history, every counter's recovery suffix, and the counter table
+    itself stay O(K) instead of O(stream length). Counters checkpoint their
+    machine state every K windows and recover flagged episodes by replaying
+    only the suffix since the checkpoint (see ``_advance_base``); growing a
+    tracked set appends a *fragment* counter for just the new episodes, so
+    existing counters are never rebuilt and every counter stays exact from
+    its own birth. The semantic trade, precisely: a counter born after the
+    horizon — a newly promoted subset, or a whole candidate batch whose key
+    first appears (or reappears after >K idle windows, which evicts it) —
+    counts from the retained suffix, not from genesis. Per-window deltas
+    re-synchronize within the replayed suffix (windows are much longer
+    than episode spans), so ``mode="per_window"`` serving stays exact in
+    practice even under candidate churn; ``mode="cumulative"`` totals are
+    exact only for counters whose key lineage stays within the horizon —
+    cumulative-exact bounded mining under churn would need cross-key
+    machine-state transplant (ROADMAP follow-on).
     """
 
     def __init__(self, intervals, theta: int, max_level: int = 4,
                  mode: str = "per_window", engine: str = "hybrid",
                  two_pass: bool = True, use_kernel: bool = True,
-                 lcap: int = DEFAULT_LCAP, num_segments: int = 8):
+                 lcap: int = DEFAULT_LCAP, num_segments: int = 8,
+                 history_limit: int | None = None, executor=None):
         if mode not in ("per_window", "cumulative"):
             raise ValueError(f"unknown mode {mode!r}")
+        if history_limit is not None and history_limit < 1:
+            raise ValueError("history_limit must be >= 1")
         self.intervals = intervals
         self.theta = theta
         self.max_level = max_level
@@ -456,7 +935,10 @@ class StreamingMiner:
         self.use_kernel = use_kernel
         self.lcap = lcap
         self.num_segments = num_segments
+        self.history_limit = history_limit
+        self.executor = executor
         self._history: list[EventStream] = []
+        self._hist_base = 0  # miner windows dropped from the history head
         self._p = 0
         self._num_types: int | None = None
         self._l1_cum: np.ndarray | None = None
@@ -465,18 +947,45 @@ class StreamingMiner:
         self._exact: dict = {}    # batch key -> (tracked idx, StreamingCounter)
         self._known: dict = {}    # batch key -> exact cum known last window
         self._known2: dict = {}   # batch key -> exact cum known 2 windows ago
+        self._last_seen: dict = {}  # batch key -> last window it was counted
 
     @staticmethod
     def _key(eps: EpisodeBatch):
         return (eps.N, eps.etypes.tobytes(), eps.tlo.tobytes(),
                 eps.thi.tobytes())
 
+    def _make_counter(self, eps: EpisodeBatch) -> StreamingCounter:
+        return StreamingCounter(
+            eps, engine=self.engine, lcap=self.lcap,
+            num_segments=self.num_segments, use_kernel=self.use_kernel,
+            executor=self.executor, checkpoint_interval=self.history_limit)
+
+    def _update_fragments(self, frags, window: EventStream, final: bool):
+        """Advance every fragment of a tracked set; returns the
+        concatenated (cumulative, window p-1, window p-2) count vectors in
+        tracked order (zeros where a fragment is too young to have the
+        older snapshot)."""
+        cums, prevs, prev2s = [], [], []
+        for f in frags:
+            cums.append(self._sync(f, window, final))
+            zeros = np.zeros(f.eps.M, np.int64)
+            prevs.append(f.snapshots[-2] if len(f.snapshots) >= 2
+                         else zeros)
+            prev2s.append(f.snapshots[-3] if len(f.snapshots) >= 3
+                          else zeros)
+        return (np.concatenate(cums), np.concatenate(prevs),
+                np.concatenate(prev2s))
+
     def _sync(self, counter, window: EventStream, final: bool) -> np.ndarray:
         """Feed any history windows this counter has not seen (a batch that
-        first appears — or grows — at window p replays windows 0..p-1), then
-        the current window."""
+        first appears — or grows — at window p replays windows 0..p-1; with
+        ``history_limit`` set, only the retained suffix), then the current
+        window."""
+        if counter.windows_seen < self._hist_base:
+            counter.fast_forward(self._hist_base)
         while counter.windows_seen < self._p:
-            counter.update(self._history[counter.windows_seen])
+            counter.update(self._history[counter.windows_seen
+                                         - self._hist_base])
         return counter.update(window, final=final)
 
     def _count_level(self, cand: EpisodeBatch, window: EventStream,
@@ -494,10 +1003,13 @@ class StreamingMiner:
         key = self._key(cand)
         m = cand.M
         zeros = np.zeros(m, np.int64)
+        self._last_seen[key] = self._p
         if self.two_pass:
             a2c = self._a2.get(key)
             if a2c is None:
-                a2c = self._a2[key] = StreamingA2Counter(cand)
+                a2c = self._a2[key] = StreamingA2Counter(
+                    cand, executor=self.executor,
+                    bounded=self.history_limit is not None)
             a2_cum = self._sync(a2c, window, final)
             a2_prev = (a2c.snapshots[-2] if len(a2c.snapshots) >= 2
                        else zeros)
@@ -508,27 +1020,27 @@ class StreamingMiner:
                 survived = a2_cum >= self.theta  # Thm 5.1 on the concat
             tracked_prev = self._exact[key][0] if key in self._exact \
                 else np.empty(0, np.int64)
-            tracked = np.union1d(tracked_prev, np.nonzero(survived)[0])
+            new_ids = np.setdiff1d(np.nonzero(survived)[0], tracked_prev)
+            tracked = np.concatenate([tracked_prev, new_ids])
         else:
             a2_cum = a2_prev = None
             survived = np.ones(m, bool)
             tracked = np.arange(m, dtype=np.int64)
-        ctr = None
         if tracked.size:
-            prev = self._exact.get(key)
-            if prev is not None and prev[0].size == tracked.size:
-                ctr = prev[1]
-            else:
-                ctr = StreamingCounter(
-                    cand.select(tracked), engine=self.engine, lcap=self.lcap,
-                    num_segments=self.num_segments,
-                    use_kernel=self.use_kernel)
-            self._exact[key] = (tracked, ctr)
-            cum_t = self._sync(ctr, window, final)
-            prev_t = (ctr.snapshots[-2] if len(ctr.snapshots) >= 2
-                      else np.zeros(tracked.size, np.int64))
-            prev2_t = (ctr.snapshots[-3] if len(ctr.snapshots) >= 3
-                       else np.zeros(tracked.size, np.int64))
+            # fragment per promotion wave: growing the tracked set never
+            # rebuilds (and never resets) existing counters — only the
+            # newly promoted episodes get a counter, synced over the
+            # retained history. Episodes therefore stay exact from their
+            # own fragment's birth regardless of later promotions (and the
+            # promotion replay cost drops from O(tracked) to O(new)).
+            frags = list(self._exact[key][1]) if key in self._exact else []
+            covered = sum(f.eps.M for f in frags)
+            if covered < tracked.size:
+                frags.append(self._make_counter(
+                    cand.select(tracked[covered:])))
+            self._exact[key] = (tracked, frags)
+            cum_t, prev_t, prev2_t = self._update_fragments(
+                frags, window, final)
         if self.mode == "per_window":
             counts = (a2_cum - a2_prev) if self.two_pass else zeros.copy()
             if tracked.size:
@@ -609,4 +1121,128 @@ class StreamingMiner:
             level += 1
         self._history.append(w)
         self._p += 1
+        if self.history_limit is not None:
+            while len(self._history) > self.history_limit:
+                self._history.pop(0)
+                self._hist_base += 1
+            stale = [k for k, seen in self._last_seen.items()
+                     if self._p - seen > self.history_limit]
+            for k in stale:
+                for dd in (self._a2, self._exact, self._known, self._known2,
+                           self._last_seen):
+                    dd.pop(k, None)
         return MiningResult(frequent=frequent, counts=counts, stats=stats)
+
+    @property
+    def retained_windows(self) -> int:
+        """Raw windows alive anywhere in the miner (shared history plus
+        per-counter recovery suffixes) — the quantity ``history_limit``
+        caps at O(checkpoint interval) instead of O(stream length)."""
+        n = len(self._history)
+        for _, frags in self._exact.values():
+            for ctr in frags:
+                n = max(n, ctr.retained_windows)
+        return n
+
+    @staticmethod
+    def _key_hash(key) -> str:
+        return hashlib.sha1(repr(key).encode()).hexdigest()[:12]
+
+    def state_dict(self) -> dict[str, np.ndarray]:
+        """Full dynamic mining state as a flat ``{str: np.ndarray}`` pytree
+        (counters included), checkpointable through ``checkpoint.ckpt``;
+        ``load_state_dict`` on a miner constructed with the same
+        configuration resumes bit-identically — mid-stream save/restore and
+        the service's retry-from-snapshot both ride on this."""
+        d = {"p": np.asarray(self._p, np.int64),
+             "hist_base": np.asarray(self._hist_base, np.int64),
+             "num_types": _opt_pack(self._num_types)}
+        if self._l1_cum is not None:
+            d["l1_cum"] = self._l1_cum.copy()
+        if self._l1_prev is not None:
+            d["l1_prev"] = self._l1_prev.copy()
+        for j, w in enumerate(self._history):
+            d[f"history/{j}/types"] = w.types.copy()
+            d[f"history/{j}/times"] = w.times.copy()
+        keys = (set(self._a2) | set(self._exact) | set(self._known)
+                | set(self._known2) | set(self._last_seen))
+        for key in keys:
+            h = self._key_hash(key)
+            n = key[0]
+            et = np.frombuffer(key[1], np.int32).reshape(-1, n).copy()
+            m = et.shape[0]
+            d[f"cand/{h}/etypes"] = et
+            d[f"cand/{h}/tlo"] = np.frombuffer(
+                key[2], np.int32).reshape(m, max(n - 1, 0)).copy()
+            d[f"cand/{h}/thi"] = np.frombuffer(
+                key[3], np.int32).reshape(m, max(n - 1, 0)).copy()
+            if key in self._a2:
+                for sk, v in self._a2[key].state_dict().items():
+                    d[f"a2/{h}/{sk}"] = v
+            if key in self._exact:
+                tracked, frags = self._exact[key]
+                d[f"tracked/{h}"] = np.asarray(tracked, np.int64).copy()
+                d[f"fragsizes/{h}"] = np.asarray(
+                    [f.eps.M for f in frags], np.int64)
+                for fi, f in enumerate(frags):
+                    for sk, v in f.state_dict().items():
+                        d[f"exact/{h}/{fi}/{sk}"] = v
+            if key in self._known:
+                d[f"known/{h}"] = self._known[key].copy()
+            if key in self._known2:
+                d[f"known2/{h}"] = self._known2[key].copy()
+            if key in self._last_seen:
+                d[f"seen/{h}"] = np.asarray(self._last_seen[key], np.int64)
+        return d
+
+    def load_state_dict(self, d: dict) -> None:
+        """Inverse of ``state_dict`` (configuration must match)."""
+        d = {k: np.asarray(v) for k, v in d.items()}
+        self._p = int(d["p"])
+        self._hist_base = int(d["hist_base"])
+        self._num_types = _opt_unpack(d["num_types"])
+        self._l1_cum = (d["l1_cum"].astype(np.int64)
+                        if "l1_cum" in d else None)
+        self._l1_prev = (d["l1_prev"].astype(np.int64)
+                         if "l1_prev" in d else None)
+        self._history = []
+        j = 0
+        while f"history/{j}/types" in d:
+            self._history.append(EventStream(
+                d[f"history/{j}/types"].astype(np.int32),
+                d[f"history/{j}/times"].astype(np.int32), self._num_types))
+            j += 1
+        self._a2, self._exact = {}, {}
+        self._known, self._known2, self._last_seen = {}, {}, {}
+        for h in sorted({k.split("/")[1] for k in d
+                         if k.startswith("cand/")}):
+            et = d[f"cand/{h}/etypes"].astype(np.int32)
+            m, n = et.shape
+            cand = EpisodeBatch(
+                et, d[f"cand/{h}/tlo"].astype(np.int32).reshape(m, n - 1),
+                d[f"cand/{h}/thi"].astype(np.int32).reshape(m, n - 1))
+            key = self._key(cand)
+            a2_sub = _state_sub(d, f"a2/{h}/")
+            if a2_sub:
+                a2c = StreamingA2Counter(
+                    cand, executor=self.executor,
+                    bounded=self.history_limit is not None)
+                a2c.load_state_dict(a2_sub)
+                self._a2[key] = a2c
+            if f"tracked/{h}" in d:
+                tracked = d[f"tracked/{h}"].astype(np.int64)
+                frags, ofs = [], 0
+                for fi, sz in enumerate(
+                        d[f"fragsizes/{h}"].astype(np.int64).tolist()):
+                    ctr = self._make_counter(
+                        cand.select(tracked[ofs:ofs + sz]))
+                    ctr.load_state_dict(_state_sub(d, f"exact/{h}/{fi}/"))
+                    frags.append(ctr)
+                    ofs += sz
+                self._exact[key] = (tracked, frags)
+            if f"known/{h}" in d:
+                self._known[key] = d[f"known/{h}"].astype(np.int64)
+            if f"known2/{h}" in d:
+                self._known2[key] = d[f"known2/{h}"].astype(np.int64)
+            if f"seen/{h}" in d:
+                self._last_seen[key] = int(d[f"seen/{h}"])

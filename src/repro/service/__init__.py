@@ -1,0 +1,16 @@
+"""Multi-tenant real-time mining service (arXiv:0905.2203's "accelerator
+service" framing): many concurrent electrode-array sessions share the
+devices through cross-session batched streaming with bounded per-session
+memory."""
+
+from .batcher import CrossSessionBatcher
+from .scheduler import (AdmissionError, BackpressureError,
+                        RoundRobinScheduler, SchedulerPolicy)
+from .server import MiningService
+from .session import MiningSession, SessionConfig, WindowDelta
+
+__all__ = [
+    "MiningService", "MiningSession", "SessionConfig", "WindowDelta",
+    "CrossSessionBatcher", "RoundRobinScheduler", "SchedulerPolicy",
+    "AdmissionError", "BackpressureError",
+]

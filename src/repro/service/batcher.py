@@ -1,0 +1,233 @@
+"""Cross-session batching: one padded, shape-bucketed device batch per
+scan kind, vmapped over a session axis.
+
+The multi-tenant service advances many ``MiningSession``s concurrently.
+Each session's miner bottoms out in a handful of jit'd scans (A1
+bounded-list, A2 single-slot, MapConcatenate segment map); running S
+sessions naively issues S small dispatches per level per window. This
+module is the barrier executor that turns those into one dispatch per
+shape bucket:
+
+* each session step runs in its own worker thread and installs this
+  executor into its counters (``StreamingCounter.executor`` seam);
+* a counter's scan call becomes ``submit()`` — the thread parks on an
+  event;
+* when every in-flight session step is parked (or finished), the *last*
+  arriver becomes the flush leader: it groups the pending requests by
+  shape bucket, stacks each group's operands along a new leading session
+  axis, runs one jit'd ``vmap`` of the underlying scan per bucket, and
+  scatters the per-lane results back.
+
+Every scan in this engine is integer-only (i32 compares/adds, bool
+masks), so the vmapped lane computation is bit-identical to the
+standalone dispatch — the service's exactness guarantee rests on that and
+is asserted by tests/test_service.py. Group sizes are padded to powers of
+two (lane 0 repeated) so jit compiles once per (kind, bucket, S-bucket).
+"""
+
+from __future__ import annotations
+
+import functools
+import threading
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.count_a1 import _a1_scan_core
+from repro.core.count_a2 import _a2_scan_core
+from repro.core.events import TIME_NEG_INF
+from repro.core.mapconcat import _map_all_segments
+from repro.core.streaming import bucket_size
+
+
+@functools.lru_cache(maxsize=None)
+def _vmapped_a1():
+    return jax.jit(jax.vmap(_a1_scan_core))
+
+
+@functools.lru_cache(maxsize=None)
+def _vmapped_a2():
+    return jax.jit(jax.vmap(_a2_scan_core))
+
+
+@functools.lru_cache(maxsize=None)
+def _vmapped_mapc(lcap: int):
+    return jax.jit(jax.vmap(
+        lambda *args: _map_all_segments(*args, lcap)))
+
+
+# per-kind padding specs for the episode (M) axis: (axis in each operand,
+# pad value). Episodes are independent lanes of every scan (no cross-M
+# interaction), so padding rows with inert machines is bit-safe for the
+# real rows — results are sliced back to the caller's M.
+_NEG = int(TIME_NEG_INF)  # "empty slot" filler for padded machine state
+_PAD_A1 = ((0, 0), (0, 0), (0, 1), (None, 0), (None, 0),
+           (0, _NEG), (0, 0), (0, 0), (0, 0))
+_PAD_A2 = ((0, 0), (0, 0), (0, 1), (None, 0), (None, 0),
+           (0, _NEG), (0, 0))
+_PAD_MAPC = ((None, 0), (None, 0), (0, 0), (0, 0), (0, 1), (None, 0),
+             (0, 1))
+
+
+def _pad_m(args, spec, m_to: int):
+    out = []
+    for a, (axis, fill) in zip(args, spec):
+        a = jnp.asarray(a)
+        if axis is None or a.shape[axis] == m_to:
+            out.append(a)
+            continue
+        pad = [(0, 0)] * a.ndim
+        pad[axis] = (0, m_to - a.shape[axis])
+        out.append(jnp.pad(a, pad, constant_values=fill))
+    return tuple(out)
+
+
+class _Request:
+    __slots__ = ("kind", "key", "args", "spec", "static", "m", "mb",
+                 "event", "result", "error")
+
+    def __init__(self, kind, key, args, spec, static, m, mb):
+        self.kind = kind
+        self.key = key
+        self.args = args    # raw (unpadded) operands
+        self.spec = spec    # episode-axis pad spec, applied only on fusion
+        self.static = static
+        self.m = m          # real episode count (fused results sliced back)
+        self.mb = mb        # shared M bucket this request groups under
+        self.event = threading.Event()
+        self.result = None
+        self.error = None
+
+
+class CrossSessionBatcher:
+    """Barrier executor for cross-session scan batching.
+
+    Protocol (driven by the scheduler): call ``begin_step()`` once per
+    session step about to run, run each step in its own thread, have the
+    step call ``end_step()`` when done. Counters inside the step call
+    ``a1_scan``/``a2_scan``/``mapc_scan``, which block until the flush
+    leader executes the batch. Single-request groups fall through to the
+    plain (unvmapped) dispatch so a lone tenant pays no batching tax and
+    shares jit caches with standalone runs.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._pending: list[_Request] = []
+        self._inflight = 0
+        self.batches = 0        # flushes that actually fused >1 request
+        self.fused_requests = 0
+
+    # ------------------------------------------------------------ seams
+
+    def a1_scan(self, args):
+        # (etypes[M,N], tlo, thi, ev_t[L], ev_tt[L], s[M,N,C], ptr, c, ovf)
+        m, n = args[0].shape
+        mb = bucket_size(m, 8)
+        key = ("a1", mb, n, args[3].shape[0], args[5].shape[-1])
+        return self._submit(
+            _Request("a1", key, args, _PAD_A1, None, m, mb))
+
+    def a2_scan(self, args):
+        # (etypes[M,N], tlo, thi, ev_t[L], ev_tt[L], s[M,N], c)
+        m, n = args[0].shape
+        mb = bucket_size(m, 8)
+        key = ("a2", mb, n, args[3].shape[0])
+        return self._submit(
+            _Request("a2", key, args, _PAD_A2, None, m, mb))
+
+    def mapc_scan(self, args, lcap: int):
+        # (wt[Q,L], wtt, etypes[M,N], tlo, thi, tau[Q+1], w[M])
+        m, n = args[2].shape
+        mb = bucket_size(m, 8)
+        key = ("mapc", mb, n, args[0].shape, lcap)
+        return self._submit(
+            _Request("mapc", key, args, _PAD_MAPC, lcap, m, mb))
+
+    # --------------------------------------------------- step accounting
+
+    def begin_step(self) -> None:
+        with self._lock:
+            self._inflight += 1
+
+    def end_step(self) -> None:
+        with self._lock:
+            self._inflight -= 1
+            self._maybe_flush_locked()
+
+    # ----------------------------------------------------------- engine
+
+    def _submit(self, req: _Request):
+        with self._lock:
+            if self._inflight == 0:
+                # no barrier in effect (counter used outside a scheduled
+                # step): degenerate to the direct dispatch
+                return self._run_group([req])[0]
+            self._pending.append(req)
+            self._maybe_flush_locked()
+        req.event.wait()
+        if req.error is not None:
+            raise req.error
+        return req.result
+
+    def _maybe_flush_locked(self) -> None:
+        """Flush when every in-flight step is parked on a pending request.
+        Called with the lock held; at that moment no other session thread
+        is runnable, so executing under the lock is race-free."""
+        if not self._pending or len(self._pending) < self._inflight:
+            return
+        pending, self._pending = self._pending, []
+        groups: dict[tuple, list[_Request]] = {}
+        for r in pending:
+            groups.setdefault(r.key, []).append(r)
+        for group in groups.values():
+            try:
+                results = self._run_group(group)
+                for r, out in zip(group, results):
+                    r.result = out
+            except Exception as e:  # surface in every parked thread
+                for r in group:
+                    r.error = e
+            for r in group:
+                r.event.set()
+
+    @staticmethod
+    def _slice(req: _Request, out):
+        """Cut one fused lane's outputs back to the request's real episode
+        count (episode axis is leading for a1/a2 state, trailing for mapc
+        tuples)."""
+        if req.kind == "mapc":
+            return tuple(o[..., :req.m] for o in out)
+        return tuple(o[:req.m] for o in out)
+
+    def _run_group(self, group: list[_Request]):
+        kind = group[0].kind
+        if len(group) == 1:
+            return [self._run_single(group[0])]
+        self.batches += 1
+        self.fused_requests += len(group)
+        s = bucket_size(len(group), 1)
+        lanes = group + [group[0]] * (s - len(group))  # pad: repeat lane 0
+        padded = [_pad_m(r.args, r.spec, r.mb) for r in lanes]
+        stacked = tuple(jnp.stack([p[i] for p in padded])
+                        for i in range(len(group[0].args)))
+        if kind == "a1":
+            out = _vmapped_a1()(*stacked)
+        elif kind == "a2":
+            out = _vmapped_a2()(*stacked)
+        else:
+            out = _vmapped_mapc(group[0].static)(*stacked)
+        return [self._slice(r, tuple(o[i] for o in out))
+                for i, r in enumerate(group)]
+
+    @staticmethod
+    def _run_single(req: _Request):
+        """Lone request: the plain unpadded dispatch — zero batching tax,
+        same jit cache entries a standalone (executor-less) run warms."""
+        from repro.core.count_a1 import _a1_carry_scan
+        from repro.core.count_a2 import _a2_carry_scan
+        if req.kind == "a1":
+            return _a1_carry_scan()(*req.args)
+        if req.kind == "a2":
+            return _a2_carry_scan()(*req.args)
+        return _map_all_segments(*req.args, req.static)

@@ -1,0 +1,188 @@
+"""Admission control, backpressure, and round-robin fairness for the
+multi-tenant mining service — with fault tolerance from ``runtime.ft``.
+
+Policies, in the order a window meets them:
+
+* **admission** — at most ``max_sessions`` live tenants; a new session is
+  rejected (``AdmissionError``) rather than degrading everyone already
+  admitted.
+* **backpressure** — each session's ingest queue is capped at
+  ``max_pending_windows``; a producer that outruns the miner gets a
+  ``BackpressureError`` (the chip-side acquisition host is the right
+  place to shed or spool — silently buffering unbounded windows is how
+  real-time loops die).
+* **fairness** — ``step()`` services up to ``max_batch_sessions`` sessions
+  with pending work in round-robin order starting *after* the last tenant
+  served, so a firehose session cannot starve a trickle session.
+* **retry** — each batched step runs under ``runtime.ft.StepWatchdog``.
+  Mining steps are stateful, so naive retry would double-count; the
+  scheduler snapshots every chosen session's ``state_dict`` before the
+  attempt and restores it on retry, making the step functionally pure in
+  the watchdog's sense (same state in ⇒ same result out).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import deque
+
+from repro.core.events import EventStream
+from repro.runtime.ft import StepFailure, StepWatchdog, WatchdogConfig
+
+from .session import MiningSession, SessionConfig, WindowDelta
+
+
+class AdmissionError(RuntimeError):
+    """Service at tenant capacity — retry later or scale out."""
+
+
+class BackpressureError(RuntimeError):
+    """Session ingest queue full — producer must slow down or spool."""
+
+
+@dataclasses.dataclass
+class SchedulerPolicy:
+    max_sessions: int = 64
+    max_pending_windows: int = 8
+    max_batch_sessions: int = 16
+    # Pre-step state snapshots make retry sound but copy every chosen
+    # session's machine state to host each step; disable to trade retry
+    # capability (a failed step then surfaces as StepFailure immediately)
+    # for a leaner hot path.
+    retry_snapshots: bool = True
+    watchdog: WatchdogConfig = dataclasses.field(
+        default_factory=lambda: WatchdogConfig(min_deadline_s=60.0))
+
+
+class RoundRobinScheduler:
+    """Owns the session table and drives batched steps through the
+    cross-session batcher (one worker thread per chosen session; the
+    batcher's barrier fuses their scans into per-bucket vmapped calls)."""
+
+    def __init__(self, policy: SchedulerPolicy | None = None, batcher=None):
+        self.policy = policy or SchedulerPolicy()
+        self.batcher = batcher
+        self.sessions: dict[str, MiningSession] = {}
+        self._rr: deque[str] = deque()  # round-robin service order
+        self.watchdog = StepWatchdog(self.policy.watchdog)
+        self.steps = 0
+
+    # -------------------------------------------------------- admission
+
+    def admit(self, session_id: str, config: SessionConfig) -> MiningSession:
+        if session_id in self.sessions:
+            raise AdmissionError(f"session {session_id!r} already admitted")
+        if len(self.sessions) >= self.policy.max_sessions:
+            raise AdmissionError(
+                f"at capacity ({self.policy.max_sessions} sessions); "
+                f"admission of {session_id!r} refused")
+        s = MiningSession(session_id, config, executor=self.batcher)
+        self.sessions[session_id] = s
+        self._rr.append(session_id)
+        return s
+
+    def evict(self, session_id: str) -> MiningSession:
+        s = self.sessions.pop(session_id)
+        self._rr = deque(x for x in self._rr if x != session_id)
+        return s
+
+    # ------------------------------------------------------- ingestion
+
+    def submit(self, session_id: str, window: EventStream,
+               final: bool = False) -> None:
+        s = self.sessions[session_id]
+        if s.queue_depth >= self.policy.max_pending_windows:
+            raise BackpressureError(
+                f"session {session_id!r} queue at depth {s.queue_depth} "
+                f"(cap {self.policy.max_pending_windows})")
+        s.enqueue(window, final=final)
+
+    @property
+    def pending_windows(self) -> int:
+        return sum(s.queue_depth for s in self.sessions.values())
+
+    # --------------------------------------------------------- stepping
+
+    def _choose(self) -> list[MiningSession]:
+        """Round-robin scan starting after the last session served."""
+        chosen = []
+        for _ in range(len(self._rr)):
+            sid = self._rr[0]
+            self._rr.rotate(-1)
+            s = self.sessions[sid]
+            if s.queue_depth:
+                chosen.append(s)
+                if len(chosen) >= self.policy.max_batch_sessions:
+                    break
+        return chosen
+
+    def step(self) -> dict[str, WindowDelta]:
+        """Service one window for each chosen session (batched). Returns
+        {session_id: delta}; empty when nothing is pending."""
+        chosen = self._choose()
+        if not chosen:
+            return {}
+        if not self.policy.retry_snapshots:
+            def run_once():
+                try:
+                    return self._run_batch(chosen)
+                except Exception as e:
+                    raise StepFailure(
+                        f"step {self.steps} failed and retry_snapshots is "
+                        "off (no safe state to rewind to)") from e
+            out = self.watchdog.run_step(self.steps, run_once)
+            self.steps += 1
+            return out
+        snapshots = {s.session_id: s.state_dict() for s in chosen}
+        meter_marks = {s.session_id: len(s.meter.rows) for s in chosen}
+        attempt = [0]
+
+        def run_batch():
+            if attempt[0]:  # retry: rewind every tenant to the snapshot
+                for s in chosen:
+                    # state_dict covers miner state + both queues (results
+                    # from the failed attempt are dropped by the reload)
+                    del s.meter.rows[meter_marks[s.session_id]:]
+                    s.meter._t0 = None  # a failed step may never stop()
+                    s.load_state_dict(snapshots[s.session_id])
+            attempt[0] += 1
+            return self._run_batch(chosen)
+
+        out = self.watchdog.run_step(self.steps, run_batch)
+        self.steps += 1
+        return out
+
+    def drain(self, max_steps: int = 10_000) -> int:
+        """Step until no session has pending windows; returns steps run."""
+        n = 0
+        while self.pending_windows and n < max_steps:
+            self.step()
+            n += 1
+        return n
+
+    def _run_batch(self, chosen: list[MiningSession]):
+        if self.batcher is None or len(chosen) == 1:
+            return {s.session_id: s.step() for s in chosen}
+        results: dict[str, WindowDelta] = {}
+        errors: list[Exception] = []
+
+        def run_one(s: MiningSession):
+            try:
+                results[s.session_id] = s.step()
+            except Exception as e:  # watchdog retries the whole batch
+                errors.append(e)
+            finally:
+                self.batcher.end_step()
+
+        for _ in chosen:
+            self.batcher.begin_step()
+        threads = [threading.Thread(target=run_one, args=(s,), daemon=True)
+                   for s in chosen]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if errors:
+            raise errors[0]
+        return results

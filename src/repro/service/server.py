@@ -1,0 +1,108 @@
+"""The multi-tenant real-time mining service: ingest/poll facade.
+
+The chip-on-chip loop, generalized to a fleet: many electrode arrays (or
+any event-emitting chips) stream partition windows in; the service mines
+them concurrently on shared devices and emits per-window frequent-episode
+deltas per session. The pieces:
+
+* ``MiningSession`` (session.py) — per-tenant miner, bounded memory,
+  checkpointable state;
+* ``CrossSessionBatcher`` (batcher.py) — scans from concurrently stepping
+  sessions fused into per-shape-bucket vmapped dispatches;
+* ``RoundRobinScheduler`` (scheduler.py) — admission, backpressure,
+  fairness, watchdog retry.
+
+Guarantee: per-session outputs are bit-identical to a standalone
+``StreamingMiner`` over the same windows — batching and scheduling are
+pure throughput optimizations (tests/test_service.py asserts this for
+every engine × two-pass combination).
+
+Usage::
+
+    svc = MiningService()
+    svc.create_session("array-0", SessionConfig(theta=4, window_ms=2000))
+    svc.ingest("array-0", window)          # may raise BackpressureError
+    svc.pump()                             # run pending batched steps
+    for delta in svc.poll("array-0"):
+        ...                                # per-window episode deltas
+"""
+
+from __future__ import annotations
+
+import itertools
+
+from repro.core.events import EventStream
+from repro.telemetry import MeterBank
+
+from .batcher import CrossSessionBatcher
+from .scheduler import RoundRobinScheduler, SchedulerPolicy
+from .session import MiningSession, SessionConfig, WindowDelta
+
+
+class MiningService:
+    def __init__(self, policy: SchedulerPolicy | None = None,
+                 batching: bool = True):
+        self.batcher = CrossSessionBatcher() if batching else None
+        self.scheduler = RoundRobinScheduler(policy, self.batcher)
+        self._auto_ids = itertools.count()
+
+    # --------------------------------------------------------- sessions
+
+    def create_session(self, session_id: str | None = None,
+                       config: SessionConfig | None = None) -> str:
+        """Admit a tenant (raises ``AdmissionError`` at capacity)."""
+        if session_id is None:
+            session_id = f"session-{next(self._auto_ids)}"
+        self.scheduler.admit(session_id, config or SessionConfig())
+        return session_id
+
+    def close_session(self, session_id: str) -> MiningSession:
+        """Drain the session's remaining windows, then remove it."""
+        s = self.scheduler.sessions[session_id]
+        while s.queue_depth:
+            self.scheduler.step()
+        return self.scheduler.evict(session_id)
+
+    def session(self, session_id: str) -> MiningSession:
+        return self.scheduler.sessions[session_id]
+
+    # ------------------------------------------------------ ingest/poll
+
+    def ingest(self, session_id: str, window: EventStream,
+               final: bool = False) -> None:
+        """Queue one partition window (raises ``BackpressureError`` when
+        the tenant's queue is full — shed or spool upstream)."""
+        self.scheduler.submit(session_id, window, final=final)
+
+    def pump(self, max_steps: int | None = None) -> int:
+        """Run batched scheduler steps until queues drain (or the step
+        budget runs out). Returns steps run."""
+        return self.scheduler.drain(
+            max_steps=10_000 if max_steps is None else max_steps)
+
+    def poll(self, session_id: str,
+             max_items: int | None = None) -> list[WindowDelta]:
+        """Per-window frequent-episode deltas mined since the last poll."""
+        return self.scheduler.sessions[session_id].poll(max_items)
+
+    # ------------------------------------------------------------ stats
+
+    def stats(self) -> dict:
+        """Per-session sustained events/sec + latency percentiles, the
+        cross-session aggregate, and batcher fusion counters."""
+        bank = MeterBank()
+        for sid, s in self.scheduler.sessions.items():
+            bank.meters[sid] = s.meter
+        out = bank.summary()
+        out["scheduler"] = {
+            "steps": self.scheduler.steps,
+            "retries": self.scheduler.watchdog.retries,
+            "sessions": len(self.scheduler.sessions),
+            "pending_windows": self.scheduler.pending_windows,
+        }
+        if self.batcher is not None:
+            out["batcher"] = {
+                "batches": self.batcher.batches,
+                "fused_requests": self.batcher.fused_requests,
+            }
+        return out

@@ -26,11 +26,15 @@ class ThroughputMeter:
     the acquisition rate, not just within one warm window. Wrap each
     window's processing in ``start()``/``stop(n_events)``; ``summary()``
     reports both the sustained rate and the steady-state rate with the
-    first (compile-warming) window excluded.
+    first (compile-warming) window excluded, plus p50/p99 window-latency
+    percentiles (the serving SLO the multi-tenant scheduler watches).
+    ``label`` names the meter (one per session in the mining service).
     """
 
-    def __init__(self):
+    def __init__(self, label: str | None = None):
+        self.label = label
         self.rows: list[tuple[int, float]] = []  # (n_events, seconds)
+        self.spans: list[tuple[float, float]] = []  # absolute (start, stop)
         self._t0: float | None = None
 
     def start(self) -> None:
@@ -39,7 +43,9 @@ class ThroughputMeter:
     def stop(self, n_events: int) -> float:
         if self._t0 is None:
             raise RuntimeError("stop() without start()")
-        dt = time.perf_counter() - self._t0
+        t1 = time.perf_counter()
+        dt = t1 - self._t0
+        self.spans.append((self._t0, t1))
         self._t0 = None
         self.rows.append((int(n_events), dt))
         return dt
@@ -56,16 +62,72 @@ class ThroughputMeter:
     def events_per_sec(self) -> float:
         return self.events / self.seconds if self.seconds > 0 else 0.0
 
+    def latency_percentiles(self, qs=(50, 99)) -> dict[str, float]:
+        """Window-latency percentiles in seconds, keyed ``p50``/``p99``/…"""
+        if not self.rows:
+            return {f"p{q}": 0.0 for q in qs}
+        lat = np.asarray([dt for _, dt in self.rows])
+        return {f"p{q}": float(np.percentile(lat, q)) for q in qs}
+
     def summary(self) -> dict:
         warm = self.rows[1:] if len(self.rows) > 1 else self.rows
         warm_ev = sum(n for n, _ in warm)
         warm_s = sum(dt for _, dt in warm)
-        return {
+        out = {
             "windows": len(self.rows),
             "events": self.events,
             "seconds": self.seconds,
             "events_per_sec": self.events_per_sec,
             "steady_events_per_sec": warm_ev / warm_s if warm_s > 0 else 0.0,
+        }
+        if self.label is not None:
+            out["label"] = self.label
+        for k, v in self.latency_percentiles().items():
+            out[f"{k}_latency_s"] = v
+        return out
+
+
+class MeterBank:
+    """Labeled per-session meters plus a cross-session aggregate.
+
+    ``meter(label)`` returns (creating on first use) the session's own
+    ``ThroughputMeter``. Per-session summaries use the session's *observed*
+    step times — in batched serving that includes barrier/co-tenant wait,
+    which is exactly the latency a tenant experiences. The aggregate's
+    ``events_per_sec`` is instead computed over the *wall-clock union span*
+    of all measurements: concurrent sessions overlap in time, so dividing
+    fleet events by summed per-session busy seconds would under-report the
+    fleet rate by ~the session count. (Falls back to busy-seconds when no
+    absolute spans were recorded, e.g. hand-filled rows.)"""
+
+    def __init__(self):
+        self.meters: dict[str, ThroughputMeter] = {}
+
+    def meter(self, label: str) -> ThroughputMeter:
+        m = self.meters.get(label)
+        if m is None:
+            m = self.meters[label] = ThroughputMeter(label=label)
+        return m
+
+    def aggregate(self) -> ThroughputMeter:
+        agg = ThroughputMeter(label="aggregate")
+        for m in self.meters.values():
+            agg.rows.extend(m.rows)
+            agg.spans.extend(m.spans)
+        return agg
+
+    def summary(self) -> dict:
+        agg = self.aggregate()
+        out = agg.summary()
+        if agg.spans:
+            wall = (max(t1 for _, t1 in agg.spans)
+                    - min(t0 for t0, _ in agg.spans))
+            out["wall_seconds"] = wall
+            out["events_per_sec"] = agg.events / wall if wall > 0 else 0.0
+        return {
+            "sessions": {label: m.summary()
+                         for label, m in sorted(self.meters.items())},
+            "aggregate": out,
         }
 
 

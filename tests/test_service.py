@@ -1,0 +1,367 @@
+"""Multi-tenant mining service: exactness, bounded memory, checkpointing,
+admission/backpressure, and watchdog retry.
+
+The load-bearing claims:
+
+* batched multi-session serving is *bit-identical* to a standalone
+  ``StreamingMiner`` per session, for every engine × two-pass combination
+  (cross-session vmap batching and scheduling are throughput-only);
+* with ``history_limit=K`` the retained window history is O(K), not
+  O(stream length), while already-tracked counts stay exact — including
+  under forced bounded-list overflows (the oracle-escrow recovery path);
+* a session checkpointed mid-stream through ``checkpoint.ckpt`` and
+  restored cold resumes bit-identically.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (EpisodeBatch, EventStream, StreamingCounter,
+                        StreamingMiner, count_a1_sequential)
+from repro.service import (AdmissionError, BackpressureError, MiningService,
+                           SchedulerPolicy, SessionConfig)
+
+NUM_TYPES = 5
+
+
+def tie_heavy_stream(seed, n=240):
+    rng = np.random.default_rng(seed)
+    gaps = rng.choice([0, 0, 1, 2], size=n)
+    times = (np.cumsum(gaps) + 1).astype(np.int32)
+    types = rng.integers(0, NUM_TYPES, size=n).astype(np.int32)
+    return EventStream(types, times, NUM_TYPES)
+
+
+def split_by_index(stream, k):
+    n = stream.types.shape[0]
+    cuts = [0] + [n * j // k for j in range(1, k)] + [n]
+    return [EventStream(stream.types[a:b], stream.times[a:b],
+                        stream.num_types)
+            for a, b in zip(cuts[:-1], cuts[1:])]
+
+
+def counting_batch():
+    return EpisodeBatch(
+        np.int32([[0, 1, 2], [1, 2, 3], [2, 2, 0], [4, 0, 1]]),
+        np.int32([[1, 0], [0, 2], [0, 0], [0, 0]]),
+        np.int32([[5, 6], [4, 7], [3, 3], [6, 2]]))
+
+
+def assert_results_equal(a, b, msg=""):
+    assert len(a.frequent) == len(b.frequent), msg
+    for fa, fb, ca, cb in zip(a.frequent, b.frequent, a.counts, b.counts):
+        np.testing.assert_array_equal(fa.etypes, fb.etypes, err_msg=msg)
+        np.testing.assert_array_equal(fa.tlo, fb.tlo, err_msg=msg)
+        np.testing.assert_array_equal(fa.thi, fb.thi, err_msg=msg)
+        np.testing.assert_array_equal(ca, cb, err_msg=msg)
+
+
+# ------------------------------------------------------------- exactness
+
+
+@pytest.mark.parametrize("engine", ["hybrid", "ptpe", "mapconcatenate"])
+@pytest.mark.parametrize("two_pass", [True, False])
+def test_batched_service_bit_identical_to_standalone(engine, two_pass):
+    """Acceptance: every engine × two-pass — per-session results from the
+    batched multi-session service equal a standalone StreamingMiner run on
+    that session's stream, window by window."""
+    svc = MiningService()
+    tenants = []
+    for i, seed in enumerate((0, 3, 5)):
+        cfg = SessionConfig(intervals=((0, 4),), theta=3, max_level=3,
+                            engine=engine, two_pass=two_pass,
+                            history_limit=4)
+        sid = svc.create_session(f"t{i}", cfg)
+        wins = split_by_index(tie_heavy_stream(seed, n=200 + 40 * i), 4)
+        tenants.append((sid, cfg, wins))
+        for j, w in enumerate(wins):
+            svc.ingest(sid, w, final=j == len(wins) - 1)
+    svc.pump()
+    for sid, cfg, wins in tenants:
+        deltas = svc.poll(sid)
+        assert len(deltas) == len(wins)
+        standalone = cfg.make_miner()
+        for j, (d, w) in enumerate(zip(deltas, wins)):
+            ref = standalone.update(w, final=j == len(wins) - 1)
+            assert_results_equal(d.result, ref,
+                                 f"{engine} two_pass={two_pass} "
+                                 f"{sid} window {j}")
+
+
+def test_batcher_actually_fuses_same_shape_sessions():
+    """Same-bucket tenants must share one vmapped dispatch (the batching
+    win is real, not just permitted)."""
+    svc = MiningService()
+    for i in range(4):
+        sid = svc.create_session(
+            f"t{i}", SessionConfig(intervals=((0, 4),), theta=3,
+                                   max_level=3, history_limit=4))
+        wins = split_by_index(tie_heavy_stream(i, n=200), 3)
+        for j, w in enumerate(wins):
+            svc.ingest(sid, w, final=j == len(wins) - 1)
+    svc.pump()
+    assert svc.batcher.batches > 0
+    assert svc.batcher.fused_requests >= 2 * svc.batcher.batches
+
+
+# -------------------------------------------------------- bounded memory
+
+
+@pytest.mark.parametrize("engine", ["ptpe", "mapconcatenate"])
+@pytest.mark.parametrize("lcap", [1, 4])
+def test_bounded_counter_capped_and_exact(engine, lcap):
+    """Many windows through a checkpoint_interval counter: retained
+    history stays O(interval) while cumulative counts match the oracle at
+    every window — lcap=1 forces live evictions, exercising the
+    oracle-escrow recovery instead of genesis recounts."""
+    stream = tie_heavy_stream(1, n=600)
+    eps = counting_batch()
+    wins = split_by_index(stream, 20)
+    ctr = StreamingCounter(eps, engine=engine, lcap=lcap,
+                           checkpoint_interval=3)
+    ref = StreamingCounter(eps, engine=engine, lcap=lcap)
+    for i, w in enumerate(wins):
+        final = i == len(wins) - 1
+        got = ctr.update(w, final=final)
+        want = ref.update(w, final=final)
+        np.testing.assert_array_equal(got, want, err_msg=f"window {i}")
+        assert ctr.retained_windows <= 4  # interval + current partial
+    np.testing.assert_array_equal(got, count_a1_sequential(stream, eps))
+    assert ref.retained_windows == len(wins)  # unbounded keeps everything
+
+
+@pytest.mark.parametrize("two_pass", [True, False])
+def test_bounded_miner_capped_and_exact(two_pass):
+    """The miner-level cap: retained windows stay <= history_limit while
+    per-window mining results equal the unbounded miner's (stationary
+    stream: every candidate batch is promoted within the horizon)."""
+    from repro.data import embedded_chain_stream
+    st = embedded_chain_stream(NUM_TYPES, [1, 2, 3], (2, 6),
+                               num_occurrences=60, noise_events=700,
+                               t_max=50_000, seed=7)
+    wins = split_by_index(st, 15)
+    unbounded = StreamingMiner([(2, 6)], 6, max_level=3, two_pass=two_pass)
+    bounded = StreamingMiner([(2, 6)], 6, max_level=3, two_pass=two_pass,
+                             history_limit=4)
+    for i, w in enumerate(wins):
+        final = i == len(wins) - 1
+        ru = unbounded.update(w, final=final)
+        rb = bounded.update(w, final=final)
+        assert_results_equal(rb, ru, f"window {i}")
+        assert bounded.retained_windows <= 5
+    assert unbounded.retained_windows == len(wins)
+    assert bounded.retained_windows <= 4
+
+
+def churny_stream():
+    """A planted pair from t=0 plus a second pair that only starts midway:
+    level-1 cumulative counts cross θ at different windows, so the level-2
+    candidate key churns and the tracked set grows late — the scenario
+    that used to rebuild (and silently reset) bounded counters."""
+    rng = np.random.default_rng(0)
+    pairs = []
+    t = 10
+    while t < 8000:
+        pairs += [(0, t), (1, t + 2)]
+        t += 80
+    t = 4000
+    while t < 8000:
+        pairs += [(2, t + 1), (3, t + 3)]
+        t += 90
+    for _ in range(500):
+        pairs.append((int(rng.integers(0, 6)), int(rng.integers(10, 8000))))
+    return EventStream.from_pairs(pairs, 6)
+
+
+def test_bounded_per_window_exact_under_candidate_churn():
+    """per_window serving must stay bit-exact vs the unbounded miner even
+    when candidate keys churn and promotions land after the horizon."""
+    st = churny_stream()
+    ws = split_by_index(st, 10)
+    unb = StreamingMiner([(0, 5)], 5, max_level=2, two_pass=True)
+    bnd = StreamingMiner([(0, 5)], 5, max_level=2, two_pass=True,
+                         history_limit=3)
+    for i, w in enumerate(ws):
+        ru = unb.update(w, final=i == len(ws) - 1)
+        rb = bnd.update(w, final=i == len(ws) - 1)
+        assert_results_equal(rb, ru, f"churny window {i}")
+
+
+def test_tracked_growth_appends_fragments_without_reset():
+    """Growing a tracked set must append a fragment for the new episodes,
+    never rebuild existing counters (a rebuild resets their genesis-exact
+    counts in bounded mode)."""
+    st = churny_stream()
+    ws = split_by_index(st, 10)
+    miner = StreamingMiner([(0, 5)], 5, max_level=2, mode="cumulative",
+                           two_pass=True, history_limit=3)
+    frag_ids: dict = {}
+    for i, w in enumerate(ws):
+        miner.update(w, final=i == len(ws) - 1)
+        for key, (tracked, frags) in miner._exact.items():
+            old = frag_ids.get(key)
+            if old is not None:  # existing fragments keep their identity
+                assert [id(f) for f in frags[:len(old)]] == old
+            assert sum(f.eps.M for f in frags) == tracked.size
+            frag_ids[key] = [id(f) for f in frags]
+
+
+def test_bounded_miner_evicts_stale_counter_keys():
+    """The counter table itself must not grow with candidate churn: keys
+    idle past the horizon are dropped."""
+    st = tie_heavy_stream(2, n=400)
+    wins = split_by_index(st, 10)
+    miner = StreamingMiner([(0, 4)], 3, max_level=3, history_limit=2)
+    live_keys_per_window = []
+    for i, w in enumerate(wins):
+        res = miner.update(w, final=i == len(wins) - 1)
+        # every counter table is keyed only by fresh keys: eviction pops
+        # all tables together, so none may outlive _last_seen
+        assert set(miner._a2) <= set(miner._last_seen)
+        assert set(miner._exact) <= set(miner._last_seen)
+        assert set(miner._known) <= set(miner._last_seen)
+        for key, seen in miner._last_seen.items():
+            assert miner._p - seen <= 2
+        live_keys_per_window.append(len(miner._last_seen))
+    # the table is bounded by the keys touched within the horizon, not by
+    # the total churn over the stream (levels * (horizon + 1) is a loose
+    # per-window cap: at most one fresh key per level per window)
+    assert max(live_keys_per_window) <= 2 * 3
+
+
+# ---------------------------------------------------------- checkpoints
+
+
+def test_checkpoint_roundtrip_mid_stream(tmp_path):
+    """Save streaming machine state through checkpoint/ckpt.py mid-stream,
+    cold-restore into a fresh session, and finish: every resumed window's
+    result is bit-identical to the uninterrupted run."""
+    from repro.service.session import MiningSession
+    cfg = SessionConfig(intervals=((0, 4),), theta=3, max_level=3,
+                        history_limit=3)
+    wins = split_by_index(tie_heavy_stream(4, n=300), 8)
+    cut = 4
+
+    oracle = MiningSession("s", cfg)
+    for j, w in enumerate(wins):
+        oracle.enqueue(w, final=j == len(wins) - 1)
+    while oracle.pending:
+        oracle.step()
+    want = oracle.poll()
+
+    first = MiningSession("s", cfg)
+    for j, w in enumerate(wins[:cut]):
+        first.enqueue(w)
+        first.step()
+    first.save(tmp_path)
+
+    resumed = MiningSession("s", cfg).restore(tmp_path)  # fresh process
+    assert resumed.windows_done == cut
+    for j, w in enumerate(wins[cut:]):
+        resumed.enqueue(w, final=cut + j == len(wins) - 1)
+        resumed.step()
+    got = resumed.poll()
+    # unpolled pre-crash deltas survive the restore, then the resumed tail
+    assert len(got) == len(wins)
+    for d, ref in zip(got, want):
+        assert d.window_idx == ref.window_idx
+        assert_results_equal(d.result, ref.result,
+                             f"resumed window {d.window_idx}")
+
+
+def test_checkpoint_rejects_config_mismatch(tmp_path):
+    from repro.service.session import MiningSession
+    cfg = SessionConfig(intervals=((0, 4),), theta=3)
+    s = MiningSession("s", cfg)
+    s.enqueue(tie_heavy_stream(0, n=60))
+    s.step()
+    s.save(tmp_path)
+    other = MiningSession("s", SessionConfig(intervals=((0, 4),), theta=99))
+    with pytest.raises(ValueError, match="hash"):
+        other.restore(tmp_path)
+
+
+# ---------------------------------------------- admission / backpressure
+
+
+def test_admission_control_and_backpressure():
+    svc = MiningService(policy=SchedulerPolicy(max_sessions=2,
+                                               max_pending_windows=2))
+    cfg = SessionConfig(intervals=((0, 4),), theta=3)
+    svc.create_session("a", cfg)
+    svc.create_session("b", cfg)
+    with pytest.raises(AdmissionError, match="capacity"):
+        svc.create_session("c", cfg)
+    with pytest.raises(AdmissionError, match="already"):
+        svc.create_session("a", cfg)
+    wins = split_by_index(tie_heavy_stream(0, n=120), 3)
+    svc.ingest("a", wins[0])
+    svc.ingest("a", wins[1])
+    with pytest.raises(BackpressureError, match="depth"):
+        svc.ingest("a", wins[2])
+    svc.pump()
+    svc.ingest("a", wins[2], final=True)  # queue drained → accepted again
+    svc.pump()
+    assert len(svc.poll("a")) == 3
+    # closing a tenant frees its admission slot
+    svc.close_session("b")
+    svc.create_session("c", cfg)
+
+
+def test_round_robin_fairness():
+    """A firehose tenant must not starve a trickle tenant: after each
+    scheduler step, served window counts stay within one batch of each
+    other."""
+    svc = MiningService(policy=SchedulerPolicy(max_pending_windows=16,
+                                               max_batch_sessions=2))
+    cfg = SessionConfig(intervals=((0, 4),), theta=3, max_level=2)
+    svc.create_session("fire", cfg)
+    svc.create_session("drip", cfg)
+    fire = split_by_index(tie_heavy_stream(0, n=400), 8)
+    drip = split_by_index(tie_heavy_stream(1, n=100), 2)
+    for w in fire:
+        svc.ingest("fire", w)
+    for w in drip:
+        svc.ingest("drip", w)
+    svc.scheduler.step()
+    # one step serviced BOTH tenants, not two windows of the firehose
+    assert svc.session("fire").windows_done == 1
+    assert svc.session("drip").windows_done == 1
+    svc.pump()
+    assert svc.session("drip").windows_done == 2
+    assert svc.session("fire").windows_done == 8
+
+
+# ------------------------------------------------------- watchdog retry
+
+
+def test_watchdog_retry_restores_snapshot():
+    """A failing step is retried from the pre-step state snapshot: no
+    double-counting, no lost windows, results equal a clean run."""
+    svc = MiningService()
+    cfg = SessionConfig(intervals=((0, 4),), theta=3, max_level=3,
+                        history_limit=4)
+    sid = svc.create_session("flaky", cfg)
+    wins = split_by_index(tie_heavy_stream(6, n=240), 4)
+
+    sess = svc.session(sid)
+    real_update = sess.miner.update
+    fails = {"left": 2}
+
+    def flaky_update(window, final=False):
+        if fails["left"]:
+            fails["left"] -= 1
+            raise RuntimeError("injected device loss")
+        return real_update(window, final=final)
+
+    sess.miner.update = flaky_update
+    for j, w in enumerate(wins):
+        svc.ingest(sid, w, final=j == len(wins) - 1)
+    svc.pump()
+    assert svc.scheduler.watchdog.retries == 2
+    deltas = svc.poll(sid)
+    assert [d.window_idx for d in deltas] == list(range(len(wins)))
+    clean = cfg.make_miner()
+    for j, (d, w) in enumerate(zip(deltas, wins)):
+        ref = clean.update(w, final=j == len(wins) - 1)
+        assert_results_equal(d.result, ref, f"window {j} after retry")

@@ -1,9 +1,11 @@
-"""Telemetry bridge: routing decisions → event streams the miner accepts."""
+"""Telemetry bridge: routing decisions → event streams the miner accepts,
+plus the serving meters (labels, latency percentiles, per-session bank)."""
 
 import numpy as np
 
 from repro.core import EpisodeBatch, count_a1_sequential, mine
-from repro.telemetry import decode_expert_episode, routing_events
+from repro.telemetry import (MeterBank, ThroughputMeter,
+                             decode_expert_episode, routing_events)
 
 
 def test_routing_events_roundtrip():
@@ -36,3 +38,59 @@ def test_planted_routing_cascade_is_mined():
     idx = [tuple(ep) for ep in res.frequent[1].etypes.tolist()].index(want)
     lv = res.frequent[1].select([idx])
     assert res.counts[1][idx] == count_a1_sequential(stream, lv)[0]
+
+
+def _fill(meter, durations, n=100):
+    """Deterministic rows (bypass the wall clock)."""
+    for dt in durations:
+        meter.rows.append((n, float(dt)))
+
+
+def test_meter_label_and_percentiles():
+    m = ThroughputMeter(label="array-7")
+    _fill(m, [0.010] * 98 + [0.050, 0.500])
+    s = m.summary()
+    assert s["label"] == "array-7"
+    assert s["p50_latency_s"] == 0.010
+    # p99 of 100 rows sits between the 0.050 straggler and the 0.500 tail
+    assert 0.050 <= s["p99_latency_s"] <= 0.500
+    pcts = m.latency_percentiles(qs=(50, 90, 99))
+    assert set(pcts) == {"p50", "p90", "p99"}
+    assert pcts["p50"] <= pcts["p90"] <= pcts["p99"]
+
+
+def test_meter_percentiles_empty():
+    m = ThroughputMeter()
+    assert m.latency_percentiles() == {"p50": 0.0, "p99": 0.0}
+    s = m.summary()
+    assert s["events_per_sec"] == 0.0 and "label" not in s
+
+
+def test_meter_bank_per_session_and_aggregate():
+    bank = MeterBank()
+    _fill(bank.meter("a"), [0.1, 0.1], n=100)
+    _fill(bank.meter("b"), [0.1], n=300)
+    assert bank.meter("a") is bank.meter("a")  # stable per label
+    s = bank.summary()
+    assert set(s["sessions"]) == {"a", "b"}
+    assert s["sessions"]["a"]["label"] == "a"
+    assert s["sessions"]["a"]["events"] == 200
+    assert s["sessions"]["b"]["events_per_sec"] == 3000.0
+    agg = s["aggregate"]
+    assert agg["label"] == "aggregate"
+    assert agg["events"] == 500 and agg["windows"] == 3
+    assert np.isclose(agg["events_per_sec"], 500 / 0.3)
+
+
+def test_meter_bank_aggregate_uses_wall_clock_for_concurrent_sessions():
+    """Concurrent sessions overlap in time: the fleet rate must divide by
+    the wall-clock union span, not the sum of per-session busy seconds
+    (which under-reports by ~the session count)."""
+    bank = MeterBank()
+    for label in ("a", "b", "c", "d"):
+        m = bank.meter(label)
+        m.rows.append((1000, 1.0))
+        m.spans.append((10.0, 11.0))  # all four ran during the same second
+    agg = bank.summary()["aggregate"]
+    assert agg["wall_seconds"] == 1.0
+    assert agg["events_per_sec"] == 4000.0  # not 4000/4 from summed busy-s
