@@ -3,29 +3,35 @@
 The companion accelerator paper (arXiv:0905.2203) makes sustained
 events/sec across stream partitions the figure of merit. This benchmark
 counts a fixed candidate batch over a sym26 spike stream window-by-window
-two ways:
+three ways:
 
-* ``carry``   — ``StreamingCounter.run``: machine state threaded across
-  windows, shape-bucketed staging (warm jit caches after window 1),
-  window p+1 staged while window p counts. Exact across boundaries.
+* ``kernel``  — ``StreamingCounter`` with the carried Pallas kernel:
+  machine state resident in the kernel's brick layout, one
+  state-in/state-out launch per window (compiled on TPU; interpret mode
+  with ``--kernel interpret`` — an emulation-speed *path* check on CPU,
+  not a fair timing).
+* ``carry``   — the carried XLA scan (``use_kernel=False``):
+  shape-bucketed staging, window p+1 staged while window p counts.
 * ``restart`` — the seed behavior: a fresh one-shot count per window
   (state rebuilt, per-window shapes recompiled as they vary, boundary
   occurrences lost).
 
 Reported per window size: sustained events/sec (whole session), steady
 events/sec (first, compile-warming window excluded), and the boundary
-occurrences the restart baseline lost (carry is the oracle: its final
-cumulative counts are asserted equal to one-shot counting on the full
-stream before any timing is trusted).
+occurrences the restart baseline lost (both carried variants are asserted
+bit-equal to one-shot counting on the full stream before any timing is
+trusted).
 
 Usage:
   PYTHONPATH=src python benchmarks/streaming_throughput.py \
-      [--seconds 12] [--m 128] [--n 3] [--windows-ms 2000 4000 8000]
+      [--seconds 12] [--m 128] [--n 3] [--windows-ms 2000 4000 8000] \
+      [--kernel auto|interpret|off]
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 from pathlib import Path
 
@@ -42,15 +48,15 @@ from repro.data import partition_windows  # noqa: E402
 from repro.telemetry import ThroughputMeter  # noqa: E402
 
 
-def bench_carry(windows, eps, engine):
-    ctr = StreamingCounter(eps, engine=engine)
+def bench_carry(windows, eps, engine, use_kernel=False):
+    ctr = StreamingCounter(eps, engine=engine, use_kernel=use_kernel)
     meter = ThroughputMeter()
     gen = ctr.run(windows)
     for w in windows:
         meter.start()
         out = next(gen)
         meter.stop(len(w))
-    return out, meter
+    return out, meter, ctr
 
 
 def bench_restart(windows, eps):
@@ -64,7 +70,10 @@ def bench_restart(windows, eps):
 
 
 def run(seconds: int = 12, m: int = 128, n: int = 3,
-        windows_ms=(2000, 4000, 8000), engine: str = "ptpe"):
+        windows_ms=(2000, 4000, 8000), engine: str = "ptpe",
+        kernel: str = "auto"):
+    if kernel == "interpret":
+        os.environ["REPRO_KERNEL_INTERPRET"] = "1"
     stream, truth = sym26_stream(seconds=seconds)
     eps = random_candidates(m, n,
                             include=[truth["short"][0], truth["long"][0]])
@@ -73,7 +82,24 @@ def run(seconds: int = 12, m: int = 128, n: int = 3,
 
     for wms in windows_ms:
         windows = list(partition_windows(stream, wms))
-        final, meter_c = bench_carry(windows, eps, engine)
+        kernel_line = ""
+        if kernel != "off":
+            kfinal, meter_k, kctr = bench_carry(windows, eps, engine,
+                                                use_kernel=True)
+            np.testing.assert_array_equal(
+                kfinal, oracle,
+                err_msg=f"kernel-carry counts diverged at {wms}ms")
+            sk = meter_k.summary()
+            mode = ("interpret" if kernel == "interpret"
+                    else ("compiled" if kctr._kernel else "fallback-scan"))
+            rep.add(f"kernel/w{wms}", sk["seconds"],
+                    windows=sk["windows"], events=sk["events"],
+                    ev_per_s=round(sk["events_per_sec"]),
+                    steady_ev_per_s=round(sk["steady_events_per_sec"]),
+                    kernel_mode=mode)
+            kernel_line = (f"kernel({mode}) "
+                           f"{sk['steady_events_per_sec']:,.0f} ev/s vs ")
+        final, meter_c, _ = bench_carry(windows, eps, engine)
         np.testing.assert_array_equal(
             final, oracle,
             err_msg=f"carry counts diverged from one-shot at {wms}ms")
@@ -90,7 +116,7 @@ def run(seconds: int = 12, m: int = 128, n: int = 3,
                 steady_ev_per_s=round(sr["steady_events_per_sec"]),
                 boundary_occurrences_lost=lost)
         speedup = (sr["seconds"] / sc["seconds"]) if sc["seconds"] else 0.0
-        print(f"[stream-bench] window {wms} ms: carry "
+        print(f"[stream-bench] window {wms} ms: {kernel_line}carry "
               f"{sc['steady_events_per_sec']:,.0f} ev/s steady vs restart "
               f"{sr['steady_events_per_sec']:,.0f} ev/s "
               f"({speedup:.2f}x wall), restart lost {lost} boundary "
@@ -108,9 +134,15 @@ def main():
                     default=[2000, 4000, 8000])
     ap.add_argument("--engine", default="ptpe",
                     choices=["ptpe", "mapconcatenate", "hybrid"])
+    ap.add_argument("--kernel", default="auto",
+                    choices=["auto", "interpret", "off"],
+                    help="carried-kernel variant: auto = dispatch policy "
+                         "decides (compiled on TPU, scan fallback on CPU), "
+                         "interpret = force interpret-mode kernels "
+                         "(path check; emulation speed), off = skip")
     args = ap.parse_args()
     run(seconds=args.seconds, m=args.m, n=args.n,
-        windows_ms=args.windows_ms, engine=args.engine)
+        windows_ms=args.windows_ms, engine=args.engine, kernel=args.kernel)
 
 
 if __name__ == "__main__":

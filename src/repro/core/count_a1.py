@@ -199,15 +199,26 @@ def count_a1(stream: EventStream, eps: EpisodeBatch,
     """Exact Algorithm-1 counts: vectorized fast path + oracle fallback for
     episodes whose bounded lists may have evicted a live witness.
 
-    Stateful mode (``state``/``return_state``): the scan resumes from the
-    carried machines and returns ``(counts, A1State)`` with *cumulative*
-    counts over everything the state has seen. The Pallas kernel path is
-    bypassed (kernels don't expose machine state yet) and the oracle
-    fallback cannot run here — the caller sees only this chunk, so exactness
-    for ``state.ovf``-flagged episodes must be restored by recounting the
-    concatenated history (``StreamingCounter.counts`` does).
+    Stateful mode (``state``/``return_state``): the machines resume from the
+    carried state and return ``(counts, A1State)`` with *cumulative* counts
+    over everything the state has seen. With ``use_kernel`` the chunk runs
+    through the state-in/state-out Pallas kernel
+    (``kernels.ops.a1_count_stateful``) when the dispatch policy allows,
+    falling back to the carried XLA scan otherwise — bit-identical either
+    way. The oracle fallback cannot run here — the caller sees only this
+    chunk, so exactness for ``state.ovf``-flagged episodes must be restored
+    by recounting the concatenated history (``StreamingCounter.counts``
+    does).
     """
     if state is not None or return_state:
+        if use_kernel and eps.N > 1:
+            try:
+                from repro.kernels import ops as kops
+                counts, _, new_state = kops.a1_count_stateful(
+                    stream, eps, state=state, lcap=lcap)
+                return counts, new_state
+            except (ImportError, NotImplementedError):
+                pass
         out = count_a1_vectorized(stream, eps, lcap=lcap, state=state,
                                   return_state=True)
         counts, _, new_state = out

@@ -98,16 +98,20 @@ def _scan_count(etypes, tlo, thi, ev_types, ev_times):
 def count_single_slot(stream: EventStream, eps: EpisodeBatch,
                       inclusive_lower: bool = False,
                       state: A2State | None = None,
-                      return_state: bool = False):
+                      return_state: bool = False,
+                      use_kernel: bool = False):
     """Single-slot scan with eps' own bounds (A2 ⇔ bounds already relaxed).
 
     ``inclusive_lower`` applies Δ ∈ [tlo.., thi] by shifting the exclusive
     integer bound down one tick — see ref.count_a2_sequential for why A2
     needs this on streams with repeated timestamps.
 
-    With ``state``/``return_state`` the scan resumes carried machines and
-    also returns the new ``A2State``; cumulative counts over chunks are
-    bit-identical to one scan over the concatenation."""
+    With ``state``/``return_state`` the machines resume carried state and
+    also return the new ``A2State``; cumulative counts over chunks are
+    bit-identical to one scan over the concatenation. ``use_kernel`` routes
+    the carried chunk through the state-in/state-out Pallas kernel
+    (``kernels.ops.a2_count_stateful``) when the dispatch policy allows —
+    same bits, on-chip state."""
     if eps.N == 1:
         counts = count_level1(stream, eps.etypes[:, 0])
         if state is not None:
@@ -124,6 +128,16 @@ def count_single_slot(stream: EventStream, eps: EpisodeBatch,
                             jnp.asarray(eps.thi), jnp.asarray(stream.types),
                             jnp.asarray(stream.times))
         return np.asarray(count, dtype=np.int64)
+    if use_kernel:
+        try:
+            from repro.kernels import ops as kops
+            counts, new_state = kops.a2_count_stateful(
+                stream, eps, state=state, inclusive_lower=inclusive_lower)
+            if return_state:
+                return counts, new_state
+            return counts
+        except (ImportError, NotImplementedError):
+            pass
     st = state if state is not None else init_a2_state(eps)
     s, count = _a2_carry_scan()(
         jnp.asarray(eps.etypes), tlo, jnp.asarray(eps.thi),
@@ -144,14 +158,16 @@ def count_a2(stream: EventStream, eps: EpisodeBatch,
     Dispatches to the Pallas kernel path when available (TPU target;
     interpret-mode on CPU is slower than the XLA scan, so default CPU path is
     the scan — see kernels/ops.py for the dispatch policy). Stateful calls
-    (``state``/``return_state``) bypass the kernel — kernels don't expose
-    machine state yet — and return ``(counts, A2State)`` with cumulative
-    counts over everything the carried machines have seen.
+    (``state``/``return_state``) return ``(counts, A2State)`` with
+    cumulative counts over everything the carried machines have seen, and
+    with ``use_kernel`` run the chunk through the state-in/state-out Pallas
+    kernel — the carried single-slot tile stays on-chip.
     """
     relaxed = eps.relaxed()
     if state is not None or return_state:
         return count_single_slot(stream, relaxed, inclusive_lower=True,
-                                 state=state, return_state=True)
+                                 state=state, return_state=True,
+                                 use_kernel=use_kernel)
     if use_kernel:
         try:
             from repro.kernels import ops as kops

@@ -57,12 +57,18 @@ def count_dispatch(stream: EventStream, eps: EpisodeBatch,
 
     Stateful mode (``state``/``return_state``) carries the bounded-list
     machines across calls and returns ``(counts, A1State)`` with cumulative
-    raw counts (see ``count_a1``). Cross-window machine carry is inherently a
-    single sequential scan, so every engine routes to the carried ptpe scan
-    here; segment-parallel *streaming* (the tuple-fold analogue of
-    MapConcatenate) lives in ``streaming.StreamingCounter``, which callers
-    should prefer for window-by-window workloads.
+    raw counts (see ``count_a1`` — with ``use_kernel`` the chunk runs
+    through the state-in/state-out Pallas kernel when available).
+    Cross-window machine carry is inherently a single sequential scan, so
+    every engine routes to the carried ptpe step here; segment-parallel
+    *streaming* (the tuple-fold analogue of MapConcatenate) lives in
+    ``streaming.StreamingCounter``, which callers should prefer for
+    window-by-window workloads.
     """
+    # validate before the stateful early-return: a bogus engine must raise,
+    # not silently count via the carried ptpe path
+    if engine not in ("ptpe", "mapconcatenate", "hybrid"):
+        raise ValueError(f"unknown engine {engine!r}")
     if state is not None or return_state:
         return _count_a1(stream, eps, lcap=lcap, use_kernel=use_kernel,
                          state=state, return_state=True)
@@ -71,9 +77,7 @@ def count_dispatch(stream: EventStream, eps: EpisodeBatch,
     if engine == "mapconcatenate":
         return _mapconcatenate(stream, eps, num_segments=num_segments,
                                lcap=lcap, use_kernel=use_kernel)
-    if engine == "hybrid":
-        if eps.M > crossover(eps.N):
-            return _count_a1(stream, eps, lcap=lcap, use_kernel=use_kernel)
-        return _mapconcatenate(stream, eps, num_segments=num_segments,
-                               lcap=lcap, use_kernel=use_kernel)
-    raise ValueError(f"unknown engine {engine!r}")
+    if eps.M > crossover(eps.N):
+        return _count_a1(stream, eps, lcap=lcap, use_kernel=use_kernel)
+    return _mapconcatenate(stream, eps, num_segments=num_segments,
+                           lcap=lcap, use_kernel=use_kernel)

@@ -13,8 +13,13 @@ concatenated stream**:
     Exact cumulative non-overlapped A1 counts for a fixed ``EpisodeBatch``
     over incrementally arriving windows. Three engines:
 
-    * ``"ptpe"``        — the bounded-list scan with its (s, ptr, count, ovf)
-      carry threaded across windows (episode-parallel, one machine set).
+    * ``"ptpe"``        — the bounded-list machines with their
+      (s, ptr, count, ovf) carry threaded across windows (episode-parallel,
+      one machine set). With ``use_kernel`` (the default) the carry lives in
+      the state-in/state-out Pallas kernel's brick layout and every window
+      is one ``a1_count_state_kernel`` launch — the chip-on-chip loop stays
+      on the accelerator; when the dispatch policy declines (CPU without
+      interpret mode) the carried XLA scan runs instead, bit-identically.
     * ``"mapconcatenate"`` — segment-parallel streaming: each window is cut
       into phase-shifted segment scans and their (a, count, b) tuples are
       stitched onto a carried tuple with an incremental left fold — the
@@ -247,7 +252,7 @@ class StreamingCounter:
 
     def __init__(self, eps: EpisodeBatch, engine: str = "hybrid",
                  lcap: int = DEFAULT_LCAP, num_segments: int = 8,
-                 use_kernel: bool = False, keep_history: bool = True,
+                 use_kernel: bool = True, keep_history: bool = True,
                  min_bucket: int = 128, executor=None,
                  checkpoint_interval: int | None = None):
         if engine not in ("ptpe", "mapconcatenate", "hybrid"):
@@ -263,6 +268,7 @@ class StreamingCounter:
         self.executor = executor
         self.ckpt_interval = checkpoint_interval
         self.bounded = checkpoint_interval is not None
+        self._kernel = False  # carried-Pallas path (resolved per engine)
         # exact cum counts per window (bounded mode caps the tail retained)
         self.snapshots = (collections.deque(maxlen=8) if self.bounded
                           else [])
@@ -286,6 +292,8 @@ class StreamingCounter:
         self._thi = jnp.asarray(eps.thi)
         if engine == "ptpe":
             self._state = init_a1_state(eps, lcap)
+            if use_kernel:
+                self._try_enable_kernel()
         else:
             self._w = np.asarray(eps.max_span, np.int64)
             self._w_dev = jnp.asarray(self._w, jnp.int32)
@@ -308,6 +316,43 @@ class StreamingCounter:
                 "ptr": np.zeros((eps.M, eps.N), np.int32),
                 "count": np.zeros(eps.M, np.int32),
                 "ovf": np.zeros(eps.M, bool)}
+
+    # --------------------------------------------------- kernel residency
+
+    def _try_enable_kernel(self) -> None:
+        """Switch the ptpe engine onto the state-in/state-out Pallas kernel
+        when the dispatch policy allows (TPU, or interpret mode requested).
+        The carried machine state then lives in the kernel's brick layout
+        across windows — packed once here, never per window — so the
+        hottest loop stays on-chip. When the probe declines, the carried
+        XLA scan remains the engine (bit-identical either way)."""
+        try:
+            from repro.kernels import ops as kops
+            self._interp = kops.kernel_mode()
+        except (ImportError, NotImplementedError):
+            return
+        self._kops = kops
+        self._kernel = True
+        self._ket, self._ktlo, self._kthi = kops.episode_layout(
+            self.eps, inclusive_lower=False)
+        self._kst = kops.a1_state_layout(self._state)
+        self._state = None  # authoritative state is the kernel brick now
+
+    def _host_state(self) -> A1State:
+        """The carried machines in canonical episode-major layout (unpacks
+        the kernel brick when the kernel path is resident)."""
+        if self._kernel:
+            return self._kops.a1_state_unpack(*self._kst, self.eps.M,
+                                              self.eps.N)
+        return self._state
+
+    def _set_host_state(self, st: A1State) -> None:
+        """Install canonical-layout machine state (repacks into the kernel
+        brick when the kernel path is resident)."""
+        if self._kernel:
+            self._kst = self._kops.a1_state_layout(st)
+        else:
+            self._state = st
 
     # ------------------------------------------------------------ ingest
 
@@ -350,6 +395,13 @@ class StreamingCounter:
                                  np.asarray(feed[1], np.int32).copy()))
         if self.engine == "ptpe" and n:
             b = bucket_size(n, self.min_bucket)
+            if self._kernel:
+                # kernel event brick (types; times; dup) — the per-chunk dup
+                # flags are exact because the tie-group holdback above
+                # guarantees the chunk never ends inside a tie group
+                ev = self._kops.event_brick(feed[0], feed[1], with_dup=True,
+                                            length=b)
+                return _Staged(jax.device_put(ev), None, n, final)
             ft = np.full(b, PAD_TYPE, np.int32)
             ftt = np.full(b, feed[1][-1], np.int32)
             ft[:n] = feed[0]
@@ -369,15 +421,29 @@ class StreamingCounter:
             return
         if self.engine == "ptpe":
             if staged.n:
-                st = self._state
-                args = (self._et, self._tlo, self._thi,
-                        staged.feed_types, staged.feed_times,
-                        st.s, st.ptr, st.count, st.ovf)
-                if self.executor is not None:
-                    s, ptr, c, ovf = self.executor.a1_scan(args)
+                if self._kernel:
+                    s, po, c, ovf = self._kst
+                    args = (self._ket, self._ktlo, self._kthi,
+                            staged.feed_types, s, po, c, ovf)
+                    if self.executor is not None:
+                        out = self.executor.a1_kernel_scan(
+                            args, self.eps.N, self.lcap, self._interp)
+                    else:
+                        out = self._kops.a1_state_call(
+                            *args, n_levels=self.eps.N, lcap=self.lcap,
+                            interpret=self._interp)
+                    c, ovf, s, po = out
+                    self._kst = (s, po, c, ovf)
                 else:
-                    s, ptr, c, ovf = _a1_carry_scan()(*args)
-                self._state = A1State(s=s, ptr=ptr, count=c, ovf=ovf)
+                    st = self._state
+                    args = (self._et, self._tlo, self._thi,
+                            staged.feed_types, staged.feed_times,
+                            st.s, st.ptr, st.count, st.ovf)
+                    if self.executor is not None:
+                        s, ptr, c, ovf = self.executor.a1_scan(args)
+                    else:
+                        s, ptr, c, ovf = _a1_carry_scan()(*args)
+                    self._state = A1State(s=s, ptr=ptr, count=c, ovf=ovf)
         else:
             self._dispatch_mapc(staged)
         if self.bounded:
@@ -451,8 +517,12 @@ class StreamingCounter:
         if self.engine == "level1":
             return self._cum.copy()
         if self.engine == "ptpe":
-            c = np.asarray(self._state.count, np.int64)
-            flagged = np.asarray(self._state.ovf).copy()
+            if self._kernel:
+                c = np.asarray(self._kst[2][0, : self.eps.M], np.int64)
+                flagged = np.asarray(self._kst[3][0, : self.eps.M] != 0)
+            else:
+                c = np.asarray(self._state.count, np.int64)
+                flagged = np.asarray(self._state.ovf).copy()
         else:
             if self._carry is None:
                 return np.zeros(self.eps.M, np.int64)
@@ -563,7 +633,7 @@ class StreamingCounter:
         take = self._suffix_take(tt_all)
         feed_t, feed_tt = t_all[:take], tt_all[:take]
         if self.engine == "ptpe":
-            st = self._state
+            st = self._host_state()
             s = np.asarray(st.s).copy()
             ptr = np.asarray(st.ptr).copy()
             cnt = np.asarray(st.count).copy()
@@ -599,9 +669,9 @@ class StreamingCounter:
                         if t_all.size > take else [])
         if self.engine == "ptpe":
             # fold the resolution back so future scans run from exact state
-            self._state = A1State(
+            self._set_host_state(A1State(
                 s=jnp.asarray(s), ptr=jnp.asarray(ptr),
-                count=jnp.asarray(cnt), ovf=jnp.asarray(ovf))
+                count=jnp.asarray(cnt), ovf=jnp.asarray(ovf)))
 
     @property
     def retained_windows(self) -> int:
@@ -648,7 +718,11 @@ class StreamingCounter:
             d["cum"] = self._cum.copy()
             return d
         if self.engine == "ptpe":
-            st = self._state
+            # canonical episode-major layout regardless of residency: a
+            # checkpoint written by the kernel path restores onto a scan
+            # counter and vice versa (the kernel brick round-trips through
+            # a1_state_unpack / a1_state_layout)
+            st = self._host_state()
             d["s"] = np.asarray(st.s).copy()
             d["ptr"] = np.asarray(st.ptr).copy()
             d["count"] = np.asarray(st.count).copy()
@@ -700,11 +774,11 @@ class StreamingCounter:
             self._cum = d["cum"].astype(np.int64)
             return
         if self.engine == "ptpe":
-            self._state = A1State(
+            self._set_host_state(A1State(
                 s=jnp.asarray(d["s"].astype(np.int32)),
                 ptr=jnp.asarray(d["ptr"].astype(np.int32)),
                 count=jnp.asarray(d["count"].astype(np.int32)),
-                ovf=jnp.asarray(d["ovf"].astype(bool)))
+                ovf=jnp.asarray(d["ovf"].astype(bool))))
         else:
             self._ovf = d["mapc_ovf"].astype(bool)
             self._tau_c = _opt_unpack(d["tau_c"])
@@ -793,17 +867,22 @@ class StreamingCounter:
 class StreamingA2Counter:
     """Carried relaxed upper-bound (Algorithm 3) machines. A single slot per
     level is complete state (Obs. 5.1), so chunked counting is
-    unconditionally bit-exact — no holdback, no flags, no history."""
+    unconditionally bit-exact — no holdback, no flags, no history. With
+    ``use_kernel`` (and the dispatch policy allowing) the carried tile
+    lives in the Pallas kernel's (NP, MP) layout across windows."""
 
     def __init__(self, eps: EpisodeBatch, min_bucket: int = 128,
-                 executor=None, bounded: bool = False):
+                 executor=None, bounded: bool = False,
+                 use_kernel: bool = True):
         self.eps = eps
         self._relaxed = eps.relaxed()
         self.min_bucket = min_bucket
         self.executor = executor
         self.bounded = bounded
+        self.use_kernel = use_kernel
         self.snapshots = collections.deque(maxlen=8) if bounded else []
         self.windows_seen = 0
+        self._kernel = False
         if eps.N == 1:
             self._state = None
             self._cum = np.zeros(eps.M, np.int64)
@@ -812,6 +891,35 @@ class StreamingA2Counter:
             self._et = jnp.asarray(self._relaxed.etypes)
             self._tlo = jnp.asarray(self._relaxed.tlo) - 1  # inclusive lower
             self._thi = jnp.asarray(self._relaxed.thi)
+            if use_kernel:
+                self._try_enable_kernel()
+
+    def _try_enable_kernel(self) -> None:
+        """See ``StreamingCounter._try_enable_kernel`` — single-slot
+        analogue (carried (s, cnt) tile in kernel layout)."""
+        try:
+            from repro.kernels import ops as kops
+            self._interp = kops.kernel_mode()
+        except (ImportError, NotImplementedError):
+            return
+        self._kops = kops
+        self._kernel = True
+        self._ket, self._ktlo, self._kthi = kops.episode_layout(
+            self._relaxed, inclusive_lower=True)
+        self._kst = kops.a2_state_layout(self._state)
+        self._state = None
+
+    def _host_state(self) -> A2State:
+        if self._kernel:
+            return self._kops.a2_state_unpack(*self._kst, self.eps.M,
+                                              self.eps.N)
+        return self._state
+
+    def _set_host_state(self, st: A2State) -> None:
+        if self._kernel:
+            self._kst = self._kops.a2_state_layout(st)
+        else:
+            self._state = st
 
     def update(self, window: EventStream, final: bool = False) -> np.ndarray:
         real = window.types != PAD_TYPE
@@ -821,7 +929,25 @@ class StreamingA2Counter:
                 self._cum += count_level1(window, self.eps.etypes[:, 0])
             out = self._cum.copy()
         elif n == 0:
-            out = np.asarray(self._state.count, np.int64)
+            out = (np.asarray(self._kst[1][0, : self.eps.M], np.int64)
+                   if self._kernel
+                   else np.asarray(self._state.count, np.int64))
+        elif self._kernel:
+            b = bucket_size(n, self.min_bucket)
+            ev = self._kops.event_brick(window.types[real],
+                                        window.times[real],
+                                        with_dup=False, length=b)
+            s, c = self._kst
+            args = (self._ket, self._ktlo, self._kthi,
+                    jax.device_put(ev), s, c)
+            if self.executor is not None:
+                c, s = self.executor.a2_kernel_scan(args, self.eps.N,
+                                                    self._interp)
+            else:
+                c, s = self._kops.a2_state_call(
+                    *args, n_levels=self.eps.N, interpret=self._interp)
+            self._kst = (s, c)
+            out = np.asarray(c[0, : self.eps.M], np.int64)
         else:
             sub = EventStream(window.types[real], window.times[real],
                               window.num_types)
@@ -855,8 +981,9 @@ class StreamingA2Counter:
         if self.eps.N == 1:
             d["cum"] = self._cum.copy()
         else:
-            d["s"] = np.asarray(self._state.s).copy()
-            d["count"] = np.asarray(self._state.count).copy()
+            st = self._host_state()  # canonical layout; see StreamingCounter
+            d["s"] = np.asarray(st.s).copy()
+            d["count"] = np.asarray(st.count).copy()
         return d
 
     def load_state_dict(self, d: dict) -> None:
@@ -872,10 +999,9 @@ class StreamingA2Counter:
         if self.eps.N == 1:
             self._cum = d["cum"].astype(np.int64)
         else:
-            self._state = dataclasses.replace(
-                self._state,
+            self._set_host_state(A2State(
                 s=jnp.asarray(d["s"].astype(np.int32)),
-                count=jnp.asarray(d["count"].astype(np.int32)))
+                count=jnp.asarray(d["count"].astype(np.int32))))
 
 
 class StreamingMiner:
@@ -1009,7 +1135,8 @@ class StreamingMiner:
             if a2c is None:
                 a2c = self._a2[key] = StreamingA2Counter(
                     cand, executor=self.executor,
-                    bounded=self.history_limit is not None)
+                    bounded=self.history_limit is not None,
+                    use_kernel=self.use_kernel)
             a2_cum = self._sync(a2c, window, final)
             a2_prev = (a2c.snapshots[-2] if len(a2c.snapshots) >= 2
                        else zeros)
@@ -1226,7 +1353,8 @@ class StreamingMiner:
             if a2_sub:
                 a2c = StreamingA2Counter(
                     cand, executor=self.executor,
-                    bounded=self.history_limit is not None)
+                    bounded=self.history_limit is not None,
+                    use_kernel=self.use_kernel)
                 a2c.load_state_dict(a2_sub)
                 self._a2[key] = a2c
             if f"tracked/{h}" in d:

@@ -54,8 +54,10 @@ def count_two_pass(stream: EventStream, eps: EpisodeBatch, theta: int,
 
     Stateful mode (``state``/``return_state``) returns
     ``(TwoPassResult, TwoPassState)`` where counts are cumulative over
-    everything the carried machines have seen. Both passes run carried
-    full-batch scans — the A2 cull then gates only the *reported* survivor
+    everything the carried machines have seen; with ``use_kernel`` both
+    passes run through the state-in/state-out Pallas kernels when the
+    dispatch policy allows. Both passes run carried
+    full-batch steps — the A2 cull then gates only the *reported* survivor
     set, not pass-2 compute (a culled episode may become a survivor in a
     later window, so its exact machines must have seen the whole stream;
     ``StreamingMiner`` instead promotes lazily with history replay to keep

@@ -1,3 +1,30 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for episode counting — the paper's GPGPU mining
+loop re-derived for the TPU VPU (episodes on lanes, levels on sublanes).
+
+Modules:
+  a1_count — bounded-list Algorithm 1 (``a1_count_kernel``) and its
+    state-in/state-out streaming variant (``a1_count_state_kernel``): the
+    (NP, LCAP, BM) timestamp brick, one-hot write-pointer mask, and
+    count/ovf rows are kernel I/O with in-place aliasing, so carried
+    window-by-window counting stays on-chip.
+  a2_count — single-slot Algorithm 3 (``a2_count_kernel``) and the
+    single-slot streaming analogue (``a2_count_state_kernel``).
+  ops — dispatch policy (TPU compiled / interpret mode / decline to the
+    XLA scans), host↔kernel layout contract (``episode_layout``,
+    ``event_brick``, ``a1_state_layout``/``a1_state_unpack``,
+    ``a2_state_layout``/``a2_state_unpack``), the instrumented carried
+    entry points (``a1_state_call``, ``a2_state_call``, vmapped fused
+    variants for the cross-session batcher), and the one-shot wrappers.
+  ref — pure-jnp layout oracles the interpret-mode tests pin the kernels
+    against.
+
+Layout contract for the carried state (see ``ops``): episode-major host
+state (``core.count_a1.A1State`` [M, N, L] / ``core.count_a2.A2State``
+[M, N]) packs to level-major lane/sublane bricks — s (NP, LCAP, MP),
+po one-hot (NP, LCAP, MP), cnt/ovf (8, MP) with row 0 meaningful —
+padded with TIME_NEG_INF / PAD_ROW_TYPE so padded lanes and rows are
+inert. Chunked carried calls are bit-identical to one call on the
+concatenation (A1 additionally requires chunk boundaries not to split
+timestamp tie groups; ``core.streaming.StreamingCounter`` holds back the
+trailing tie group to guarantee that).
+"""

@@ -13,6 +13,18 @@ core/count_a1.py — flagged episodes are recounted exactly by the host).
 
 Event stream layout: i32[3, EP] = (types; times; dup) where dup marks a
 same-timestamp real successor (needed for exact eviction accounting).
+
+State-in/state-out variant (``a1_count_state_kernel``): the ``fori_loop``
+carry — the (NP, LCAP, BM) timestamp brick, the one-hot write-pointer
+mask (i32 0/1), and the count/ovf rows — becomes kernel I/O, with
+``input_output_aliases`` donating each state input to its output so a
+long-running stream mutates one persistent on-chip allocation per shape
+bucket. Chunked carried calls are bit-identical to one call on the
+concatenation provided chunk boundaries never split a tie group (the dup
+row is computed per chunk; ``core.streaming.StreamingCounter`` holds back
+the trailing tie group to guarantee that). Layout contract (pack/unpack
+between this brick layout and ``core.count_a1.A1State``'s episode-major
+[M, N, L] arrays) lives in ``ops.a1_state_layout`` / ``a1_state_unpack``.
 """
 
 from __future__ import annotations
@@ -28,13 +40,10 @@ from repro.core.events import TIME_NEG_INF
 from .a2_count import LANES, SUBLANES, PAD_ROW_TYPE
 
 
-def _a1_kernel(n_levels: int, lcap: int, et_ref, tlo_ref, thi_ref, ev_ref,
-               cnt_ref, ovf_ref):
-    et = et_ref[...]      # (NP, BM)
-    tlo = tlo_ref[...]    # (NP, BM) row i = edge i→i+1 (incoming of level i+1)
-    thi = thi_ref[...]
+def _a1_body(n_levels: int, et, tlo, thi, ev_ref):
+    """Per-event step over the (s, po, cnt, ovf) carry — shared by the
+    fresh-state and state-carried kernels."""
     np_, bm = et.shape
-    n_events = ev_ref.shape[1]
 
     def body(j, carry):
         s, po, cnt, ovf = carry  # s,(NP,L,BM) po one-hot,(NP,L,BM)
@@ -65,6 +74,17 @@ def _a1_kernel(n_levels: int, lcap: int, et_ref, tlo_ref, thi_ref, ev_ref,
         cnt = cnt + complete.astype(jnp.int32)[None, :]
         return s, po, cnt, ovf
 
+    return body
+
+
+def _a1_kernel(n_levels: int, lcap: int, et_ref, tlo_ref, thi_ref, ev_ref,
+               cnt_ref, ovf_ref):
+    et = et_ref[...]      # (NP, BM)
+    tlo = tlo_ref[...]    # (NP, BM) row i = edge i→i+1 (incoming of level i+1)
+    thi = thi_ref[...]
+    np_, bm = et.shape
+    n_events = ev_ref.shape[1]
+    body = _a1_body(n_levels, et, tlo, thi, ev_ref)
     s0 = jnp.full((np_, lcap, bm), TIME_NEG_INF, jnp.int32)
     po0 = jnp.zeros((np_, lcap, bm), jnp.bool_).at[:, 0, :].set(True)
     c0 = jnp.zeros((1, bm), jnp.int32)
@@ -73,6 +93,25 @@ def _a1_kernel(n_levels: int, lcap: int, et_ref, tlo_ref, thi_ref, ev_ref,
                                        (s0, po0, c0, o0))
     cnt_ref[...] = jnp.broadcast_to(cnt, cnt_ref.shape)
     ovf_ref[...] = jnp.broadcast_to(ovf, ovf_ref.shape)
+
+
+def _a1_state_kernel(n_levels: int, lcap: int, et_ref, tlo_ref, thi_ref,
+                     ev_ref, sin_ref, poin_ref, cin_ref, oin_ref,
+                     cnt_ref, ovf_ref, sout_ref, poout_ref):
+    """State-carried variant: resume the machines from the input brick and
+    emit the advanced brick (aliased in place by the wrapper)."""
+    et = et_ref[...]
+    tlo = tlo_ref[...]
+    thi = thi_ref[...]
+    n_events = ev_ref.shape[1]
+    body = _a1_body(n_levels, et, tlo, thi, ev_ref)
+    s, po, cnt, ovf = jax.lax.fori_loop(
+        0, n_events, body,
+        (sin_ref[...], poin_ref[...] != 0, cin_ref[0:1, :], oin_ref[0:1, :]))
+    cnt_ref[...] = jnp.broadcast_to(cnt, cnt_ref.shape)
+    ovf_ref[...] = jnp.broadcast_to(ovf, ovf_ref.shape)
+    sout_ref[...] = s
+    poout_ref[...] = po.astype(jnp.int32)
 
 
 @functools.partial(
@@ -102,3 +141,49 @@ def a1_count_kernel(etypes, tlo, thi, events, *, n_levels: int,
         out_shape=out_shape,
         interpret=interpret,
     )(etypes, tlo, thi, events)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_levels", "lcap", "block_m", "interpret"))
+def a1_count_state_kernel(etypes, tlo, thi, events, s, po, cnt, ovf, *,
+                          n_levels: int, lcap: int = 4,
+                          block_m: int = LANES, interpret: bool = False):
+    """State-in/state-out pallas_call wrapper.
+
+    State operands (all i32, kernel brick layout — see ``ops``):
+      s    (NP, LCAP, M)  circular timestamp brick (TIME_NEG_INF = empty)
+      po   (NP, LCAP, M)  one-hot write-pointer mask (0/1)
+      cnt  (8, M)         cumulative counts, row 0 meaningful
+      ovf  (8, M)         sticky live-eviction flags, row 0 meaningful
+
+    Returns (cnt, ovf, s, po) advanced past ``events``; each state input is
+    aliased onto its output (donated), so never reuse the passed arrays.
+    """
+    np_, m = etypes.shape
+    grid = (m // block_m,)
+    kernel = functools.partial(_a1_state_kernel, n_levels, lcap)
+    out_shape = [jax.ShapeDtypeStruct((SUBLANES, m), jnp.int32),
+                 jax.ShapeDtypeStruct((SUBLANES, m), jnp.int32),
+                 jax.ShapeDtypeStruct((np_, lcap, m), jnp.int32),
+                 jax.ShapeDtypeStruct((np_, lcap, m), jnp.int32)]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((np_, block_m), lambda i: (0, i)),
+            pl.BlockSpec((np_, block_m), lambda i: (0, i)),
+            pl.BlockSpec((np_, block_m), lambda i: (0, i)),
+            pl.BlockSpec(events.shape, lambda i: (0, 0)),
+            pl.BlockSpec((np_, lcap, block_m), lambda i: (0, 0, i)),
+            pl.BlockSpec((np_, lcap, block_m), lambda i: (0, 0, i)),
+            pl.BlockSpec((SUBLANES, block_m), lambda i: (0, i)),
+            pl.BlockSpec((SUBLANES, block_m), lambda i: (0, i)),
+        ],
+        out_specs=[pl.BlockSpec((SUBLANES, block_m), lambda i: (0, i)),
+                   pl.BlockSpec((SUBLANES, block_m), lambda i: (0, i)),
+                   pl.BlockSpec((np_, lcap, block_m), lambda i: (0, 0, i)),
+                   pl.BlockSpec((np_, lcap, block_m), lambda i: (0, 0, i))],
+        out_shape=out_shape,
+        input_output_aliases={6: 0, 7: 1, 4: 2, 5: 3},
+        interpret=interpret,
+    )(etypes, tlo, thi, events, s, po, cnt, ovf)

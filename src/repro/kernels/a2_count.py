@@ -21,6 +21,14 @@ memory-bound (§Roofline in EXPERIMENTS.md).
 Event padding uses type = PAD_TYPE (-1); level-row padding uses -2, so a
 padded event never matches a padded row. Validated in ``interpret=True``
 against ``ref.a2_count_ref`` (tests/test_kernels.py sweeps shapes+dtypes).
+
+State-in/state-out variant (``a2_count_state_kernel``): the single-slot
+timestamp tile and the count row become kernel I/O with in-place aliasing,
+so chunk-by-chunk streaming stays on-chip. A single slot per level is
+complete machine state (Obs. 5.1), so carried chunked counting is
+unconditionally bit-exact under any partitioning — no tie-group caveat.
+Pack/unpack to ``core.count_a2.A2State`` lives in ``ops.a2_state_layout``
+/ ``ops.a2_state_unpack``.
 """
 
 from __future__ import annotations
@@ -38,13 +46,10 @@ SUBLANES = 8
 PAD_ROW_TYPE = -2
 
 
-def _a2_kernel(n_levels: int, et_ref, tlo_ref, thi_ref, ev_ref, cnt_ref):
-    """One episode tile × all events. n_levels is static (>= 2)."""
-    et = et_ref[...]          # (NP, BM)
-    tlo = tlo_ref[...]        # (NP, BM) row i = edge (i, i+1)
-    thi = thi_ref[...]
+def _a2_body(n_levels: int, et, tlo, thi, ev_ref):
+    """Per-event step over the (s, cnt) carry — shared by the fresh-state
+    and state-carried kernels."""
     np_, bm = et.shape
-    n_events = ev_ref.shape[1]
 
     def body(j, carry):
         s, cnt = carry
@@ -64,10 +69,36 @@ def _a2_kernel(n_levels: int, et_ref, tlo_ref, thi_ref, ev_ref, cnt_ref):
         cnt = cnt + complete.astype(jnp.int32)[None, :]
         return s, cnt
 
+    return body
+
+
+def _a2_kernel(n_levels: int, et_ref, tlo_ref, thi_ref, ev_ref, cnt_ref):
+    """One episode tile × all events. n_levels is static (>= 2)."""
+    et = et_ref[...]          # (NP, BM)
+    tlo = tlo_ref[...]        # (NP, BM) row i = edge (i, i+1)
+    thi = thi_ref[...]
+    np_, bm = et.shape
+    n_events = ev_ref.shape[1]
+    body = _a2_body(n_levels, et, tlo, thi, ev_ref)
     s0 = jnp.full((np_, bm), TIME_NEG_INF, jnp.int32)
     c0 = jnp.zeros((1, bm), jnp.int32)
     _, cnt = jax.lax.fori_loop(0, n_events, body, (s0, c0))
     cnt_ref[...] = jnp.broadcast_to(cnt, cnt_ref.shape)
+
+
+def _a2_state_kernel(n_levels: int, et_ref, tlo_ref, thi_ref, ev_ref,
+                     sin_ref, cin_ref, cnt_ref, sout_ref):
+    """State-carried variant: resume from the input tile, emit the advanced
+    tile (aliased in place by the wrapper)."""
+    et = et_ref[...]
+    tlo = tlo_ref[...]
+    thi = thi_ref[...]
+    n_events = ev_ref.shape[1]
+    body = _a2_body(n_levels, et, tlo, thi, ev_ref)
+    s, cnt = jax.lax.fori_loop(0, n_events, body,
+                               (sin_ref[...], cin_ref[0:1, :]))
+    cnt_ref[...] = jnp.broadcast_to(cnt, cnt_ref.shape)
+    sout_ref[...] = s
 
 
 @functools.partial(jax.jit,
@@ -99,3 +130,39 @@ def a2_count_kernel(etypes, tlo, thi, events, *, n_levels: int,
         out_shape=jax.ShapeDtypeStruct((SUBLANES, m), jnp.int32),
         interpret=interpret,
     )(etypes, tlo, thi, events)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_levels", "block_m", "interpret"))
+def a2_count_state_kernel(etypes, tlo, thi, events, s, cnt, *, n_levels: int,
+                          block_m: int = LANES, interpret: bool = False):
+    """State-in/state-out pallas_call wrapper.
+
+    State operands (i32, kernel layout): ``s`` (NP, M) last-accepted
+    timestamp per level (TIME_NEG_INF = empty); ``cnt`` (8, M) cumulative
+    counts, row 0 meaningful. Returns (cnt, s) advanced past ``events``;
+    state inputs are aliased onto the outputs (donated) — never reuse the
+    passed arrays.
+    """
+    np_, m = etypes.shape
+    grid = (m // block_m,)
+    kernel = functools.partial(_a2_state_kernel, n_levels)
+    out_shape = [jax.ShapeDtypeStruct((SUBLANES, m), jnp.int32),
+                 jax.ShapeDtypeStruct((np_, m), jnp.int32)]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((np_, block_m), lambda i: (0, i)),
+            pl.BlockSpec((np_, block_m), lambda i: (0, i)),
+            pl.BlockSpec((np_, block_m), lambda i: (0, i)),
+            pl.BlockSpec(events.shape, lambda i: (0, 0)),
+            pl.BlockSpec((np_, block_m), lambda i: (0, i)),
+            pl.BlockSpec((SUBLANES, block_m), lambda i: (0, i)),
+        ],
+        out_specs=[pl.BlockSpec((SUBLANES, block_m), lambda i: (0, i)),
+                   pl.BlockSpec((np_, block_m), lambda i: (0, i))],
+        out_shape=out_shape,
+        input_output_aliases={5: 0, 4: 1},
+        interpret=interpret,
+    )(etypes, tlo, thi, events, s, cnt)

@@ -1,29 +1,61 @@
 """jit'd public wrappers for the episode-counting kernels.
 
 Handles host→kernel layout (episode-major → level-major, lane/sublane
-padding), dispatch policy, and result unpacking.
+padding), dispatch policy, and result unpacking — including the
+state-in/state-out layout contract for the carried (streaming) kernels:
+
+  * ``a1_state_layout`` / ``a1_state_unpack`` convert between
+    ``core.count_a1.A1State``'s episode-major [M, N, L] arrays and the
+    kernel's level-major (NP, LCAP, MP) brick + one-hot write-pointer
+    mask + (8, MP) count/ovf rows;
+  * ``a2_state_layout`` / ``a2_state_unpack`` do the single-slot analogue;
+  * ``a1_state_call`` / ``a2_state_call`` dispatch one carried chunk in
+    kernel layout (the streaming hot path keeps state resident in this
+    layout — no per-window repacking);
+  * ``a1_count_stateful`` / ``a2_count_stateful`` are the one-shot-chunk
+    conveniences used by ``count_a1``/``count_a2`` stateful modes (host
+    layout in, host layout out).
 
 Dispatch policy:
   * on TPU — compiled Pallas kernel;
-  * anywhere with ``REPRO_INTERPRET_KERNELS=1`` (or ``force="interpret"``) —
-    ``interpret=True`` (kernel body executed by XLA CPU; used by tests);
+  * anywhere with ``REPRO_INTERPRET_KERNELS=1`` / ``REPRO_KERNEL_INTERPRET=1``
+    (or ``force="interpret"``) — ``interpret=True`` (kernel body executed by
+    XLA CPU; used by tests and the CI kernel job);
   * otherwise — raise NotImplementedError so callers (core/count_*.py) fall
     back to the XLA-scan engine, which is the fast CPU path.
+
+``KERNEL_CALLS`` tallies host-side kernel dispatches per kind ("a1", "a2",
+"a1_state", "a2_state") — the interpret-mode instrumentation tests use it to
+assert the Pallas path actually executed (the bug this module's stateful API
+fixes was exactly a silent bypass that no test could see).
 """
 
 from __future__ import annotations
 
+import collections
+import functools
 import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.count_a1 import A1State, DEFAULT_LCAP, init_a1_state
+from repro.core.count_a2 import A2State, init_a2_state
 from repro.core.episodes import EpisodeBatch
-from repro.core.events import PAD_TYPE, EventStream, count_level1
+from repro.core.events import (PAD_TYPE, TIME_NEG_INF, EventStream,
+                               count_level1)
 
-from .a1_count import a1_count_kernel
-from .a2_count import LANES, PAD_ROW_TYPE, SUBLANES, a2_count_kernel
+from .a1_count import a1_count_kernel, a1_count_state_kernel
+from .a2_count import (LANES, PAD_ROW_TYPE, SUBLANES, a2_count_kernel,
+                       a2_count_state_kernel)
+
+KERNEL_CALLS: collections.Counter = collections.Counter()
+
+
+def reset_kernel_calls() -> None:
+    """Zero the dispatch tally (test instrumentation)."""
+    KERNEL_CALLS.clear()
 
 
 def _mode(force: str | None) -> bool:
@@ -34,9 +66,17 @@ def _mode(force: str | None) -> bool:
         return True
     if jax.default_backend() == "tpu":
         return False
-    if os.environ.get("REPRO_INTERPRET_KERNELS") == "1":
+    if (os.environ.get("REPRO_INTERPRET_KERNELS") == "1"
+            or os.environ.get("REPRO_KERNEL_INTERPRET") == "1"):
         return True
     raise NotImplementedError("no TPU and interpret mode not requested")
+
+
+def kernel_mode(force: str | None = None) -> bool:
+    """Public dispatch probe: the interpret flag the kernels should run
+    with, or NotImplementedError when the caller should use the XLA-scan
+    engine instead. Streaming counters probe once at construction."""
+    return _mode(force)
 
 
 def _round_up(x: int, k: int) -> int:
@@ -59,24 +99,30 @@ def episode_layout(eps: EpisodeBatch, inclusive_lower: bool,
     return jnp.asarray(et), jnp.asarray(tlo), jnp.asarray(thi)
 
 
-def event_layout(stream: EventStream, with_dup: bool):
-    """Events → i32[2 or 3, EP] (types; times; [dup]), EP padded to 128."""
-    n = stream.types.shape[0]
-    ep = _round_up(max(n, 1), LANES)
+def event_brick(types, times, with_dup: bool, length: int | None = None):
+    """Raw event arrays → padded i32[2 or 3, EP] kernel brick
+    (types; times; [dup]). ``length`` overrides the default
+    round-up-to-128 padding (streaming uses its shape buckets)."""
+    types = np.asarray(types, np.int32)
+    times = np.asarray(times, np.int32)
+    n = types.shape[0]
+    ep = _round_up(max(n, 1), LANES) if length is None else length
     rows = 3 if with_dup else 2
     ev = np.zeros((rows, ep), np.int32)
     ev[0, :] = PAD_TYPE
-    ev[0, :n] = stream.types
-    last = stream.times[-1] if n else 0
+    ev[0, :n] = types
+    last = times[-1] if n else 0
     ev[1, :] = last
-    ev[1, :n] = stream.times
-    if with_dup:
-        dup = np.zeros(ep, np.int32)
-        if n > 1:
-            dup[: n - 1] = ((stream.times[1:] == stream.times[:-1])
-                            & (stream.types[1:] != PAD_TYPE)).astype(np.int32)
-        ev[2, :] = dup
+    ev[1, :n] = times
+    if with_dup and n > 1:
+        ev[2, : n - 1] = ((times[1:] == times[:-1])
+                          & (types[1:] != PAD_TYPE)).astype(np.int32)
     return jnp.asarray(ev)
+
+
+def event_layout(stream: EventStream, with_dup: bool):
+    """Events → i32[2 or 3, EP] (types; times; [dup]), EP padded to 128."""
+    return event_brick(stream.types, stream.times, with_dup)
 
 
 def a2_count(stream: EventStream, eps: EpisodeBatch,
@@ -88,6 +134,7 @@ def a2_count(stream: EventStream, eps: EpisodeBatch,
         return count_level1(stream, eps.etypes[:, 0])
     et, tlo, thi = episode_layout(eps, inclusive_lower=True)
     ev = event_layout(stream, with_dup=False)
+    KERNEL_CALLS["a2"] += 1
     out = a2_count_kernel(et, tlo, thi, ev, n_levels=eps.N,
                           interpret=interpret)
     return np.asarray(out[0, : eps.M], dtype=np.int64)
@@ -104,7 +151,158 @@ def a1_count(stream: EventStream, eps: EpisodeBatch, lcap: int = 4,
             np.zeros(eps.M, dtype=bool)
     et, tlo, thi = episode_layout(eps, inclusive_lower=False)
     ev = event_layout(stream, with_dup=True)
+    KERNEL_CALLS["a1"] += 1
     cnt, ovf = a1_count_kernel(et, tlo, thi, ev, n_levels=eps.N, lcap=lcap,
                                interpret=interpret)
     return (np.asarray(cnt[0, : eps.M], dtype=np.int64),
             np.asarray(ovf[0, : eps.M], dtype=bool))
+
+
+# --------------------------------------------------------------------------
+# State-carried (streaming) dispatch: pack/unpack + instrumented kernel calls
+# --------------------------------------------------------------------------
+
+
+def a1_state_layout(state: A1State, block_m: int = LANES):
+    """``A1State`` ([M, N, L] episode-major) → kernel brick layout.
+
+    Returns (s, po, cnt, ovf):
+      s    i32(NP, L, MP)  s[lvl, slot, m] = state.s[m, lvl, slot]
+      po   i32(NP, L, MP)  one-hot of state.ptr (padded lanes: slot 0 hot)
+      cnt  i32(8, MP)      row 0 = state.count
+      ovf  i32(8, MP)      row 0 = state.ovf
+    """
+    s_host = np.asarray(state.s)
+    m, n, lcap = s_host.shape
+    np_ = _round_up(max(n, 1), SUBLANES)
+    mp = _round_up(m, block_m)
+    s = np.full((np_, lcap, mp), TIME_NEG_INF, np.int32)
+    s[:n, :, :m] = s_host.transpose(1, 2, 0)
+    ptr = np.zeros((np_, mp), np.int32)
+    ptr[:n, :m] = np.asarray(state.ptr).T
+    po = (np.arange(lcap, dtype=np.int32)[None, :, None]
+          == ptr[:, None, :]).astype(np.int32)
+    cnt = np.zeros((SUBLANES, mp), np.int32)
+    cnt[0, :m] = np.asarray(state.count)
+    ovf = np.zeros((SUBLANES, mp), np.int32)
+    ovf[0, :m] = np.asarray(state.ovf)
+    return (jnp.asarray(s), jnp.asarray(po), jnp.asarray(cnt),
+            jnp.asarray(ovf))
+
+
+def a1_state_unpack(s, po, cnt, ovf, m: int, n: int) -> A1State:
+    """Inverse of ``a1_state_layout`` (kernel brick → episode-major)."""
+    s_host = np.asarray(s)[:n, :, :m].transpose(2, 0, 1)
+    ptr = np.argmax(np.asarray(po)[:n, :, :m], axis=1).T.astype(np.int32)
+    return A1State(
+        s=jnp.asarray(s_host),
+        ptr=jnp.asarray(ptr),
+        count=jnp.asarray(np.asarray(cnt)[0, :m]),
+        ovf=jnp.asarray(np.asarray(ovf)[0, :m] != 0))
+
+
+def a2_state_layout(state: A2State, block_m: int = LANES):
+    """``A2State`` ([M, N] episode-major) → kernel (s, cnt) layout."""
+    s_host = np.asarray(state.s)
+    m, n = s_host.shape
+    np_ = _round_up(max(n, 1), SUBLANES)
+    mp = _round_up(m, block_m)
+    s = np.full((np_, mp), TIME_NEG_INF, np.int32)
+    s[:n, :m] = s_host.T
+    cnt = np.zeros((SUBLANES, mp), np.int32)
+    cnt[0, :m] = np.asarray(state.count)
+    return jnp.asarray(s), jnp.asarray(cnt)
+
+
+def a2_state_unpack(s, cnt, m: int, n: int) -> A2State:
+    """Inverse of ``a2_state_layout``."""
+    return A2State(
+        s=jnp.asarray(np.asarray(s)[:n, :m].T),
+        count=jnp.asarray(np.asarray(cnt)[0, :m]))
+
+
+def a1_state_call(et, tlo, thi, ev, s, po, cnt, ovf, *, n_levels: int,
+                  lcap: int, interpret: bool):
+    """One carried A1 chunk in kernel layout (instrumented). Returns
+    (cnt, ovf, s, po); the passed state arrays are donated."""
+    KERNEL_CALLS["a1_state"] += 1
+    return a1_count_state_kernel(et, tlo, thi, ev, s, po, cnt, ovf,
+                                 n_levels=n_levels, lcap=lcap,
+                                 interpret=interpret)
+
+
+def a2_state_call(et, tlo, thi, ev, s, cnt, *, n_levels: int,
+                  interpret: bool):
+    """One carried A2 chunk in kernel layout (instrumented). Returns
+    (cnt, s); the passed state arrays are donated."""
+    KERNEL_CALLS["a2_state"] += 1
+    return a2_count_state_kernel(et, tlo, thi, ev, s, cnt,
+                                 n_levels=n_levels, interpret=interpret)
+
+
+@functools.lru_cache(maxsize=None)
+def a1_state_vmapped(n_levels: int, lcap: int, interpret: bool):
+    """vmap of the carried A1 kernel over a leading session axis — the
+    cross-session batcher fuses same-shape tenants through this (Pallas
+    lowers the mapped axis onto the grid)."""
+    f = functools.partial(a1_count_state_kernel, n_levels=n_levels,
+                          lcap=lcap, interpret=interpret)
+    return jax.jit(jax.vmap(f))
+
+
+@functools.lru_cache(maxsize=None)
+def a2_state_vmapped(n_levels: int, interpret: bool):
+    """vmap of the carried A2 kernel over a leading session axis."""
+    f = functools.partial(a2_count_state_kernel, n_levels=n_levels,
+                          interpret=interpret)
+    return jax.jit(jax.vmap(f))
+
+
+def a1_count_stateful(stream: EventStream, eps: EpisodeBatch,
+                      state: A1State | None = None,
+                      lcap: int = DEFAULT_LCAP, force: str | None = None):
+    """Kernel-backed carried A1 chunk (host layout in/out).
+
+    Returns (counts int64[M], ovf bool[M], new ``A1State``) cumulative over
+    everything the carried machines have seen. ``eps.N`` must be >= 2
+    (callers shortcut N == 1 to the histogram). Exactness caveats are the
+    scan engine's: chunk boundaries must not split tie groups, and
+    ``ovf``-flagged episodes need a host recount over the concatenated
+    history (``StreamingCounter`` automates both).
+    """
+    interpret = _mode(force)
+    if state is None:
+        state = init_a1_state(eps, lcap)
+    lcap = int(state.s.shape[-1])  # the brick's static capacity
+    et, tlo, thi = episode_layout(eps, inclusive_lower=False)
+    ev = event_layout(stream, with_dup=True)
+    s, po, cnt, ovf = a1_state_layout(state)
+    cnt, ovf, s, po = a1_state_call(et, tlo, thi, ev, s, po, cnt, ovf,
+                                    n_levels=eps.N, lcap=lcap,
+                                    interpret=interpret)
+    new_state = a1_state_unpack(s, po, cnt, ovf, eps.M, eps.N)
+    return (np.asarray(cnt[0, : eps.M], dtype=np.int64),
+            np.asarray(ovf[0, : eps.M] != 0), new_state)
+
+
+def a2_count_stateful(stream: EventStream, eps: EpisodeBatch,
+                      state: A2State | None = None,
+                      inclusive_lower: bool = True,
+                      force: str | None = None):
+    """Kernel-backed carried single-slot chunk (host layout in/out).
+
+    Counts ``eps`` under its *own* bounds (the A2 use passes the relaxed
+    batch with ``inclusive_lower=True``, matching ``count_single_slot``).
+    Returns (counts int64[M], new ``A2State``); unconditionally bit-exact
+    under any chunking (Obs. 5.1). ``eps.N`` must be >= 2.
+    """
+    interpret = _mode(force)
+    if state is None:
+        state = init_a2_state(eps)
+    et, tlo, thi = episode_layout(eps, inclusive_lower=inclusive_lower)
+    ev = event_layout(stream, with_dup=False)
+    s, cnt = a2_state_layout(state)
+    cnt, s = a2_state_call(et, tlo, thi, ev, s, cnt, n_levels=eps.N,
+                           interpret=interpret)
+    new_state = a2_state_unpack(s, cnt, eps.M, eps.N)
+    return (np.asarray(cnt[0, : eps.M], dtype=np.int64), new_state)

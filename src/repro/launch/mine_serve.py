@@ -50,6 +50,9 @@ def main():
     ap.add_argument("--queue-depth", type=int, default=4,
                     help="per-session ingest cap (backpressure beyond)")
     ap.add_argument("--no-batching", action="store_true")
+    ap.add_argument("--no-kernel", action="store_true",
+                    help="force the XLA-scan engines (default: carried "
+                         "Pallas kernels when the dispatch policy allows)")
     args = ap.parse_args()
 
     svc = MiningService(
@@ -67,7 +70,8 @@ def main():
             theta_mode=("cumulative" if args.theta_mode == "cumulative"
                         else "per_window"),
             max_level=args.max_level, window_ms=window_ms,
-            engine=args.engine, history_limit=args.history_limit)
+            engine=args.engine, history_limit=args.history_limit,
+            use_kernel=not args.no_kernel)
         sid = svc.create_session(f"array-{i}", cfg)
         wins = list(partition_windows(stream, window_ms))
         feeds[sid] = [(w, j == len(wins) - 1) for j, w in enumerate(wins)]

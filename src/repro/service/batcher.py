@@ -18,6 +18,15 @@ shape bucket:
   axis, runs one jit'd ``vmap`` of the underlying scan per bucket, and
   scatters the per-lane results back.
 
+The carried Pallas kernels ride the same barrier: ``a1_kernel_scan`` /
+``a2_kernel_scan`` take operands already in kernel brick layout (every
+lane in a group shares (NP, LCAP, MP, EP) shapes — the counters'
+shape-bucketed staging guarantees that), and the flush leader runs one
+``vmap`` of the state-in/state-out ``pallas_call`` per group (Pallas
+lowers the mapped session axis onto the grid, so the whole fleet's
+machines advance in a single kernel launch). Lane results come back in
+kernel layout — the counters keep their state resident there.
+
 Every scan in this engine is integer-only (i32 compares/adds, bool
 masks), so the vmapped lane computation is bit-identical to the
 standalone dispatch — the service's exactness guarantee rests on that and
@@ -144,6 +153,25 @@ class CrossSessionBatcher:
         return self._submit(
             _Request("mapc", key, args, _PAD_MAPC, lcap, m, mb))
 
+    def a1_kernel_scan(self, args, n_levels: int, lcap: int,
+                       interpret: bool):
+        # kernel-layout operands: (et[NP,MP], tlo, thi, ev[3,EP],
+        # s[NP,LCAP,MP], po, cnt[8,MP], ovf) — lanes fuse only on identical
+        # shapes, so no padding/slicing is needed (spec/m unused)
+        key = ("a1k", n_levels, lcap, interpret, tuple(args[0].shape),
+               tuple(args[3].shape))
+        return self._submit(_Request("a1k", key, args, None,
+                                     (n_levels, lcap, interpret), None,
+                                     None))
+
+    def a2_kernel_scan(self, args, n_levels: int, interpret: bool):
+        # kernel-layout operands: (et[NP,MP], tlo, thi, ev[2,EP], s[NP,MP],
+        # cnt[8,MP])
+        key = ("a2k", n_levels, interpret, tuple(args[0].shape),
+               tuple(args[3].shape))
+        return self._submit(_Request("a2k", key, args, None,
+                                     (n_levels, interpret), None, None))
+
     # --------------------------------------------------- step accounting
 
     def begin_step(self) -> None:
@@ -208,6 +236,17 @@ class CrossSessionBatcher:
         self.fused_requests += len(group)
         s = bucket_size(len(group), 1)
         lanes = group + [group[0]] * (s - len(group))  # pad: repeat lane 0
+        if kind in ("a1k", "a2k"):
+            from repro.kernels import ops as kops
+            stacked = tuple(jnp.stack([jnp.asarray(r.args[i]) for r in lanes])
+                            for i in range(len(group[0].args)))
+            kops.KERNEL_CALLS[
+                "a1_state" if kind == "a1k" else "a2_state"] += len(group)
+            if kind == "a1k":
+                out = kops.a1_state_vmapped(*group[0].static)(*stacked)
+            else:
+                out = kops.a2_state_vmapped(*group[0].static)(*stacked)
+            return [tuple(o[i] for o in out) for i in range(len(group))]
         padded = [_pad_m(r.args, r.spec, r.mb) for r in lanes]
         stacked = tuple(jnp.stack([p[i] for p in padded])
                         for i in range(len(group[0].args)))
@@ -230,4 +269,14 @@ class CrossSessionBatcher:
             return _a1_carry_scan()(*req.args)
         if req.kind == "a2":
             return _a2_carry_scan()(*req.args)
+        if req.kind == "a1k":
+            from repro.kernels import ops as kops
+            n_levels, lcap, interpret = req.static
+            return kops.a1_state_call(*req.args, n_levels=n_levels,
+                                      lcap=lcap, interpret=interpret)
+        if req.kind == "a2k":
+            from repro.kernels import ops as kops
+            n_levels, interpret = req.static
+            return kops.a2_state_call(*req.args, n_levels=n_levels,
+                                      interpret=interpret)
         return _map_all_segments(*req.args, req.static)

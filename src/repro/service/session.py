@@ -43,7 +43,12 @@ class SessionConfig:
     history_limit: int | None = 8    # checkpoint interval (None = unbounded)
     lcap: int = 4
     num_segments: int = 8
-    use_kernel: bool = False
+    # On-chip counting (the chip-on-chip promise): sessions run the carried
+    # Pallas kernels whenever the dispatch policy allows, falling back to
+    # the XLA scans (bit-identical) otherwise. Unified with StreamingMiner
+    # and the one-shot engines — a service session must never silently get
+    # a slower engine than a standalone miner would.
+    use_kernel: bool = True
 
     def make_miner(self, executor=None) -> StreamingMiner:
         return StreamingMiner(

@@ -74,6 +74,7 @@ def test_a1_kernel_layout_oracle_identity():
 
 def test_kernel_dispatch_declines_on_cpu(monkeypatch):
     monkeypatch.delenv("REPRO_INTERPRET_KERNELS", raising=False)
+    monkeypatch.delenv("REPRO_KERNEL_INTERPRET", raising=False)
     rng = np.random.default_rng(3)
     st = random_stream(4, 50, 100, seed=3)
     eps = _batch(rng, 8, 3, 4)
