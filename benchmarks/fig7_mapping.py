@@ -1,15 +1,24 @@
 """Paper Fig. 7: PTPE vs MapConcatenate vs Hybrid across episode sizes and
 support thresholds (θ controls how many candidates survive to be counted,
-i.e. the episode-batch width M)."""
+i.e. the episode-batch width M).
+
+A ``--segments`` sweep additionally times the in-kernel MapConcatenate
+(``engine="mapconcat_kernel"``: one Pallas launch, grid = episode tile ×
+time segment) per segment count, recording the serial-step proxy — the
+per-segment event walk the two-axis grid shortens from n to ~n/P + 2W —
+alongside wall clock (interpret mode is emulation speed; the proxy is the
+CPU-CI scaling signal)."""
 
 from __future__ import annotations
 
-from repro.core import count_dispatch
+import numpy as np
+
+from repro.core import count_dispatch, make_segments
 
 from .common import Report, random_candidates, sym26_stream, timeit
 
 
-def run(seconds: int = 20) -> Report:
+def run(seconds: int = 20, segments=()) -> Report:
     rep = Report("fig7_mapping")
     stream, _ = sym26_stream(seconds=seconds)
     for n in (2, 3, 4, 5, 6):
@@ -27,9 +36,29 @@ def run(seconds: int = 20) -> Report:
                     regime=regime,
                     hybrid_regret=round(t_hy / best, 3),
                     winner="ptpe" if t_ptpe < t_mc else "mapconcat")
+    if segments:
+        from repro.core.hybrid import _mapc_kernel_available
+        # tag whether the Pallas path engages here, or the rows would
+        # record the XLA fallback's wall clock labeled as kernel numbers
+        mode = "kernel" if _mapc_kernel_available() else "fallback-xla"
+        n, m = 3, 16  # the low-M regime the segmented mapping targets
+        eps = random_candidates(m, n, seed=n * 100 + m)
+        w_max = int(np.asarray(eps.max_span).max())
+        steps1 = int(make_segments(stream, 1, w_max)[1].shape[1])
+        for p in segments:
+            t_k = timeit(lambda: count_dispatch(
+                stream, eps, engine="mapconcat_kernel", num_segments=p))
+            tau, wt, _ = make_segments(stream, p, w_max)
+            steps = int(wt.shape[1])
+            rep.add(f"mapck_N{n}_M{m}_P{p}", t_k,
+                    segments=int(wt.shape[0]),
+                    mapck_s=round(t_k, 4),
+                    serial_steps_per_segment=steps,
+                    proxy_speedup_vs_1seg=round(steps1 / steps, 3),
+                    mapc_mode=mode)
     rep.save()
     return rep
 
 
 if __name__ == "__main__":
-    run()
+    run(segments=(1, 2, 4, 8))

@@ -27,14 +27,16 @@ def main() -> None:
                    fig10_resources, fig11_engine_vs_sequential,
                    service_scale, streaming_throughput)
     figs = {
-        "fig7": lambda: fig7_mapping.run(seconds=min(seconds, 20)),
+        "fig7": lambda: fig7_mapping.run(seconds=min(seconds, 20),
+                                         segments=(1, 2, 4, 8)),
         "fig8": lambda: fig8_crossover.run(seconds=min(seconds, 15)),
         "fig9": lambda: fig9_twopass.run(seconds=min(seconds, 20)),
         "fig10": lambda: fig10_resources.run(seconds=min(seconds, 20)),
         "fig11": lambda: fig11_engine_vs_sequential.run(
             seconds=min(seconds, 10)),
         "stream": lambda: streaming_throughput.run(
-            seconds=min(seconds, 12)),
+            seconds=min(seconds, 12),
+            segments=(1, 2) if args.quick else (1, 2, 4)),
         "service": lambda: service_scale.run(
             sessions=(2, 8) if args.quick else (2, 4, 8),
             seconds=min(seconds, 8)),

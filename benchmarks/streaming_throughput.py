@@ -22,10 +22,20 @@ occurrences the restart baseline lost (both carried variants are asserted
 bit-equal to one-shot counting on the full stream before any timing is
 trusted).
 
+A ``--segments`` sweep benchmarks the in-kernel MapConcatenate
+(segments × window size): ``StreamingCounter`` on the segmented-kernel
+residency (one Pallas launch per commit, grid = episode tile × time
+segment, Concatenate fold fused on-chip). Besides wall-clock ev/s it
+records the *serial-step proxy* — the longest per-segment event walk of a
+one-shot segmentation, i.e. the per-worker critical path the paper's
+mapping shortens from n to ~n/P + 2W. On CPU CI (interpret mode =
+emulation speed) the proxy is the meaningful scaling signal; on TPU the
+wall clock is.
+
 Usage:
   PYTHONPATH=src python benchmarks/streaming_throughput.py \
       [--seconds 12] [--m 128] [--n 3] [--windows-ms 2000 4000 8000] \
-      [--kernel auto|interpret|off]
+      [--kernel auto|interpret|off] [--segments 1 2 4 8]
 """
 
 from __future__ import annotations
@@ -48,8 +58,9 @@ from repro.data import partition_windows  # noqa: E402
 from repro.telemetry import ThroughputMeter  # noqa: E402
 
 
-def bench_carry(windows, eps, engine, use_kernel=False):
-    ctr = StreamingCounter(eps, engine=engine, use_kernel=use_kernel)
+def bench_carry(windows, eps, engine, use_kernel=False, num_segments=8):
+    ctr = StreamingCounter(eps, engine=engine, use_kernel=use_kernel,
+                           num_segments=num_segments)
     meter = ThroughputMeter()
     gen = ctr.run(windows)
     for w in windows:
@@ -57,6 +68,17 @@ def bench_carry(windows, eps, engine, use_kernel=False):
         out = next(gen)
         meter.stop(len(w))
     return out, meter, ctr
+
+
+def serial_step_proxy(stream, eps, num_segments):
+    """Longest per-segment event walk of a one-shot P-way segmentation —
+    the per-worker critical path (fori_loop trips per grid step) that the
+    segmented kernel shortens from n to ~n/P + 2W. Interpret-mode CI uses
+    this as the scaling signal; compiled runs use the wall clock."""
+    from repro.core import make_segments
+    w_max = int(np.asarray(eps.max_span).max())
+    tau, wt, _ = make_segments(stream, num_segments, w_max)
+    return int(wt.shape[1]), int(wt.shape[0])
 
 
 def bench_restart(windows, eps):
@@ -71,7 +93,7 @@ def bench_restart(windows, eps):
 
 def run(seconds: int = 12, m: int = 128, n: int = 3,
         windows_ms=(2000, 4000, 8000), engine: str = "ptpe",
-        kernel: str = "auto"):
+        kernel: str = "auto", segments=()):
     if kernel == "interpret":
         os.environ["REPRO_KERNEL_INTERPRET"] = "1"
     stream, truth = sym26_stream(seconds=seconds)
@@ -79,6 +101,36 @@ def run(seconds: int = 12, m: int = 128, n: int = 3,
                             include=[truth["short"][0], truth["long"][0]])
     oracle = count_a1(stream, eps, use_kernel=False)
     rep = Report("streaming_throughput")
+
+    if segments and kernel != "off":
+        # segmented-kernel sweep: segments × window size, exactness
+        # asserted per cell, serial-step proxy vs the 1-segment kernel
+        steps1, _ = serial_step_proxy(stream, eps, 1)
+        for wms in windows_ms:
+            windows = list(partition_windows(stream, wms))
+            for p in segments:
+                final, meter, ctr = bench_carry(
+                    windows, eps, "mapconcatenate", use_kernel=True,
+                    num_segments=p)
+                np.testing.assert_array_equal(
+                    final, oracle,
+                    err_msg=f"segmented-kernel counts diverged at "
+                            f"{wms}ms P={p}")
+                steps, p_eff = serial_step_proxy(stream, eps, p)
+                s = meter.summary()
+                mode = ("kernel" if ctr._mapc_kernel else "fallback-xla")
+                rep.add(f"mapck/w{wms}/p{p}", s["seconds"],
+                        segments=p_eff, windows=s["windows"],
+                        events=s["events"],
+                        ev_per_s=round(s["events_per_sec"]),
+                        steady_ev_per_s=round(s["steady_events_per_sec"]),
+                        serial_steps_per_segment=steps,
+                        proxy_speedup_vs_1seg=round(steps1 / steps, 3),
+                        mapc_mode=mode)
+                print(f"[stream-bench] mapck w={wms}ms P={p_eff} "
+                      f"({mode}): {s['steady_events_per_sec']:,.0f} ev/s "
+                      f"steady, serial steps/segment {steps} "
+                      f"({steps1 / steps:.2f}x vs 1-seg)")
 
     for wms in windows_ms:
         windows = list(partition_windows(stream, wms))
@@ -133,16 +185,20 @@ def main():
     ap.add_argument("--windows-ms", type=int, nargs="+",
                     default=[2000, 4000, 8000])
     ap.add_argument("--engine", default="ptpe",
-                    choices=["ptpe", "mapconcatenate", "hybrid"])
+                    choices=["ptpe", "mapconcatenate", "hybrid", "mapconcat_kernel"])
     ap.add_argument("--kernel", default="auto",
                     choices=["auto", "interpret", "off"],
                     help="carried-kernel variant: auto = dispatch policy "
                          "decides (compiled on TPU, scan fallback on CPU), "
                          "interpret = force interpret-mode kernels "
                          "(path check; emulation speed), off = skip")
+    ap.add_argument("--segments", type=int, nargs="*", default=[],
+                    help="in-kernel MapConcatenate sweep: one "
+                         "segmented-kernel run per (window size, P)")
     args = ap.parse_args()
     run(seconds=args.seconds, m=args.m, n=args.n,
-        windows_ms=args.windows_ms, engine=args.engine, kernel=args.kernel)
+        windows_ms=args.windows_ms, engine=args.engine, kernel=args.kernel,
+        segments=tuple(args.segments))
 
 
 if __name__ == "__main__":

@@ -15,8 +15,9 @@ from .episodes import EpisodeBatch
 from .events import (PAD_TYPE, TIME_NEG_INF, EventStream, count_level1,
                      type_histogram)
 from .hybrid import count_dispatch, crossover, f_of_n
-from .mapconcat import (concatenate_tree, fold_pair, make_segments,
-                        mapconcatenate)
+from .mapconcat import (concatenate_tree, fold_pair, fold_pair_unrolled,
+                        make_segments, mapconcatenate, mapconcatenate_kernel,
+                        phase_cum, stitch_zones)
 from .miner import MiningResult, mine, mine_partitions
 from .connectivity import ConnectivityGraph, reconstruct
 from .ref import (count_a1_sequential, count_a2_sequential,
@@ -32,7 +33,9 @@ __all__ = [
     "type_histogram", "count_level1",
     "count_a1", "count_a1_vectorized", "count_a2", "count_single_slot",
     "A1State", "A2State", "init_a1_state", "init_a2_state",
-    "mapconcatenate", "concatenate_tree", "fold_pair", "make_segments",
+    "mapconcatenate", "mapconcatenate_kernel", "concatenate_tree",
+    "fold_pair", "fold_pair_unrolled", "make_segments", "phase_cum",
+    "stitch_zones",
     "count_two_pass", "count_one_pass", "TwoPassResult", "TwoPassState",
     "count_dispatch", "crossover", "f_of_n",
     "mine", "mine_partitions", "MiningResult",

@@ -152,7 +152,7 @@ def count_single_slot(stream: EventStream, eps: EpisodeBatch,
 
 def count_a2(stream: EventStream, eps: EpisodeBatch,
              use_kernel: bool = True, state: A2State | None = None,
-             return_state: bool = False):
+             return_state: bool = False, segments: int | None = None):
     """Paper Algorithm 3: upper-bound counts of the relaxed episodes α'.
 
     Dispatches to the Pallas kernel path when available (TPU target;
@@ -162,12 +162,33 @@ def count_a2(stream: EventStream, eps: EpisodeBatch,
     cumulative counts over everything the carried machines have seen, and
     with ``use_kernel`` run the chunk through the state-in/state-out Pallas
     kernel — the carried single-slot tile stays on-chip.
+
+    ``segments`` routes the one-shot count through the segment-parallel
+    kernel (``kernels.ops.a2_mapconcat_count`` — grid = episode tile × time
+    segment with the Concatenate fold fused on-chip); episodes whose tuples
+    fail to stitch are recounted by the exact single-slot scan, so the
+    result is *the* A2 count either way and Theorem 5.1's cull stays sound.
+    Ignored in stateful mode (cross-chunk carry is a single sequential
+    scan) and when the kernel dispatch declines.
     """
     relaxed = eps.relaxed()
     if state is not None or return_state:
         return count_single_slot(stream, relaxed, inclusive_lower=True,
                                  state=state, return_state=True,
                                  use_kernel=use_kernel)
+    if use_kernel and segments is not None and eps.N > 1:
+        try:
+            from repro.kernels import ops as kops
+            counts, bad = kops.a2_mapconcat_count(stream, relaxed,
+                                                  num_segments=segments)
+            if bad.any():
+                idx = np.nonzero(bad)[0]
+                counts = counts.copy()
+                counts[idx] = count_single_slot(stream, relaxed.select(idx),
+                                                inclusive_lower=True)
+            return counts
+        except (ImportError, NotImplementedError):
+            pass
     if use_kernel:
         try:
             from repro.kernels import ops as kops

@@ -15,7 +15,8 @@ from __future__ import annotations
 import numpy as np
 
 from .count_a1 import A1State, DEFAULT_LCAP, count_a1 as _count_a1
-from .mapconcat import mapconcatenate as _mapconcatenate
+from .mapconcat import (mapconcatenate as _mapconcatenate,
+                        mapconcatenate_kernel as _mapconcatenate_kernel)
 from .episodes import EpisodeBatch
 from .events import EventStream
 
@@ -23,6 +24,27 @@ from .events import EventStream
 # defaults follow the paper's shape: crossover shrinks with episode size.
 FN_A = 420.0
 FN_B = 40.0
+
+# Auto-selection of the in-kernel MapConcatenate by stream length: streams
+# at least this long amortize the segmented grid's launch/layout overhead
+# (the serial per-segment event walk shrinks to ~n/P while PTPE's stays n).
+MAPC_KERNEL_MIN_EVENTS = 2048
+# ... and by episode count: below one VPU lane tile, episode parallelism
+# cannot fill even a single core's lanes, so the time axis must supply the
+# parallelism — the paper's low-M regime where MapConcatenate wins (Fig. 7)
+MAPC_KERNEL_MAX_EPISODES = 128
+
+
+def _mapc_kernel_available() -> bool:
+    """Whether the segmented-kernel dispatch would actually engage (TPU or
+    interpret mode) — the hybrid upgrade must not silently reroute plain
+    CPU runs onto the slower XLA MapConcatenate."""
+    try:
+        from repro.kernels import ops as kops
+        kops.kernel_mode()
+        return True
+    except (ImportError, NotImplementedError):
+        return False
 
 
 def parallel_units() -> int:
@@ -51,6 +73,16 @@ def count_dispatch(stream: EventStream, eps: EpisodeBatch,
                    return_state: bool = False):
     """Exact A1 counts through the selected computation-to-core mapping.
 
+    Engines: ``"ptpe"`` (episode-parallel single scan),
+    ``"mapconcatenate"`` (segment-parallel XLA Map + Concatenate tree),
+    ``"mapconcat_kernel"`` (the in-kernel MapConcatenate — one Pallas
+    launch whose grid is episode tile × time segment with the Concatenate
+    fold fused on-chip; falls back to the XLA mapping bit-identically when
+    the kernel dispatch declines), or ``"hybrid"`` (Eq. 2 dispatcher —
+    which additionally upgrades the segment-parallel side to the kernel
+    mapping on streams of >= ``MAPC_KERNEL_MIN_EVENTS`` events when
+    ``use_kernel`` is set).
+
     ``use_kernel`` and ``lcap`` are plumbed into every mapping — including
     MapConcatenate's exactness fallback — so hybrid/mapconcatenate callers
     control the fallback engine the same way ptpe callers do.
@@ -67,17 +99,33 @@ def count_dispatch(stream: EventStream, eps: EpisodeBatch,
     """
     # validate before the stateful early-return: a bogus engine must raise,
     # not silently count via the carried ptpe path
-    if engine not in ("ptpe", "mapconcatenate", "hybrid"):
+    if engine not in ("ptpe", "mapconcatenate", "mapconcat_kernel",
+                     "hybrid"):
         raise ValueError(f"unknown engine {engine!r}")
     if state is not None or return_state:
         return _count_a1(stream, eps, lcap=lcap, use_kernel=use_kernel,
                          state=state, return_state=True)
     if engine == "ptpe":
         return _count_a1(stream, eps, lcap=lcap, use_kernel=use_kernel)
+    if engine == "mapconcat_kernel":
+        return _mapconcatenate_kernel(stream, eps, num_segments=num_segments,
+                                      lcap=lcap, use_kernel=use_kernel)
     if engine == "mapconcatenate":
         return _mapconcatenate(stream, eps, num_segments=num_segments,
                                lcap=lcap, use_kernel=use_kernel)
+    mapc_kernel = (use_kernel and len(stream) >= MAPC_KERNEL_MIN_EVENTS
+                   and _mapc_kernel_available())
     if eps.M > crossover(eps.N):
+        # episode-parallel regime — except when the batch cannot fill even
+        # one lane tile and the stream is long: there the time axis is the
+        # only parallelism on offer, the segmented kernel's home turf
+        if mapc_kernel and eps.M <= MAPC_KERNEL_MAX_EPISODES:
+            return _mapconcatenate_kernel(
+                stream, eps, num_segments=num_segments, lcap=lcap,
+                use_kernel=use_kernel)
         return _count_a1(stream, eps, lcap=lcap, use_kernel=use_kernel)
+    if mapc_kernel:
+        return _mapconcatenate_kernel(stream, eps, num_segments=num_segments,
+                                      lcap=lcap, use_kernel=use_kernel)
     return _mapconcatenate(stream, eps, num_segments=num_segments,
                            lcap=lcap, use_kernel=use_kernel)

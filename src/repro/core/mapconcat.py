@@ -28,6 +28,15 @@ Distribution: ``mapconcat_sharded`` shard_maps the Map step over the mesh
 ``data`` (= segment) axis; the (a, count, b) tuples are O(P·N) scalars, so
 the Concatenate tree runs replicated after an ``all_gather`` — the TPU
 analogue of the paper's single-kernel-launch concatenate.
+
+On-chip: ``mapconcatenate_kernel`` routes the whole computation into one
+Pallas launch (``kernels/a1_count.a1_mapconcat_kernel``) whose grid is
+(episode tile × time segment) with the Concatenate fold fused across the
+segment axis — the literal single-kernel-launch form. The shared pieces
+that keep the kernel and XLA paths from drifting live here:
+``phase_cum`` (machine start offsets), ``stitch_zones`` (the
+boundary-inclusive a/b/count zones), and ``fold_pair_unrolled`` (the
+gather-free first-match stitch, bit-identical to ``fold_pair``).
 """
 
 from __future__ import annotations
@@ -45,6 +54,41 @@ from .events import PAD_TYPE, TIME_NEG_INF, EventStream, count_level1
 
 
 # ---------------------------------------------------------------- Map step
+
+
+def phase_cum(thi):
+    """Per-phase start offsets: ``cum[m, k] = Σ_{i<k} thi[m, i]`` — machine
+    ``k`` of episode ``m`` starts that many ticks before the segment
+    boundary (Fig. 4's k-before/(N-k)-after split coverage). Single source
+    of truth for the XLA Map step, the sharded Map step, and the Pallas
+    segmented kernels' ``cum`` brick (``kernels.ops.mapconcat_layout``)."""
+    thi = jnp.asarray(thi)
+    return jnp.cumsum(
+        jnp.concatenate([jnp.zeros_like(thi[:, :1]), thi], axis=1), axis=1)
+
+
+def stitch_zones(t, tau_lo, tau_hi, w):
+    """Boundary-inclusive tuple zones for one event time ``t`` against the
+    segment ``(tau_lo, tau_hi]`` with per-episode max span ``w``.
+
+    Returns (in_seg, a_zone, live_zone, crossing):
+      in_seg   — completion counts toward this segment's ``count``
+      a_zone   — completion may be recorded as the tuple's first-``a``
+      live_zone — the segment's machines may still consume this event
+      crossing — completion is a ``b``-crossing into the next segment
+
+    The ``a``/``live`` zones are inclusive at ``tau + w``: an occurrence
+    spanning exactly W whose first event sits exactly on the boundary
+    completes at ``tau + W``, and both sides of the stitch must see it (the
+    PR 1 silent-undercount fix). Shared by ``_segment_scan`` and the Pallas
+    segmented kernels (``kernels/a1_count._a1_mapc_body`` /
+    ``a2_count._a2_mapc_body``) so the two paths cannot drift.
+    """
+    in_seg = (t > tau_lo) & (t <= tau_hi)
+    a_zone = t <= tau_lo + w
+    live_zone = t <= tau_hi + w
+    crossing = t > tau_hi
+    return in_seg, a_zone, live_zone, crossing
 
 
 def _segment_scan(ev_types, ev_times, etypes, tlo, thi, starts, tau_lo,
@@ -84,11 +128,11 @@ def _segment_scan(ev_types, ev_times, etypes, tlo, thi, starts, tau_lo,
     def body(carry, ev):
         s, ptr, cnt, ovf, a, b, done, a_set = carry
         e, t, d = ev
-        # zones are inclusive at tau + W: an occurrence spanning exactly W
-        # whose first event sits exactly on the boundary completes at
-        # tau + W, and both the a-record and the b-crossing must see it or
-        # the stitch silently defaults to the wrong phase machine
-        in_window = (t > starts) & (t <= tau_hi + w[None, :]) & ~done  # [K,M]
+        # zone predicates shared with the Pallas segmented kernels (see
+        # stitch_zones for the tau + W inclusivity that PR 1 fixed)
+        seg_z, a_z, live_z, cross_z = stitch_zones(t, tau_lo, tau_hi,
+                                                   w[None, :])
+        in_window = (t > starts) & live_z & ~done  # [K, M]
         # Run the raw machine step, then mask its effects per (phase, episode)
         s2, ptr2, cdelta, ovf2 = step(s, ptr, jnp.zeros_like(cnt), ovf,
                                       etypes, tlo, thi, e, t, d)
@@ -98,12 +142,12 @@ def _segment_scan(ev_types, ev_times, etypes, tlo, thi, starts, tau_lo,
         ptr = jnp.where(live[:, :, None], ptr2, ptr)
         ovf = jnp.where(live, ovf2, ovf)
         # bookkeeping on completions
-        in_seg = complete & (t > tau_lo) & (t <= tau_hi)
+        in_seg = complete & seg_z
         cnt = cnt + in_seg.astype(cnt.dtype)
-        rec_a = in_seg & ~a_set & (t <= tau_lo + w[None, :])
+        rec_a = in_seg & ~a_set & a_z
         a = jnp.where(rec_a, t, a)
         a_set = a_set | rec_a
-        crossing = complete & (t > tau_hi)
+        crossing = complete & cross_z
         b = jnp.where(crossing, t, b)
         done = done | crossing
         return (s, ptr, cnt, ovf, a, b, done, a_set), None
@@ -136,6 +180,33 @@ def fold_pair(left, right):
     cr_g = jnp.take_along_axis(cr, idx, axis=-2)
     br_g = jnp.take_along_axis(br, idx, axis=-2)
     fr_g = jnp.take_along_axis(fr, idx, axis=-2)
+    return al, cl + cr_g, br_g, fl | fr_g | ~matched
+
+
+def fold_pair_unrolled(left, right, k: int):
+    """``fold_pair`` restricted to [K, M] blocks with the first-match select
+    unrolled over the (static, small) phase axis — no ``argmax`` /
+    ``take_along_axis`` gathers, so it lowers inside a Pallas kernel.
+
+    Bit-identical to ``fold_pair``: the reversed ``where`` sweep keeps the
+    *lowest* matching k' (argmax-of-bool semantics), and an unmatched left
+    machine falls through to the k' = 0 entries exactly as ``argmax`` over
+    an all-false column does — garbage count, but flagged. The segmented
+    kernels' fused Concatenate stage is this fold applied left-to-right
+    across the segment grid axis (associativity per ``fold_pair``).
+    """
+    al, cl, bl, fl = left
+    ar, cr, br, fr = right
+    matched = jnp.zeros_like(fl)
+    cr_g = jnp.broadcast_to(cr[0:1], cl.shape)
+    br_g = jnp.broadcast_to(br[0:1], bl.shape)
+    fr_g = jnp.broadcast_to(fr[0:1], fl.shape)
+    for kp in range(k - 1, -1, -1):
+        sel = bl == ar[kp:kp + 1]  # [K, M]
+        matched = matched | sel
+        cr_g = jnp.where(sel, cr[kp:kp + 1], cr_g)
+        br_g = jnp.where(sel, br[kp:kp + 1], br_g)
+        fr_g = jnp.where(sel, fr[kp:kp + 1], fr_g)
     return al, cl + cr_g, br_g, fl | fr_g | ~matched
 
 
@@ -191,9 +262,7 @@ def make_segments(stream: EventStream, num_segments: int, w_max: int):
 def _map_all_segments(wt, wtt, etypes, tlo, thi, tau, w, lcap):
     """vmap the Map step over P segments. Returns a/c/b [P,K,M] + ovf."""
     n = etypes.shape[1]
-    cum = jnp.cumsum(
-        jnp.concatenate([jnp.zeros_like(thi[:, :1]), thi], axis=1),
-        axis=1)  # [M, N] — Σ_{i<=k} thi^i
+    cum = phase_cum(thi)  # [M, N] — Σ_{i<k} thi^i
     tau32 = tau.astype(jnp.int32)
 
     def one_segment(ev_t, ev_tt, tau_lo, tau_hi):
@@ -226,8 +295,7 @@ def mapconcatenate_sharded(stream: EventStream, eps: EpisodeBatch,
         return mapconcatenate(stream, eps, num_segments=wt.shape[0],
                               lcap=lcap, use_kernel=use_kernel)
     n = eps.N
-    cum = np.cumsum(np.concatenate(
-        [np.zeros_like(eps.thi[:, :1]), eps.thi], axis=1), axis=1)  # [M, N]
+    cum = np.asarray(phase_cum(eps.thi))  # [M, N]
     taus = np.stack([tau[:-1], tau[1:]], axis=1).astype(np.int32)  # [P, 2]
 
     def map_step(ev_t, ev_tt, tau_pair):
@@ -285,6 +353,42 @@ def mapconcatenate(stream: EventStream, eps: EpisodeBatch,
     count, bad = concatenate_tree(a, c, b, flag0)
     count = np.asarray(count, np.int64)
     bad = np.asarray(bad) | np.asarray(ovf.any(axis=(0, 1)))
+    if bad.any():
+        idx = np.nonzero(bad)[0]
+        count = count.copy()
+        count[idx] = _count_a1_exact(stream, eps.select(idx), lcap=lcap,
+                                     use_kernel=use_kernel)
+    return count
+
+
+def mapconcatenate_kernel(stream: EventStream, eps: EpisodeBatch,
+                          num_segments: int = 8,
+                          lcap: int = DEFAULT_LCAP,
+                          use_kernel: bool = True) -> np.ndarray:
+    """In-kernel MapConcatenate: one Pallas launch whose grid is
+    (episode tile × time segment) runs the Map step's K = N phase machines
+    per segment *and* the Concatenate fold on-chip
+    (``kernels.a1_count.a1_mapconcat_kernel``), so the time axis is a grid
+    axis instead of one long serial ``fori_loop`` and each segment's event
+    window is DMA'd per grid step instead of the whole stream being
+    broadcast-resident.
+
+    Exactness containment is identical to ``mapconcatenate``: episodes whose
+    tuples failed to stitch (``unmatched``) or whose bounded lists flagged a
+    live eviction are recounted by the exact single-scan engine. When the
+    kernel dispatch policy declines (CPU without interpret mode), falls back
+    to the XLA ``mapconcatenate`` — same counts either way.
+    """
+    if eps.N == 1:
+        return count_level1(stream, eps.etypes[:, 0])
+    try:
+        from repro.kernels import ops as kops
+        count, bad = kops.a1_mapconcat_count(stream, eps,
+                                             num_segments=num_segments,
+                                             lcap=lcap)
+    except (ImportError, NotImplementedError):
+        return mapconcatenate(stream, eps, num_segments=num_segments,
+                              lcap=lcap, use_kernel=use_kernel)
     if bad.any():
         idx = np.nonzero(bad)[0]
         count = count.copy()

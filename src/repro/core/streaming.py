@@ -26,7 +26,13 @@ concatenated stream**:
       associative form of the paper's Concatenate tree (Fig. 6). Because a
       segment's tuple needs ``W`` ticks of lookahead (its crossing zone), the
       commit frontier trails the ingest frontier by ``W``; ``finalize()``
-      flushes the tail.
+      flushes the tail. With ``use_kernel`` (the default) each commit runs
+      as ONE segmented Pallas launch — grid = (episode tile × time
+      segment), Map step and Concatenate fold fused on-chip
+      (``kernels.a1_count.a1_mapconcat_kernel``) — whose pre-stitched
+      tuple folds onto the carry; the per-launch segment count is still
+      chosen from the committed span vs ``W``. ``engine="mapconcat_kernel"``
+      is accepted as an alias that forces this path's selection.
     * ``"hybrid"``      — Eq. 2 dispatcher applied once at construction.
 
     Exactness containment is inherited from the one-shot engines: bounded
@@ -255,6 +261,9 @@ class StreamingCounter:
                  use_kernel: bool = True, keep_history: bool = True,
                  min_bucket: int = 128, executor=None,
                  checkpoint_interval: int | None = None):
+        if engine == "mapconcat_kernel":
+            # alias: the segment-parallel engine with the Pallas path forced
+            engine, use_kernel = "mapconcatenate", True
         if engine not in ("ptpe", "mapconcatenate", "hybrid"):
             raise ValueError(f"unknown engine {engine!r}")
         if checkpoint_interval is not None and checkpoint_interval < 1:
@@ -269,6 +278,7 @@ class StreamingCounter:
         self.ckpt_interval = checkpoint_interval
         self.bounded = checkpoint_interval is not None
         self._kernel = False  # carried-Pallas path (resolved per engine)
+        self._mapc_kernel = False  # segmented-Pallas path (mapconcatenate)
         # exact cum counts per window (bounded mode caps the tail retained)
         self.snapshots = (collections.deque(maxlen=8) if self.bounded
                           else [])
@@ -303,6 +313,8 @@ class StreamingCounter:
             self._tau_c: int | None = None
             self._buf_t = _EMPTY_I32  # committed-lookback + pending events
             self._buf_tt = _EMPTY_I32
+            if use_kernel:
+                self._try_enable_mapc_kernel()
         if self.bounded:
             # suffix-only retention: fed chunks since the last machine-state
             # checkpoint, the checkpointed state itself, and the oracle
@@ -337,6 +349,26 @@ class StreamingCounter:
             self.eps, inclusive_lower=False)
         self._kst = kops.a1_state_layout(self._state)
         self._state = None  # authoritative state is the kernel brick now
+
+    def _try_enable_mapc_kernel(self) -> None:
+        """Segment-parallel analogue of ``_try_enable_kernel``: when the
+        dispatch policy allows, each commit batch runs as one segmented
+        Pallas launch (grid = episode tile × time segment, Concatenate
+        fold fused on-chip — ``kernels.a1_count.a1_mapconcat_kernel``)
+        whose pre-stitched tuple folds onto the carried tuple, instead of
+        an XLA Map step plus a host-side per-segment fold loop. The
+        episode/phase bricks are packed once here; the segment count per
+        launch is still chosen from the committed span vs W (see
+        ``_dispatch_mapc``)."""
+        try:
+            from repro.kernels import ops as kops
+            self._interp = kops.kernel_mode()
+        except (ImportError, NotImplementedError):
+            return
+        self._kops = kops
+        self._mapc_kernel = True
+        (self._ket, self._ktlo, self._kthi, self._kcum,
+         self._kw) = kops.mapconcat_layout(self.eps, inclusive_lower=False)
 
     def _host_state(self) -> A1State:
         """The carried machines in canonical episode-major layout (unpacks
@@ -487,6 +519,29 @@ class StreamingCounter:
         for i in range(q):
             wt[i, : hi[i] - lo[i]] = self._buf_t[lo[i]: hi[i]]
             wtt[i, : hi[i] - lo[i]] = self._buf_tt[lo[i]: hi[i]]
+        if self._mapc_kernel:
+            # one segmented launch: Map + on-chip fold over this commit's
+            # q segments; its pre-stitched tuple folds onto the carry
+            segs = self._kops.segment_bricks(wt, wtt, tau, length=lw)
+            kargs = (self._ket, self._ktlo, self._kthi, self._kcum,
+                     self._kw, segs)
+            if self.executor is not None:
+                a, c, b, f, ovf = self.executor.mapc_kernel_scan(
+                    kargs, self.eps.N, self.lcap, self._interp)
+            else:
+                a, c, b, f, ovf = self._kops.a1_mapconcat_tuples(
+                    *kargs, n_levels=self.eps.N, lcap=self.lcap,
+                    interpret=self._interp)
+            k, m = self.eps.N, self.eps.M
+            self._ovf |= np.asarray(ovf[0, :m] != 0)
+            tup = (a[:k, :m], c[:k, :m], b[:k, :m], f[:k, :m] != 0)
+            self._carry = (tup if self._carry is None
+                           else fold_pair(self._carry, tup))
+            self._tau_c = tau_next
+            keep = self._buf_tt > tau_next - w  # next segment's lookback
+            self._buf_t = self._buf_t[keep]
+            self._buf_tt = self._buf_tt[keep]
+            return
         margs = (jnp.asarray(wt), jnp.asarray(wtt), self._et, self._tlo,
                  self._thi, jnp.asarray(tau), self._w_dev)
         if self.executor is not None:

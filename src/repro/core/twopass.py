@@ -47,10 +47,14 @@ class TwoPassState:
 def count_two_pass(stream: EventStream, eps: EpisodeBatch, theta: int,
                    use_kernel: bool = True,
                    engine: str = "hybrid", lcap: int = DEFAULT_LCAP,
+                   num_segments: int = 8,
                    state: TwoPassState | None = None,
                    return_state: bool = False):
     """Algorithm 4. ``engine`` picks the pass-2 mapping: "ptpe",
-    "mapconcatenate", or "hybrid" (Eq. 2 dispatcher).
+    "mapconcatenate", "mapconcat_kernel" (the in-kernel segment-parallel
+    mapping — with it, the pass-1 A2 cull also runs its segmented kernel,
+    so *both* passes use the paper's two-axis grid), or "hybrid" (Eq. 2
+    dispatcher). ``num_segments`` feeds the segment-parallel mappings.
 
     Stateful mode (``state``/``return_state``) returns
     ``(TwoPassResult, TwoPassState)`` where counts are cumulative over
@@ -81,14 +85,17 @@ def count_two_pass(stream: EventStream, eps: EpisodeBatch, theta: int,
             a2_counts=a2,
             eliminated_frac=float(1.0 - survived.mean()) if eps.M else 0.0)
         return res, TwoPassState(a2=a2_new, a1=a1_new)
-    a2 = _count_a2(stream, eps, use_kernel=use_kernel)
+    a2 = _count_a2(stream, eps, use_kernel=use_kernel,
+                   segments=(num_segments if engine == "mapconcat_kernel"
+                             else None))
     survived = a2 >= theta
     counts = a2.copy()
     if survived.any():
         idx = np.nonzero(survived)[0]
         sub = eps.select(idx)
         exact = _count_dispatch(stream, sub, engine=engine,
-                                use_kernel=use_kernel, lcap=lcap)
+                                use_kernel=use_kernel, lcap=lcap,
+                                num_segments=num_segments)
         counts[idx] = exact
     frequent = survived & (counts >= theta)
     return TwoPassResult(
@@ -99,11 +106,13 @@ def count_two_pass(stream: EventStream, eps: EpisodeBatch, theta: int,
 def count_one_pass(stream: EventStream, eps: EpisodeBatch, theta: int,
                    use_kernel: bool = True,
                    engine: str = "hybrid",
-                   lcap: int = DEFAULT_LCAP) -> TwoPassResult:
+                   lcap: int = DEFAULT_LCAP,
+                   num_segments: int = 8) -> TwoPassResult:
     """Baseline: run the exact engine on every candidate (paper's "one-pass"
     comparison arm in Fig. 9)."""
     exact = _count_dispatch(stream, eps, engine=engine,
-                            use_kernel=use_kernel, lcap=lcap)
+                            use_kernel=use_kernel, lcap=lcap,
+                            num_segments=num_segments)
     frequent = exact >= theta
     return TwoPassResult(counts=exact, survived=np.ones(eps.M, bool),
                          frequent=frequent, a2_counts=exact,

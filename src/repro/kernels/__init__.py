@@ -1,22 +1,41 @@
 """Pallas TPU kernels for episode counting — the paper's GPGPU mining
-loop re-derived for the TPU VPU (episodes on lanes, levels on sublanes).
+loop re-derived for the TPU VPU with the paper's *two-axis*
+computation-to-core mapping: episodes on lanes/sublanes (grid axis 0,
+parallel) and the **time axis on grid axis 1** — event chunks for the
+PTPE kernels, time segments for the MapConcatenate kernels — with
+``arbitrary`` (sequential) semantics carrying state across steps.
 
 Modules:
-  a1_count — bounded-list Algorithm 1 (``a1_count_kernel``) and its
-    state-in/state-out streaming variant (``a1_count_state_kernel``): the
+  a1_count — bounded-list Algorithm 1 (``a1_count_kernel``), its
+    state-in/state-out streaming variant (``a1_count_state_kernel``: the
     (NP, LCAP, BM) timestamp brick, one-hot write-pointer mask, and
-    count/ovf rows are kernel I/O with in-place aliasing, so carried
-    window-by-window counting stays on-chip.
-  a2_count — single-slot Algorithm 3 (``a2_count_kernel``) and the
-    single-slot streaming analogue (``a2_count_state_kernel``).
+    count/ovf rows are kernel I/O with in-place aliasing), and the
+    segment-parallel ``a1_mapconcat_kernel`` (§5.2.2: each grid step runs
+    K = N phase-shifted machines over one segment's event window and
+    folds its (a, count, b) tuple onto the carried Concatenate state —
+    Map + Concatenate fused into one launch).
+  a2_count — single-slot Algorithm 3 (``a2_count_kernel``), the
+    streaming analogue (``a2_count_state_kernel``), and the single-slot
+    segmented variant (``a2_mapconcat_kernel``) used by the two-pass
+    cull.
   ops — dispatch policy (TPU compiled / interpret mode / decline to the
     XLA scans), host↔kernel layout contract (``episode_layout``,
     ``event_brick``, ``a1_state_layout``/``a1_state_unpack``,
-    ``a2_state_layout``/``a2_state_unpack``), the instrumented carried
-    entry points (``a1_state_call``, ``a2_state_call``, vmapped fused
-    variants for the cross-session batcher), and the one-shot wrappers.
+    ``a2_state_layout``/``a2_state_unpack``, ``mapconcat_layout``,
+    ``segment_bricks``), the instrumented entry points (``a1_state_call``,
+    ``a2_state_call``, ``a1_mapconcat_tuples``/``a2_mapconcat_tuples``,
+    ``a1_mapconcat_count``/``a2_mapconcat_count``, vmapped fused variants
+    for the cross-session batcher), and the one-shot wrappers.
   ref — pure-jnp layout oracles the interpret-mode tests pin the kernels
     against.
+
+Event streaming: the stream is never broadcast whole. Event bricks are
+blocked on the second grid axis (``block_e`` events per step, default
+``DEFAULT_BLOCK_E``) and DMA'd/double-buffered per step while the machine
+state lives in output blocks revisited across the axis — fresh-state and
+state-carried wrappers share the same chunked launch, so VMEM bounds the
+*chunk*, not the stream. Segmented kernels block by time segment instead
+(one (types/times/dup/τ_p/τ_{p+1}) brick per step).
 
 Layout contract for the carried state (see ``ops``): episode-major host
 state (``core.count_a1.A1State`` [M, N, L] / ``core.count_a2.A2State``
@@ -26,5 +45,8 @@ padded with TIME_NEG_INF / PAD_ROW_TYPE so padded lanes and rows are
 inert. Chunked carried calls are bit-identical to one call on the
 concatenation (A1 additionally requires chunk boundaries not to split
 timestamp tie groups; ``core.streaming.StreamingCounter`` holds back the
-trailing tie group to guarantee that).
+trailing tie group to guarantee that). The segmented kernels share their
+phase starts (``core.mapconcat.phase_cum``), stitch zones
+(``stitch_zones``), and fold semantics (``fold_pair_unrolled``) with the
+XLA MapConcatenate so the two paths cannot drift.
 """

@@ -1,12 +1,13 @@
 """Pallas TPU kernel: A1 (bounded-list) episode counting.
 
 Same computation-to-core mapping as ``a2_count`` (episodes on lanes, levels
-on sublanes) plus a bounded witness list per level: state is an
-(NP, LCAP, BM) timestamp brick. The paper's data-dependent list walk becomes
-a masked reduction over the LCAP axis; the circular write pointer is kept as
-a one-hot (NP, LCAP, BM) mask rotated on append — no gathers, no scatters,
-pure VPU ops (this is the TPU answer to the divergence/local-memory costs
-the paper profiles in Fig. 10).
+on sublanes, events chunked on an ``arbitrary`` second grid axis with the
+machine state carried in the revisited output blocks) plus a bounded witness
+list per level: state is an (NP, LCAP, BM) timestamp brick. The paper's
+data-dependent list walk becomes a masked reduction over the LCAP axis; the
+circular write pointer is kept as a one-hot (NP, LCAP, BM) mask rotated on
+append — no gathers, no scatters, pure VPU ops (this is the TPU answer to
+the divergence/local-memory costs the paper profiles in Fig. 10).
 
 Outputs: counts AND a live-eviction flag per episode (see
 core/count_a1.py — flagged episodes are recounted exactly by the host).
@@ -25,6 +26,17 @@ row is computed per chunk; ``core.streaming.StreamingCounter`` holds back
 the trailing tie group to guarantee that). Layout contract (pack/unpack
 between this brick layout and ``core.count_a1.A1State``'s episode-major
 [M, N, L] arrays) lives in ``ops.a1_state_layout`` / ``a1_state_unpack``.
+
+Segment-parallel variant (``a1_mapconcat_kernel``): MapConcatenate
+(§5.2.2) on-chip — grid = (episode tile × time segment); each segment runs
+K = N phase-shifted bounded-list machines and emits the (a, count, b)
+tuple (Fig. 5), with the Concatenate stage fused into the launch (the
+stitched tuple carries in revisited output blocks, folded per segment via
+``core.mapconcat.fold_pair_unrolled``; the ``unmatched`` flag and the
+per-phase live-eviction flags feed the host's exact-recount fallback).
+Phase starts and stitch zones are shared with the XLA Map step
+(``core.mapconcat.phase_cum`` / ``stitch_zones``) so the paths cannot
+drift.
 """
 
 from __future__ import annotations
@@ -35,9 +47,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.events import TIME_NEG_INF
+from repro.core.events import PAD_TYPE, TIME_NEG_INF
+from repro.core.mapconcat import stitch_zones
 
-from .a2_count import LANES, SUBLANES, PAD_ROW_TYPE
+from .a2_count import (DEFAULT_BLOCK_E, LANES, PAD_ROW_TYPE, SEG_DUP,
+                       SEG_ROWS, SEG_TAU_HI, SEG_TAU_LO, SEG_TIME, SEG_TYPE,
+                       SEQ_GRID, SUBLANES, _block_e, _mapc_fold_and_emit)
 
 
 def _a1_body(n_levels: int, et, tlo, thi, ev_ref):
@@ -77,37 +92,29 @@ def _a1_body(n_levels: int, et, tlo, thi, ev_ref):
     return body
 
 
-def _a1_kernel(n_levels: int, lcap: int, et_ref, tlo_ref, thi_ref, ev_ref,
-               cnt_ref, ovf_ref):
-    et = et_ref[...]      # (NP, BM)
-    tlo = tlo_ref[...]    # (NP, BM) row i = edge i→i+1 (incoming of level i+1)
-    thi = thi_ref[...]
-    np_, bm = et.shape
-    n_events = ev_ref.shape[1]
-    body = _a1_body(n_levels, et, tlo, thi, ev_ref)
-    s0 = jnp.full((np_, lcap, bm), TIME_NEG_INF, jnp.int32)
-    po0 = jnp.zeros((np_, lcap, bm), jnp.bool_).at[:, 0, :].set(True)
-    c0 = jnp.zeros((1, bm), jnp.int32)
-    o0 = jnp.zeros((1, bm), jnp.int32)
-    _, _, cnt, ovf = jax.lax.fori_loop(0, n_events, body,
-                                       (s0, po0, c0, o0))
-    cnt_ref[...] = jnp.broadcast_to(cnt, cnt_ref.shape)
-    ovf_ref[...] = jnp.broadcast_to(ovf, ovf_ref.shape)
-
-
 def _a1_state_kernel(n_levels: int, lcap: int, et_ref, tlo_ref, thi_ref,
                      ev_ref, sin_ref, poin_ref, cin_ref, oin_ref,
                      cnt_ref, ovf_ref, sout_ref, poout_ref):
-    """State-carried variant: resume the machines from the input brick and
-    emit the advanced brick (aliased in place by the wrapper)."""
+    """One (episode tile × event chunk) grid step: resume the machines from
+    the carried output blocks (seeded from the state inputs at chunk 0) and
+    advance them past this chunk's events."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        sout_ref[...] = sin_ref[...]
+        poout_ref[...] = poin_ref[...]
+        cnt_ref[...] = cin_ref[...]
+        ovf_ref[...] = oin_ref[...]
+
     et = et_ref[...]
     tlo = tlo_ref[...]
     thi = thi_ref[...]
-    n_events = ev_ref.shape[1]
     body = _a1_body(n_levels, et, tlo, thi, ev_ref)
     s, po, cnt, ovf = jax.lax.fori_loop(
-        0, n_events, body,
-        (sin_ref[...], poin_ref[...] != 0, cin_ref[0:1, :], oin_ref[0:1, :]))
+        0, ev_ref.shape[1], body,
+        (sout_ref[...], poout_ref[...] != 0, cnt_ref[0:1, :],
+         ovf_ref[0:1, :]))
     cnt_ref[...] = jnp.broadcast_to(cnt, cnt_ref.shape)
     ovf_ref[...] = jnp.broadcast_to(ovf, ovf_ref.shape)
     sout_ref[...] = s
@@ -115,39 +122,38 @@ def _a1_state_kernel(n_levels: int, lcap: int, et_ref, tlo_ref, thi_ref,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n_levels", "lcap", "block_m", "interpret"))
+    jax.jit, static_argnames=("n_levels", "lcap", "block_m", "block_e",
+                              "interpret"))
 def a1_count_kernel(etypes, tlo, thi, events, *, n_levels: int,
                     lcap: int = 4, block_m: int = LANES,
+                    block_e: int = DEFAULT_BLOCK_E,
                     interpret: bool = False):
-    """pallas_call wrapper. See a2_count_kernel; events here are i32[3, EP]
-    (types; times; dup). Returns (counts i32[8, M], ovf i32[8, M]), row 0
-    meaningful."""
+    """pallas_call wrapper (fresh machines). See a2_count_kernel; events
+    here are i32[3, EP] (types; times; dup). Returns
+    (counts i32[8, M], ovf i32[8, M]), row 0 meaningful. Delegates to the
+    state-carried launch with empty machines so the one-shot API shares the
+    chunked event ``BlockSpec`` (no whole-stream broadcast) — the final
+    state bricks it emits are discarded, a conscious HBM-write trade for
+    one kernel body across both call styles."""
     np_, m = etypes.shape
-    grid = (m // block_m,)
-    kernel = functools.partial(_a1_kernel, n_levels, lcap)
-    out_shape = [jax.ShapeDtypeStruct((SUBLANES, m), jnp.int32),
-                 jax.ShapeDtypeStruct((SUBLANES, m), jnp.int32)]
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((np_, block_m), lambda i: (0, i)),
-            pl.BlockSpec((np_, block_m), lambda i: (0, i)),
-            pl.BlockSpec((np_, block_m), lambda i: (0, i)),
-            pl.BlockSpec(events.shape, lambda i: (0, 0)),
-        ],
-        out_specs=[pl.BlockSpec((SUBLANES, block_m), lambda i: (0, i)),
-                   pl.BlockSpec((SUBLANES, block_m), lambda i: (0, i))],
-        out_shape=out_shape,
-        interpret=interpret,
-    )(etypes, tlo, thi, events)
+    s0 = jnp.full((np_, lcap, m), TIME_NEG_INF, jnp.int32)
+    po0 = jnp.zeros((np_, lcap, m), jnp.int32).at[:, 0, :].set(1)
+    c0 = jnp.zeros((SUBLANES, m), jnp.int32)
+    o0 = jnp.zeros((SUBLANES, m), jnp.int32)
+    cnt, ovf, _, _ = a1_count_state_kernel(
+        etypes, tlo, thi, events, s0, po0, c0, o0, n_levels=n_levels,
+        lcap=lcap, block_m=block_m, block_e=block_e, interpret=interpret)
+    return cnt, ovf
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n_levels", "lcap", "block_m", "interpret"))
+    jax.jit, static_argnames=("n_levels", "lcap", "block_m", "block_e",
+                              "interpret"))
 def a1_count_state_kernel(etypes, tlo, thi, events, s, po, cnt, ovf, *,
                           n_levels: int, lcap: int = 4,
-                          block_m: int = LANES, interpret: bool = False):
+                          block_m: int = LANES,
+                          block_e: int = DEFAULT_BLOCK_E,
+                          interpret: bool = False):
     """State-in/state-out pallas_call wrapper.
 
     State operands (all i32, kernel brick layout — see ``ops``):
@@ -158,10 +164,16 @@ def a1_count_state_kernel(etypes, tlo, thi, events, s, po, cnt, ovf, *,
 
     Returns (cnt, ovf, s, po) advanced past ``events``; each state input is
     aliased onto its output (donated), so never reuse the passed arrays.
+    Events are walked in ``block_e`` chunks on the second (``arbitrary``)
+    grid axis with the state carried on-chip between chunks.
     """
     np_, m = etypes.shape
-    grid = (m // block_m,)
+    ep = events.shape[1]
+    be = _block_e(ep, block_e)
+    grid = (m // block_m, ep // be)
     kernel = functools.partial(_a1_state_kernel, n_levels, lcap)
+    tile = lambda i, j: (0, i)  # noqa: E731 — episode tile, chunk-invariant
+    tile3 = lambda i, j: (0, 0, i)  # noqa: E731
     out_shape = [jax.ShapeDtypeStruct((SUBLANES, m), jnp.int32),
                  jax.ShapeDtypeStruct((SUBLANES, m), jnp.int32),
                  jax.ShapeDtypeStruct((np_, lcap, m), jnp.int32),
@@ -170,20 +182,154 @@ def a1_count_state_kernel(etypes, tlo, thi, events, s, po, cnt, ovf, *,
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((np_, block_m), lambda i: (0, i)),
-            pl.BlockSpec((np_, block_m), lambda i: (0, i)),
-            pl.BlockSpec((np_, block_m), lambda i: (0, i)),
-            pl.BlockSpec(events.shape, lambda i: (0, 0)),
-            pl.BlockSpec((np_, lcap, block_m), lambda i: (0, 0, i)),
-            pl.BlockSpec((np_, lcap, block_m), lambda i: (0, 0, i)),
-            pl.BlockSpec((SUBLANES, block_m), lambda i: (0, i)),
-            pl.BlockSpec((SUBLANES, block_m), lambda i: (0, i)),
+            pl.BlockSpec((np_, block_m), tile),
+            pl.BlockSpec((np_, block_m), tile),
+            pl.BlockSpec((np_, block_m), tile),
+            pl.BlockSpec((events.shape[0], be), lambda i, j: (0, j)),
+            pl.BlockSpec((np_, lcap, block_m), tile3),
+            pl.BlockSpec((np_, lcap, block_m), tile3),
+            pl.BlockSpec((SUBLANES, block_m), tile),
+            pl.BlockSpec((SUBLANES, block_m), tile),
         ],
-        out_specs=[pl.BlockSpec((SUBLANES, block_m), lambda i: (0, i)),
-                   pl.BlockSpec((SUBLANES, block_m), lambda i: (0, i)),
-                   pl.BlockSpec((np_, lcap, block_m), lambda i: (0, 0, i)),
-                   pl.BlockSpec((np_, lcap, block_m), lambda i: (0, 0, i))],
+        out_specs=[pl.BlockSpec((SUBLANES, block_m), tile),
+                   pl.BlockSpec((SUBLANES, block_m), tile),
+                   pl.BlockSpec((np_, lcap, block_m), tile3),
+                   pl.BlockSpec((np_, lcap, block_m), tile3)],
         out_shape=out_shape,
         input_output_aliases={6: 0, 7: 1, 4: 2, 5: 3},
+        compiler_params=SEQ_GRID,
         interpret=interpret,
     )(etypes, tlo, thi, events, s, po, cnt, ovf)
+
+
+# --------------------------------------------------------------------------
+# Segment-parallel MapConcatenate (paper §5.2.2) — bounded-list machines
+# --------------------------------------------------------------------------
+
+
+def _a1_mapc_body(n_levels: int, lcap: int, et, tlo, thi, starts, tau_lo,
+                  tau_hi, w_row, ev_ref):
+    """Per-event step for the K = N phase-shifted bounded-list machines of
+    one time segment (kernel analogue of ``core.mapconcat._segment_scan``'s
+    scan body; zone predicates shared via ``core.mapconcat.stitch_zones``).
+
+    Carry: s/po (K, NP, LCAP, BM); cnt/ovf/a/b/done/a_set (K, BM)."""
+    k = n_levels
+    np_, bm = et.shape
+
+    def body(j, carry):
+        s, po, cnt, ovf, a, b, done, a_set = carry
+        e = ev_ref[0, SEG_TYPE, j]
+        t = ev_ref[0, SEG_TIME, j]
+        dup = ev_ref[0, SEG_DUP, j] != 0
+        match = et == e                                       # (NP, BM)
+        delta = t - s                                         # (K,NP,L,BM)
+        witness = ((delta > tlo[None, :, None, :])
+                   & (delta <= thi[None, :, None, :]))
+        ok = witness.any(axis=2)                              # (K, NP, BM)
+        ok_shift = jnp.concatenate(
+            [jnp.ones((k, 1, bm), jnp.bool_), ok[:, :-1, :]], axis=1)
+        advance = match[None] & ok_shift                      # (K, NP, BM)
+        raw_complete = advance[:, n_levels - 1, :]            # (K, BM)
+        store = advance.at[:, n_levels - 1, :].set(False)
+        store = store & ~raw_complete[:, None, :]
+        write = store[:, :, None, :] & po                     # (K,NP,L,BM)
+        v = jnp.where(write, s, TIME_NEG_INF).max(axis=2)     # (K, NP, BM)
+        live_ev = ((v > TIME_NEG_INF) & (t - v <= thi[None])
+                   & ((tlo[None] > 0) | dup))
+        ovf2 = ovf | live_ev.any(axis=1)                      # (K, BM)
+        s2 = jnp.where(write, t, s)
+        po2 = jnp.where(store[:, :, None, :], jnp.roll(po, 1, axis=2), po)
+        s2 = jnp.where(raw_complete[:, None, None, :], TIME_NEG_INF, s2)
+        po_reset = jnp.zeros_like(po).at[:, :, 0, :].set(True)
+        po2 = jnp.where(raw_complete[:, None, None, :], po_reset, po2)
+        # zone gating (single source of truth: core.mapconcat.stitch_zones)
+        seg_z, a_z, live_z, cross_z = stitch_zones(t, tau_lo, tau_hi, w_row)
+        in_window = (t > starts) & live_z & ~done             # (K, BM)
+        live = in_window & (e != PAD_TYPE)
+        s = jnp.where(live[:, None, None, :], s2, s)
+        po = jnp.where(live[:, None, None, :], po2, po)
+        ovf = jnp.where(live, ovf2, ovf)
+        complete = raw_complete & in_window
+        in_seg = complete & seg_z
+        cnt = cnt + in_seg.astype(jnp.int32)
+        rec_a = in_seg & ~a_set & a_z
+        a = jnp.where(rec_a, t, a)
+        a_set = a_set | rec_a
+        crossing = complete & cross_z
+        b = jnp.where(crossing, t, b)
+        done = done | crossing
+        return s, po, cnt, ovf, a, b, done, a_set
+
+    return body
+
+
+def _a1_mapc_kernel(n_levels: int, lcap: int, et_ref, tlo_ref, thi_ref,
+                    cum_ref, w_ref, ev_ref, a_ref, c_ref, b_ref, f_ref,
+                    ovf_ref):
+    """One (episode tile × time segment) grid step: Map this segment with
+    K phase-shifted bounded-list machines, then fold its tuple onto the
+    carried Concatenate state (revisited output blocks)."""
+    et = et_ref[...]
+    tlo = tlo_ref[...]
+    thi = thi_ref[...]
+    np_, bm = et.shape
+    k = n_levels
+    tau_lo = ev_ref[0, SEG_TAU_LO, 0]
+    tau_hi = ev_ref[0, SEG_TAU_HI, 0]
+    w_row = w_ref[0, :]                        # (BM,) per-episode max span
+    starts = tau_lo - cum_ref[...][:k]         # (K, BM) phase start times
+    body = _a1_mapc_body(n_levels, lcap, et, tlo, thi, starts, tau_lo,
+                         tau_hi, w_row, ev_ref)
+    s0 = jnp.full((k, np_, lcap, bm), TIME_NEG_INF, jnp.int32)
+    po0 = jnp.zeros((k, np_, lcap, bm), jnp.bool_).at[:, :, 0, :].set(True)
+    zi = jnp.zeros((k, bm), jnp.int32)
+    zb = jnp.zeros((k, bm), jnp.bool_)
+    a0 = jnp.full((k, bm), tau_lo, jnp.int32)
+    b0 = jnp.full((k, bm), tau_hi, jnp.int32)
+    _, _, cnt, ovf, a, b, _, _ = jax.lax.fori_loop(
+        0, ev_ref.shape[2], body, (s0, po0, zi, zb, a0, b0, zb, zb))
+    _mapc_fold_and_emit(n_levels, (a, cnt, b), ovf.any(axis=0),
+                        a_ref, c_ref, b_ref, f_ref, ovf_ref)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_levels", "lcap", "block_m", "interpret"))
+def a1_mapconcat_kernel(etypes, tlo, thi, cum, w, segs, *, n_levels: int,
+                        lcap: int = 4, block_m: int = LANES,
+                        interpret: bool = False):
+    """Segment-parallel bounded-list pallas_call: grid = (episode tile ×
+    time segment), Map + fused Concatenate in one launch.
+
+    Args as ``a2_mapconcat_kernel`` (``tlo`` unshifted — A1 keeps the
+    strict lower bound). Returns (a, c, b, f) each i32[NP, M] — the
+    stitched tuple, phase rows 0..N-1 meaningful — plus ovf i32[8, M]
+    whose row 0 ORs the live-eviction flags over every (segment, phase).
+    Row 0 of ``c`` is the count; an episode needs the host's exact
+    fallback iff ``f[0] | ovf[0]``.
+    """
+    np_, m = etypes.shape
+    p = segs.shape[0]
+    grid = (m // block_m, p)
+    kernel = functools.partial(_a1_mapc_kernel, n_levels, lcap)
+    tile = lambda i, j: (0, i)  # noqa: E731
+    out_shape = ([jax.ShapeDtypeStruct((np_, m), jnp.int32)] * 4
+                 + [jax.ShapeDtypeStruct((SUBLANES, m), jnp.int32)])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((np_, block_m), tile),
+            pl.BlockSpec((np_, block_m), tile),
+            pl.BlockSpec((np_, block_m), tile),
+            pl.BlockSpec((np_, block_m), tile),
+            pl.BlockSpec((SUBLANES, block_m), tile),
+            pl.BlockSpec((1, SEG_ROWS, segs.shape[2]),
+                         lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=([pl.BlockSpec((np_, block_m), tile)] * 4
+                   + [pl.BlockSpec((SUBLANES, block_m), tile)]),
+        out_shape=out_shape,
+        compiler_params=SEQ_GRID,
+        interpret=interpret,
+    )(etypes, tlo, thi, cum, w, segs)

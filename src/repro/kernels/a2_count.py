@@ -2,21 +2,21 @@
 
 Computation-to-core mapping (the TPU re-derivation of the paper's PTPE):
 episodes live on the 128-wide **lane** axis, episode levels on the
-**sublane** axis, so one VPU op advances 8×128 state machines. The grid
-tiles the episode batch; each program walks the whole event stream with a
-``fori_loop``, carrying the (levels × episodes) timestamp tile and the count
-row as loop values (VREG/VMEM resident).
+**sublane** axis, so one VPU op advances 8×128 state machines. The grid's
+first axis tiles the episode batch; the second axis blocks the **event
+stream** into ``block_e``-sized chunks with ``arbitrary`` (sequential)
+grid semantics — each chunk is DMA'd/double-buffered into VMEM per grid
+step while the machine state carries across steps in the revisited output
+block, so the stream is never broadcast whole and VMEM no longer caps the
+events-per-call (the seed's "stream re-read by every grid step" layout is
+gone; the fresh-state wrapper shares the chunked launch with the
+state-carried one).
 
 Layouts (all i32):
   etypes  (NP,  BM)  episode types, level-major  (NP = levels padded to 8k)
   tlo/thi (NP,  BM)  edge bounds, row i = edge i→i+1 (row N-1.. padded)
   events  (2, EP)    row 0 = types, row 1 = times (EP = events padded)
   count   (8, BM)    output; row 0 holds the counts (8 sublanes for tiling)
-
-The event stream is re-read by every grid step (episode tile); on a real
-TPU the (2, EP) block would be served from VMEM once per program — the
-stream is tiny next to the state tile math, so this is compute-, not
-memory-bound (§Roofline in EXPERIMENTS.md).
 
 Event padding uses type = PAD_TYPE (-1); level-row padding uses -2, so a
 padded event never matches a padded row. Validated in ``interpret=True``
@@ -29,6 +29,17 @@ complete machine state (Obs. 5.1), so carried chunked counting is
 unconditionally bit-exact under any partitioning — no tie-group caveat.
 Pack/unpack to ``core.count_a2.A2State`` lives in ``ops.a2_state_layout``
 / ``ops.a2_state_unpack``.
+
+Segment-parallel variant (``a2_mapconcat_kernel``): the paper's
+MapConcatenate mapping (§5.2.2) brought on-chip — the grid is
+(episode tile × time segment); each segment runs K = N phase-shifted
+single-slot machines (start offsets from ``core.mapconcat.phase_cum``,
+stitch zones from ``core.mapconcat.stitch_zones``) and emits the
+(a, count, b) tuple of Fig. 5, with the Concatenate stage fused into the
+same launch: the tuple lives in output blocks revisited across the segment
+axis and each segment folds onto it with the first-match stitch
+(``core.mapconcat.fold_pair_unrolled``, carrying the ``unmatched`` flag
+for the host's exact-recount fallback).
 """
 
 from __future__ import annotations
@@ -38,12 +49,34 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.events import TIME_NEG_INF
+from repro.core.events import PAD_TYPE, TIME_NEG_INF
+from repro.core.mapconcat import fold_pair_unrolled, stitch_zones
 
 LANES = 128
 SUBLANES = 8
 PAD_ROW_TYPE = -2
+
+# event-axis chunk: events per grid step on the ``arbitrary`` grid axis
+# (the DMA/double-buffer granularity; also the padding quantum for long
+# streams — see ops.event_brick)
+DEFAULT_BLOCK_E = 1024
+
+# segmented-kernel event-brick rows (see ops.segment_bricks):
+# types, times, successor-duplicate flags, then the segment boundaries
+# τ_p / τ_{p+1} broadcast along the row (read as scalars at column 0)
+SEG_TYPE, SEG_TIME, SEG_DUP, SEG_TAU_LO, SEG_TAU_HI = range(5)
+SEG_ROWS = 5
+
+try:  # jax >= 0.5 spells it CompilerParams
+    _CompilerParams = pltpu.CompilerParams
+except AttributeError:
+    _CompilerParams = pltpu.TPUCompilerParams
+
+# episode tiles are independent (parallel); the event-chunk / time-segment
+# axis carries machine state or the stitch fold across steps (arbitrary)
+SEQ_GRID = _CompilerParams(dimension_semantics=("parallel", "arbitrary"))
 
 
 def _a2_body(n_levels: int, et, tlo, thi, ev_ref):
@@ -72,40 +105,43 @@ def _a2_body(n_levels: int, et, tlo, thi, ev_ref):
     return body
 
 
-def _a2_kernel(n_levels: int, et_ref, tlo_ref, thi_ref, ev_ref, cnt_ref):
-    """One episode tile × all events. n_levels is static (>= 2)."""
-    et = et_ref[...]          # (NP, BM)
-    tlo = tlo_ref[...]        # (NP, BM) row i = edge (i, i+1)
-    thi = thi_ref[...]
-    np_, bm = et.shape
-    n_events = ev_ref.shape[1]
-    body = _a2_body(n_levels, et, tlo, thi, ev_ref)
-    s0 = jnp.full((np_, bm), TIME_NEG_INF, jnp.int32)
-    c0 = jnp.zeros((1, bm), jnp.int32)
-    _, cnt = jax.lax.fori_loop(0, n_events, body, (s0, c0))
-    cnt_ref[...] = jnp.broadcast_to(cnt, cnt_ref.shape)
-
-
 def _a2_state_kernel(n_levels: int, et_ref, tlo_ref, thi_ref, ev_ref,
                      sin_ref, cin_ref, cnt_ref, sout_ref):
-    """State-carried variant: resume from the input tile, emit the advanced
-    tile (aliased in place by the wrapper)."""
+    """One (episode tile × event chunk) grid step: resume the machines from
+    the carried output blocks (seeded from the state inputs at chunk 0),
+    walk this chunk's events, and leave the advanced state in the revisited
+    output blocks for the next chunk."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        sout_ref[...] = sin_ref[...]
+        cnt_ref[...] = cin_ref[...]
+
     et = et_ref[...]
     tlo = tlo_ref[...]
     thi = thi_ref[...]
-    n_events = ev_ref.shape[1]
     body = _a2_body(n_levels, et, tlo, thi, ev_ref)
-    s, cnt = jax.lax.fori_loop(0, n_events, body,
-                               (sin_ref[...], cin_ref[0:1, :]))
+    s, cnt = jax.lax.fori_loop(0, ev_ref.shape[1], body,
+                               (sout_ref[...], cnt_ref[0:1, :]))
     cnt_ref[...] = jnp.broadcast_to(cnt, cnt_ref.shape)
     sout_ref[...] = s
 
 
+def _block_e(ep: int, block_e: int) -> int:
+    """Effective event-chunk length: ``block_e`` when it divides the padded
+    stream (ops.event_brick pads long streams to a block_e multiple), else
+    one whole-stream chunk (short streams — the status-quo single fetch)."""
+    return block_e if 0 < block_e < ep and ep % block_e == 0 else ep
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("n_levels", "block_m", "interpret"))
+                   static_argnames=("n_levels", "block_m", "block_e",
+                                    "interpret"))
 def a2_count_kernel(etypes, tlo, thi, events, *, n_levels: int,
-                    block_m: int = LANES, interpret: bool = False):
-    """pallas_call wrapper.
+                    block_m: int = LANES, block_e: int = DEFAULT_BLOCK_E,
+                    interpret: bool = False):
+    """pallas_call wrapper (fresh machines).
 
     Args:
       etypes/tlo/thi: i32[NP, M] (level-major, padded rows = PAD_ROW_TYPE /
@@ -113,56 +149,222 @@ def a2_count_kernel(etypes, tlo, thi, events, *, n_levels: int,
       events: i32[2, EP] (types; times).
       n_levels: true episode size N (static).
     Returns i32[8, M]; row 0 = counts.
+
+    Delegates to the state-carried launch with empty machines, so the
+    non-streaming API pays the same chunked event ``BlockSpec`` (no
+    whole-stream broadcast) as the streaming hot path.
     """
     np_, m = etypes.shape
-    grid = (m // block_m,)
-    kernel = functools.partial(_a2_kernel, n_levels)
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((np_, block_m), lambda i: (0, i)),
-            pl.BlockSpec((np_, block_m), lambda i: (0, i)),
-            pl.BlockSpec((np_, block_m), lambda i: (0, i)),
-            pl.BlockSpec(events.shape, lambda i: (0, 0)),  # stream: every tile
-        ],
-        out_specs=pl.BlockSpec((SUBLANES, block_m), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((SUBLANES, m), jnp.int32),
-        interpret=interpret,
-    )(etypes, tlo, thi, events)
+    s0 = jnp.full((np_, m), TIME_NEG_INF, jnp.int32)
+    c0 = jnp.zeros((SUBLANES, m), jnp.int32)
+    cnt, _ = a2_count_state_kernel(etypes, tlo, thi, events, s0, c0,
+                                   n_levels=n_levels, block_m=block_m,
+                                   block_e=block_e, interpret=interpret)
+    return cnt
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n_levels", "block_m", "interpret"))
+                   static_argnames=("n_levels", "block_m", "block_e",
+                                    "interpret"))
 def a2_count_state_kernel(etypes, tlo, thi, events, s, cnt, *, n_levels: int,
-                          block_m: int = LANES, interpret: bool = False):
+                          block_m: int = LANES,
+                          block_e: int = DEFAULT_BLOCK_E,
+                          interpret: bool = False):
     """State-in/state-out pallas_call wrapper.
 
     State operands (i32, kernel layout): ``s`` (NP, M) last-accepted
     timestamp per level (TIME_NEG_INF = empty); ``cnt`` (8, M) cumulative
     counts, row 0 meaningful. Returns (cnt, s) advanced past ``events``;
     state inputs are aliased onto the outputs (donated) — never reuse the
-    passed arrays.
+    passed arrays. Events are walked in ``block_e`` chunks on the second
+    (``arbitrary``) grid axis with the state carried on-chip between
+    chunks.
     """
     np_, m = etypes.shape
-    grid = (m // block_m,)
+    ep = events.shape[1]
+    be = _block_e(ep, block_e)
+    grid = (m // block_m, ep // be)
     kernel = functools.partial(_a2_state_kernel, n_levels)
+    tile = lambda i, j: (0, i)  # noqa: E731 — episode tile, chunk-invariant
     out_shape = [jax.ShapeDtypeStruct((SUBLANES, m), jnp.int32),
                  jax.ShapeDtypeStruct((np_, m), jnp.int32)]
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((np_, block_m), lambda i: (0, i)),
-            pl.BlockSpec((np_, block_m), lambda i: (0, i)),
-            pl.BlockSpec((np_, block_m), lambda i: (0, i)),
-            pl.BlockSpec(events.shape, lambda i: (0, 0)),
-            pl.BlockSpec((np_, block_m), lambda i: (0, i)),
-            pl.BlockSpec((SUBLANES, block_m), lambda i: (0, i)),
+            pl.BlockSpec((np_, block_m), tile),
+            pl.BlockSpec((np_, block_m), tile),
+            pl.BlockSpec((np_, block_m), tile),
+            pl.BlockSpec((events.shape[0], be), lambda i, j: (0, j)),
+            pl.BlockSpec((np_, block_m), tile),
+            pl.BlockSpec((SUBLANES, block_m), tile),
         ],
-        out_specs=[pl.BlockSpec((SUBLANES, block_m), lambda i: (0, i)),
-                   pl.BlockSpec((np_, block_m), lambda i: (0, i))],
+        out_specs=[pl.BlockSpec((SUBLANES, block_m), tile),
+                   pl.BlockSpec((np_, block_m), tile)],
         out_shape=out_shape,
         input_output_aliases={5: 0, 4: 1},
+        compiler_params=SEQ_GRID,
         interpret=interpret,
     )(etypes, tlo, thi, events, s, cnt)
+
+
+# --------------------------------------------------------------------------
+# Segment-parallel MapConcatenate (paper §5.2.2) — single-slot machines
+# --------------------------------------------------------------------------
+
+
+def _pad_phase_rows(x, np_: int):
+    """[K, BM] phase block → (NP, BM) output brick (rows >= K zero)."""
+    k, bm = x.shape
+    x = x.astype(jnp.int32)
+    if k == np_:
+        return x
+    return jnp.concatenate([x, jnp.zeros((np_ - k, bm), jnp.int32)], axis=0)
+
+
+def _a2_mapc_body(n_levels: int, et, tlo, thi, starts, tau_lo, tau_hi,
+                  w_row, ev_ref):
+    """Per-event step for the K = N phase-shifted single-slot machines of
+    one time segment (the kernel analogue of
+    ``core.mapconcat._segment_scan`` with Obs. 5.1 state)."""
+    k = n_levels
+    np_, bm = et.shape
+
+    def body(j, carry):
+        s, cnt, a, b, done, a_set = carry
+        e = ev_ref[0, SEG_TYPE, j]
+        t = ev_ref[0, SEG_TIME, j]
+        match = et == e                                     # (NP, BM)
+        delta = t - s                                       # (K, NP, BM)
+        ok = (delta > tlo[None]) & (delta <= thi[None])
+        ok_shift = jnp.concatenate(
+            [jnp.ones((k, 1, bm), jnp.bool_), ok[:, :-1, :]], axis=1)
+        advance = match[None] & ok_shift                    # (K, NP, BM)
+        raw_complete = advance[:, n_levels - 1, :]          # (K, BM)
+        store = advance.at[:, n_levels - 1, :].set(False)
+        s2 = jnp.where(store, t, s)
+        s2 = jnp.where(raw_complete[:, None, :], TIME_NEG_INF, s2)
+        # zone gating (single source of truth: core.mapconcat.stitch_zones)
+        seg_z, a_z, live_z, cross_z = stitch_zones(t, tau_lo, tau_hi, w_row)
+        in_window = (t > starts) & live_z & ~done           # (K, BM)
+        live = in_window & (e != PAD_TYPE)
+        s = jnp.where(live[:, None, :], s2, s)
+        complete = raw_complete & in_window
+        in_seg = complete & seg_z
+        cnt = cnt + in_seg.astype(jnp.int32)
+        rec_a = in_seg & ~a_set & a_z
+        a = jnp.where(rec_a, t, a)
+        a_set = a_set | rec_a
+        crossing = complete & cross_z
+        b = jnp.where(crossing, t, b)
+        done = done | crossing
+        return s, cnt, a, b, done, a_set
+
+    return body
+
+
+def _mapc_fold_and_emit(n_levels: int, seg, ovf_any, a_ref, c_ref, b_ref,
+                        f_ref, ovf_ref):
+    """Fused Concatenate: fold this segment's tuple onto the carried tuple
+    held in the revisited output blocks (shared by the A1 and A2 segmented
+    kernels). ``seg`` = (a, cnt, b) each (K, BM); ``ovf_any`` (BM,) bool."""
+    k = n_levels
+    np_, bm = a_ref.shape
+    a, cnt, b = seg
+    zf = jnp.zeros((k, bm), jnp.bool_)
+    ovf_row = jnp.broadcast_to(ovf_any[None, :].astype(jnp.int32),
+                               ovf_ref.shape)
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _():
+        a_ref[...] = _pad_phase_rows(a, np_)
+        c_ref[...] = _pad_phase_rows(cnt, np_)
+        b_ref[...] = _pad_phase_rows(b, np_)
+        f_ref[...] = jnp.zeros((np_, bm), jnp.int32)
+        ovf_ref[...] = ovf_row
+
+    @pl.when(p > 0)
+    def _():
+        carry = (a_ref[...][:k], c_ref[...][:k], b_ref[...][:k],
+                 f_ref[...][:k] != 0)
+        a2, c2, b2, f2 = fold_pair_unrolled(carry, (a, cnt, b, zf), k)
+        a_ref[...] = _pad_phase_rows(a2, np_)
+        c_ref[...] = _pad_phase_rows(c2, np_)
+        b_ref[...] = _pad_phase_rows(b2, np_)
+        f_ref[...] = _pad_phase_rows(f2, np_)
+        ovf_ref[...] = ovf_ref[...] | ovf_row
+
+
+def _a2_mapc_kernel(n_levels: int, et_ref, tlo_ref, thi_ref, cum_ref, w_ref,
+                    ev_ref, a_ref, c_ref, b_ref, f_ref, ovf_ref):
+    """One (episode tile × time segment) grid step: Map this segment with
+    K phase machines, then fold its tuple onto the carried Concatenate
+    state."""
+    et = et_ref[...]
+    tlo = tlo_ref[...]
+    thi = thi_ref[...]
+    np_, bm = et.shape
+    k = n_levels
+    tau_lo = ev_ref[0, SEG_TAU_LO, 0]
+    tau_hi = ev_ref[0, SEG_TAU_HI, 0]
+    w_row = w_ref[0, :]                        # (BM,) per-episode max span
+    starts = tau_lo - cum_ref[...][:k]         # (K, BM) phase start times
+    body = _a2_mapc_body(n_levels, et, tlo, thi, starts, tau_lo, tau_hi,
+                         w_row, ev_ref)
+    s0 = jnp.full((k, np_, bm), TIME_NEG_INF, jnp.int32)
+    zi = jnp.zeros((k, bm), jnp.int32)
+    zb = jnp.zeros((k, bm), jnp.bool_)
+    a0 = jnp.full((k, bm), tau_lo, jnp.int32)
+    b0 = jnp.full((k, bm), tau_hi, jnp.int32)
+    _, cnt, a, b, _, _ = jax.lax.fori_loop(
+        0, ev_ref.shape[2], body, (s0, zi, a0, b0, zb, zb))
+    _mapc_fold_and_emit(n_levels, (a, cnt, b), jnp.zeros(bm, jnp.bool_),
+                        a_ref, c_ref, b_ref, f_ref, ovf_ref)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_levels", "block_m", "interpret"))
+def a2_mapconcat_kernel(etypes, tlo, thi, cum, w, segs, *, n_levels: int,
+                        block_m: int = LANES, interpret: bool = False):
+    """Segment-parallel single-slot pallas_call: grid = (episode tile ×
+    time segment), Map + fused Concatenate in one launch.
+
+    Args (see ``ops.mapconcat_layout`` / ``ops.segment_bricks``):
+      etypes/tlo/thi: i32[NP, M] level-major bricks (``tlo`` already
+        shifted for the inclusive lower bound — A2 counts the relaxed
+        batch);
+      cum: i32[NP, M] phase-start offsets (row k = Σ_{i<k} thi);
+      w: i32[8, M] per-episode max span, row 0 meaningful;
+      segs: i32[P, 5, LW] per-segment event windows
+        (types/times/dup/τ_p/τ_{p+1}).
+    Returns (a, c, b, f) each i32[NP, M] — the stitched tuple, phase rows
+    0..N-1 meaningful — plus ovf i32[8, M] (always zero for A2; kept for
+    output-shape parity with the A1 variant). Row 0 of ``c`` is the count,
+    row 0 of ``f`` the unmatched flag.
+    """
+    np_, m = etypes.shape
+    p = segs.shape[0]
+    grid = (m // block_m, p)
+    kernel = functools.partial(_a2_mapc_kernel, n_levels)
+    tile = lambda i, j: (0, i)  # noqa: E731
+    out_shape = ([jax.ShapeDtypeStruct((np_, m), jnp.int32)] * 4
+                 + [jax.ShapeDtypeStruct((SUBLANES, m), jnp.int32)])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((np_, block_m), tile),
+            pl.BlockSpec((np_, block_m), tile),
+            pl.BlockSpec((np_, block_m), tile),
+            pl.BlockSpec((np_, block_m), tile),
+            pl.BlockSpec((SUBLANES, block_m), tile),
+            pl.BlockSpec((1, SEG_ROWS, segs.shape[2]),
+                         lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=([pl.BlockSpec((np_, block_m), tile)] * 4
+                   + [pl.BlockSpec((SUBLANES, block_m), tile)]),
+        out_shape=out_shape,
+        compiler_params=SEQ_GRID,
+        interpret=interpret,
+    )(etypes, tlo, thi, cum, w, segs)

@@ -14,7 +14,13 @@ state-in/state-out layout contract for the carried (streaming) kernels:
     layout — no per-window repacking);
   * ``a1_count_stateful`` / ``a2_count_stateful`` are the one-shot-chunk
     conveniences used by ``count_a1``/``count_a2`` stateful modes (host
-    layout in, host layout out).
+    layout in, host layout out);
+  * ``mapconcat_layout`` / ``segment_bricks`` pack the segmented kernels'
+    operands (phase-start cumsum + span rows, per-segment
+    types/times/dup/τ bricks), and ``a1_mapconcat_tuples`` /
+    ``a2_mapconcat_tuples`` / ``a1_mapconcat_count`` /
+    ``a2_mapconcat_count`` dispatch the in-kernel MapConcatenate (grid =
+    episode tile × time segment, Concatenate fold fused on-chip).
 
 Dispatch policy:
   * on TPU — compiled Pallas kernel;
@@ -25,9 +31,10 @@ Dispatch policy:
     back to the XLA-scan engine, which is the fast CPU path.
 
 ``KERNEL_CALLS`` tallies host-side kernel dispatches per kind ("a1", "a2",
-"a1_state", "a2_state") — the interpret-mode instrumentation tests use it to
-assert the Pallas path actually executed (the bug this module's stateful API
-fixes was exactly a silent bypass that no test could see).
+"a1_state", "a2_state", "a1_mapc", "a2_mapc") — the interpret-mode
+instrumentation tests use it to assert the Pallas path actually executed
+(the bug this module's stateful API fixes was exactly a silent bypass that
+no test could see).
 """
 
 from __future__ import annotations
@@ -46,9 +53,13 @@ from repro.core.episodes import EpisodeBatch
 from repro.core.events import (PAD_TYPE, TIME_NEG_INF, EventStream,
                                count_level1)
 
-from .a1_count import a1_count_kernel, a1_count_state_kernel
-from .a2_count import (LANES, PAD_ROW_TYPE, SUBLANES, a2_count_kernel,
-                       a2_count_state_kernel)
+from repro.core.mapconcat import make_segments, phase_cum
+
+from .a1_count import (a1_count_kernel, a1_count_state_kernel,
+                       a1_mapconcat_kernel)
+from .a2_count import (DEFAULT_BLOCK_E, LANES, PAD_ROW_TYPE, SEG_ROWS,
+                       SUBLANES, a2_count_kernel, a2_count_state_kernel,
+                       a2_mapconcat_kernel)
 
 KERNEL_CALLS: collections.Counter = collections.Counter()
 
@@ -101,12 +112,19 @@ def episode_layout(eps: EpisodeBatch, inclusive_lower: bool,
 
 def event_brick(types, times, with_dup: bool, length: int | None = None):
     """Raw event arrays → padded i32[2 or 3, EP] kernel brick
-    (types; times; [dup]). ``length`` overrides the default
-    round-up-to-128 padding (streaming uses its shape buckets)."""
+    (types; times; [dup]). ``length`` overrides the default padding
+    (streaming uses its shape buckets): round-up-to-128, and for streams
+    longer than one event chunk round-up-to-``DEFAULT_BLOCK_E`` so the
+    kernels' chunked event ``BlockSpec`` divides the brick evenly."""
     types = np.asarray(types, np.int32)
     times = np.asarray(times, np.int32)
     n = types.shape[0]
-    ep = _round_up(max(n, 1), LANES) if length is None else length
+    if length is None:
+        ep = _round_up(max(n, 1), LANES)
+        if ep > DEFAULT_BLOCK_E:
+            ep = _round_up(ep, DEFAULT_BLOCK_E)
+    else:
+        ep = length
     rows = 3 if with_dup else 2
     ev = np.zeros((rows, ep), np.int32)
     ev[0, :] = PAD_TYPE
@@ -238,6 +256,143 @@ def a2_state_call(et, tlo, thi, ev, s, cnt, *, n_levels: int,
     KERNEL_CALLS["a2_state"] += 1
     return a2_count_state_kernel(et, tlo, thi, ev, s, cnt,
                                  n_levels=n_levels, interpret=interpret)
+
+
+# --------------------------------------------------------------------------
+# Segment-parallel (MapConcatenate) dispatch: layout + instrumented calls
+# --------------------------------------------------------------------------
+
+
+def mapconcat_layout(eps: EpisodeBatch, inclusive_lower: bool,
+                     block_m: int = LANES):
+    """Episode layout for the segmented kernels: the usual level-major
+    bricks plus the phase-start offsets and per-episode span.
+
+    Returns (et, tlo, thi, cum, w):
+      cum  i32(NP, MP)  row k = Σ_{i<k} thi (``core.mapconcat.phase_cum``)
+                        — machine k of the segment starts that far before
+                        the boundary; rows >= N zero (never read)
+      w    i32(8, MP)   row 0 = per-episode max occurrence span
+    """
+    et, tlo, thi = episode_layout(eps, inclusive_lower, block_m)
+    m, n = eps.etypes.shape
+    np_ = _round_up(max(n, 1), SUBLANES)
+    mp = _round_up(m, block_m)
+    cum = np.zeros((np_, mp), np.int32)
+    cum[:n, :m] = np.asarray(phase_cum(eps.thi), np.int32).T
+    w = np.zeros((SUBLANES, mp), np.int32)
+    w[0, :m] = np.asarray(eps.max_span, np.int32)
+    return et, tlo, thi, jnp.asarray(cum), jnp.asarray(w)
+
+
+def segment_bricks(wt, wtt, tau, length: int | None = None):
+    """Per-segment event windows → i32[P, 5, LW] kernel bricks.
+
+    Rows: (types, times, dup, τ_p, τ_{p+1}) — the boundary rows are
+    broadcast along the window (the kernel reads them as scalars at column
+    0). ``dup`` marks a same-timestamp real successor *within the window*,
+    matching the per-window ``core.count_a1.dup_flags`` semantics the XLA
+    Map step uses. ``length`` overrides the round-up-to-128 window padding
+    (the cross-session batcher re-buckets to the fused group's max).
+    """
+    wt = np.asarray(wt, np.int32)
+    wtt = np.asarray(wtt, np.int32)
+    p, lw = wt.shape
+    lwp = _round_up(max(lw, 1), LANES) if length is None else length
+    ev = np.zeros((p, SEG_ROWS, lwp), np.int32)
+    ev[:, 0, :] = PAD_TYPE
+    ev[:, 0, :lw] = wt
+    ev[:, 1, :lw] = wtt
+    if lw > 1:
+        ev[:, 2, : lw - 1] = ((wtt[:, 1:] == wtt[:, :-1])
+                              & (wt[:, 1:] != PAD_TYPE)).astype(np.int32)
+    tau = np.asarray(tau, np.int64)
+    ev[:, 3, :] = tau[:-1, None].astype(np.int32)
+    ev[:, 4, :] = tau[1:, None].astype(np.int32)
+    return jnp.asarray(ev)
+
+
+def a1_mapconcat_tuples(et, tlo, thi, cum, w, segs, *, n_levels: int,
+                        lcap: int, interpret: bool):
+    """One segmented A1 launch in kernel layout (instrumented). Returns the
+    stitched (a, c, b, f) bricks plus the ovf rows."""
+    KERNEL_CALLS["a1_mapc"] += 1
+    return a1_mapconcat_kernel(et, tlo, thi, cum, w, segs,
+                               n_levels=n_levels, lcap=lcap,
+                               interpret=interpret)
+
+
+def a2_mapconcat_tuples(et, tlo, thi, cum, w, segs, *, n_levels: int,
+                        interpret: bool):
+    """One segmented A2 launch in kernel layout (instrumented)."""
+    KERNEL_CALLS["a2_mapc"] += 1
+    return a2_mapconcat_kernel(et, tlo, thi, cum, w, segs,
+                               n_levels=n_levels, interpret=interpret)
+
+
+def _mapc_inputs(stream: EventStream, eps: EpisodeBatch, num_segments: int,
+                 inclusive_lower: bool):
+    """Host side of a one-shot segmented launch: segment the stream
+    (``core.mapconcat.make_segments`` — same boundaries as the XLA path)
+    and pack the kernel bricks."""
+    w_max = int(np.asarray(eps.max_span).max())
+    tau, wt, wtt = make_segments(stream, num_segments, w_max)
+    layout = mapconcat_layout(eps, inclusive_lower=inclusive_lower)
+    return layout + (segment_bricks(wt, wtt, tau),)
+
+
+def a1_mapconcat_count(stream: EventStream, eps: EpisodeBatch,
+                       num_segments: int = 8, lcap: int = DEFAULT_LCAP,
+                       force: str | None = None):
+    """Kernel-backed MapConcatenate: one launch runs the segment Map and
+    the fused Concatenate fold. Returns (counts int64[M], bad bool[M]);
+    ``bad`` marks episodes needing the caller's exact fallback (unmatched
+    stitch or possibly-live eviction — same containment as
+    ``core.mapconcat.mapconcatenate``)."""
+    interpret = _mode(force)
+    if eps.N == 1:
+        return (count_level1(stream, eps.etypes[:, 0]),
+                np.zeros(eps.M, dtype=bool))
+    if len(stream) == 0:
+        return np.zeros(eps.M, np.int64), np.zeros(eps.M, dtype=bool)
+    et, tlo, thi, cum, w, segs = _mapc_inputs(stream, eps, num_segments,
+                                              inclusive_lower=False)
+    _, c, _, f, ovf = a1_mapconcat_tuples(et, tlo, thi, cum, w, segs,
+                                          n_levels=eps.N, lcap=lcap,
+                                          interpret=interpret)
+    counts = np.asarray(c[0, : eps.M], dtype=np.int64)
+    bad = np.asarray((f[0, : eps.M] != 0) | (ovf[0, : eps.M] != 0))
+    return counts, bad
+
+
+def a2_mapconcat_count(stream: EventStream, eps: EpisodeBatch,
+                       num_segments: int = 8, force: str | None = None):
+    """Kernel-backed segmented A2 (single-slot) counting of ``eps`` under
+    its own bounds with the inclusive-lower strengthening (callers pass the
+    relaxed batch). Returns (counts int64[M], bad bool[M]); ``bad`` = the
+    stitch's unmatched flag (single-slot machines cannot overflow)."""
+    interpret = _mode(force)
+    if eps.N == 1:
+        return (count_level1(stream, eps.etypes[:, 0]),
+                np.zeros(eps.M, dtype=bool))
+    if len(stream) == 0:
+        return np.zeros(eps.M, np.int64), np.zeros(eps.M, dtype=bool)
+    et, tlo, thi, cum, w, segs = _mapc_inputs(stream, eps, num_segments,
+                                              inclusive_lower=True)
+    _, c, _, f, _ = a2_mapconcat_tuples(et, tlo, thi, cum, w, segs,
+                                        n_levels=eps.N, interpret=interpret)
+    counts = np.asarray(c[0, : eps.M], dtype=np.int64)
+    bad = np.asarray(f[0, : eps.M] != 0)
+    return counts, bad
+
+
+@functools.lru_cache(maxsize=None)
+def a1_mapc_vmapped(n_levels: int, lcap: int, interpret: bool):
+    """vmap of the segmented A1 kernel over a leading session axis (the
+    cross-session batcher's fused MapConcatenate launch)."""
+    f = functools.partial(a1_mapconcat_kernel, n_levels=n_levels, lcap=lcap,
+                          interpret=interpret)
+    return jax.jit(jax.vmap(f))
 
 
 @functools.lru_cache(maxsize=None)

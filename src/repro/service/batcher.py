@@ -32,6 +32,15 @@ masks), so the vmapped lane computation is bit-identical to the
 standalone dispatch — the service's exactness guarantee rests on that and
 is asserted by tests/test_service.py. Group sizes are padded to powers of
 two (lane 0 repeated) so jit compiles once per (kind, bucket, S-bucket).
+
+Adaptive L re-bucketing: requests are grouped *without* regard to their
+event-buffer length — at flush time each lane's event operands are padded
+to the group's max L (padded events are machine no-ops: PAD types never
+match an episode row, so per-lane results stay bit-identical to the
+standalone dispatch). Heterogeneous tenants — different window sizes,
+different ingest rates — therefore fuse into one launch instead of
+fragmenting into singleton groups keyed by L (the ROADMAP
+adaptive-shape-bucketing item).
 """
 
 from __future__ import annotations
@@ -41,10 +50,11 @@ import threading
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.count_a1 import _a1_scan_core
 from repro.core.count_a2 import _a2_scan_core
-from repro.core.events import TIME_NEG_INF
+from repro.core.events import PAD_TYPE, TIME_NEG_INF
 from repro.core.mapconcat import _map_all_segments
 from repro.core.streaming import bucket_size
 
@@ -77,6 +87,20 @@ _PAD_A2 = ((0, 0), (0, 0), (0, 1), (None, 0), (None, 0),
 _PAD_MAPC = ((None, 0), (None, 0), (0, 0), (0, 0), (0, 1), (None, 0),
              (0, 1))
 
+# event-operand spec per kind for the adaptive L re-bucketing:
+# {operand index: event axis}. Padded events are machine no-ops (type =
+# PAD_TYPE never matches an episode row; the derived successor-duplicate
+# flags are false on and before the pad tail), so padding a lane's event
+# operands to the fused group's max length is bit-safe.
+_EV_AXES = {
+    "a1": {3: 0, 4: 0},    # ev_types[L], ev_times[L]
+    "a2": {3: 0, 4: 0},
+    "mapc": {0: 1, 1: 1},  # wt[Q, L], wtt[Q, L]
+    "a1k": {3: 1},         # ev brick [3, EP]
+    "a2k": {3: 1},         # ev brick [2, EP]
+    "mapck": {5: 2},       # segment bricks [P, 5, LW]
+}
+
 
 def _pad_m(args, spec, m_to: int):
     out = []
@@ -89,6 +113,31 @@ def _pad_m(args, spec, m_to: int):
         pad[axis] = (0, m_to - a.shape[axis])
         out.append(jnp.pad(a, pad, constant_values=fill))
     return tuple(out)
+
+
+def _pad_events(kind: str, args, l_to: int):
+    """Pad a lane's event operands along the event axis to the fused
+    group's max length. Only the *types* slot needs the PAD_TYPE fill
+    (kind "a1"/"a2" operand 3, the ``wt`` half of "mapc", row 0 of the
+    kernel bricks); times/dup/τ entries of padded events are never
+    consulted — no episode row matches type -1 — so they zero-fill."""
+    args = list(args)
+    for idx, axis in _EV_AXES[kind].items():
+        a = jnp.asarray(args[idx])
+        grow = l_to - a.shape[axis]
+        if grow == 0:
+            continue
+        pad = [(0, 0)] * a.ndim
+        pad[axis] = (0, grow)
+        all_types = (kind in ("a1", "a2") and idx == 3) or \
+            (kind == "mapc" and idx == 0)
+        a = jnp.pad(a, pad, constant_values=PAD_TYPE if all_types else 0)
+        if kind in ("a1k", "a2k"):          # ev brick: types = row 0
+            a = a.at[0, l_to - grow:].set(PAD_TYPE)
+        elif kind == "mapck":               # segment brick: types = row 0
+            a = a.at[:, 0, l_to - grow:].set(PAD_TYPE)
+        args[idx] = a
+    return tuple(args)
 
 
 class _Request:
@@ -131,9 +180,11 @@ class CrossSessionBatcher:
 
     def a1_scan(self, args):
         # (etypes[M,N], tlo, thi, ev_t[L], ev_tt[L], s[M,N,C], ptr, c, ovf)
+        # — event length L deliberately absent from the key (adaptive L
+        # re-bucketing: lanes pad to the group max at flush)
         m, n = args[0].shape
         mb = bucket_size(m, 8)
-        key = ("a1", mb, n, args[3].shape[0], args[5].shape[-1])
+        key = ("a1", mb, n, args[5].shape[-1])
         return self._submit(
             _Request("a1", key, args, _PAD_A1, None, m, mb))
 
@@ -141,25 +192,25 @@ class CrossSessionBatcher:
         # (etypes[M,N], tlo, thi, ev_t[L], ev_tt[L], s[M,N], c)
         m, n = args[0].shape
         mb = bucket_size(m, 8)
-        key = ("a2", mb, n, args[3].shape[0])
+        key = ("a2", mb, n)
         return self._submit(
             _Request("a2", key, args, _PAD_A2, None, m, mb))
 
     def mapc_scan(self, args, lcap: int):
-        # (wt[Q,L], wtt, etypes[M,N], tlo, thi, tau[Q+1], w[M])
+        # (wt[Q,L], wtt, etypes[M,N], tlo, thi, tau[Q+1], w[M]) — the
+        # segment count Q stays in the key, the window length L does not
         m, n = args[2].shape
         mb = bucket_size(m, 8)
-        key = ("mapc", mb, n, args[0].shape, lcap)
+        key = ("mapc", mb, n, args[0].shape[0], lcap)
         return self._submit(
             _Request("mapc", key, args, _PAD_MAPC, lcap, m, mb))
 
     def a1_kernel_scan(self, args, n_levels: int, lcap: int,
                        interpret: bool):
         # kernel-layout operands: (et[NP,MP], tlo, thi, ev[3,EP],
-        # s[NP,LCAP,MP], po, cnt[8,MP], ovf) — lanes fuse only on identical
-        # shapes, so no padding/slicing is needed (spec/m unused)
-        key = ("a1k", n_levels, lcap, interpret, tuple(args[0].shape),
-               tuple(args[3].shape))
+        # s[NP,LCAP,MP], po, cnt[8,MP], ovf) — lanes fuse on identical
+        # episode/state shapes; the event brick pads to the group max EP
+        key = ("a1k", n_levels, lcap, interpret, tuple(args[0].shape))
         return self._submit(_Request("a1k", key, args, None,
                                      (n_levels, lcap, interpret), None,
                                      None))
@@ -167,10 +218,20 @@ class CrossSessionBatcher:
     def a2_kernel_scan(self, args, n_levels: int, interpret: bool):
         # kernel-layout operands: (et[NP,MP], tlo, thi, ev[2,EP], s[NP,MP],
         # cnt[8,MP])
-        key = ("a2k", n_levels, interpret, tuple(args[0].shape),
-               tuple(args[3].shape))
+        key = ("a2k", n_levels, interpret, tuple(args[0].shape))
         return self._submit(_Request("a2k", key, args, None,
                                      (n_levels, interpret), None, None))
+
+    def mapc_kernel_scan(self, args, n_levels: int, lcap: int,
+                         interpret: bool):
+        # segmented-kernel operands: (et[NP,MP], tlo, thi, cum[NP,MP],
+        # w[8,MP], segs[P,5,LW]) — P stays in the key, LW pads to the
+        # group max
+        key = ("mapck", n_levels, lcap, interpret, tuple(args[0].shape),
+               args[5].shape[0])
+        return self._submit(_Request("mapck", key, args, None,
+                                     (n_levels, lcap, interpret), None,
+                                     None))
 
     # --------------------------------------------------- step accounting
 
@@ -236,20 +297,33 @@ class CrossSessionBatcher:
         self.fused_requests += len(group)
         s = bucket_size(len(group), 1)
         lanes = group + [group[0]] * (s - len(group))  # pad: repeat lane 0
-        if kind in ("a1k", "a2k"):
+        # adaptive L re-bucketing: lanes with shorter event buffers pad to
+        # the group max. Every producer pads to a LANES multiple (and past
+        # one chunk, to a DEFAULT_BLOCK_E multiple — see ops.event_brick),
+        # so the group max still divides the kernels' chunked event
+        # BlockSpec evenly. np.shape: reading a length must not trigger a
+        # host→device transfer of the whole buffer.
+        ev_axes = _EV_AXES[kind]
+        l_to = max(np.shape(r.args[i])[ax] for r in group
+                   for i, ax in ev_axes.items())
+        lane_args = [_pad_events(kind, r.args, l_to) for r in lanes]
+        if kind not in ("a1k", "a2k", "mapck"):  # episode-axis pad (scans)
+            lane_args = [_pad_m(p, r.spec, r.mb)
+                         for p, r in zip(lane_args, lanes)]
+        stacked = tuple(jnp.stack([jnp.asarray(p[i]) for p in lane_args])
+                        for i in range(len(group[0].args)))
+        if kind in ("a1k", "a2k", "mapck"):
             from repro.kernels import ops as kops
-            stacked = tuple(jnp.stack([jnp.asarray(r.args[i]) for r in lanes])
-                            for i in range(len(group[0].args)))
             kops.KERNEL_CALLS[
-                "a1_state" if kind == "a1k" else "a2_state"] += len(group)
+                {"a1k": "a1_state", "a2k": "a2_state",
+                 "mapck": "a1_mapc"}[kind]] += len(group)
             if kind == "a1k":
                 out = kops.a1_state_vmapped(*group[0].static)(*stacked)
-            else:
+            elif kind == "a2k":
                 out = kops.a2_state_vmapped(*group[0].static)(*stacked)
+            else:
+                out = kops.a1_mapc_vmapped(*group[0].static)(*stacked)
             return [tuple(o[i] for o in out) for i in range(len(group))]
-        padded = [_pad_m(r.args, r.spec, r.mb) for r in lanes]
-        stacked = tuple(jnp.stack([p[i] for p in padded])
-                        for i in range(len(group[0].args)))
         if kind == "a1":
             out = _vmapped_a1()(*stacked)
         elif kind == "a2":
@@ -279,4 +353,9 @@ class CrossSessionBatcher:
             n_levels, interpret = req.static
             return kops.a2_state_call(*req.args, n_levels=n_levels,
                                       interpret=interpret)
+        if req.kind == "mapck":
+            from repro.kernels import ops as kops
+            n_levels, lcap, interpret = req.static
+            return kops.a1_mapconcat_tuples(*req.args, n_levels=n_levels,
+                                            lcap=lcap, interpret=interpret)
         return _map_all_segments(*req.args, req.static)

@@ -1,0 +1,379 @@
+"""Segmented-kernel (in-kernel MapConcatenate) equivalence suite.
+
+Interpret-mode acceptance matrix for the two-axis grid: segmented-kernel
+counts must be bit-identical to single-scan counting for every engine ×
+two-pass × segment count, including adversarial mid-tie splits and
+occurrences straddling a segment boundary at exactly τ+W (the PR 1
+stitch-zone cases), with the ``unmatched``-flag fallback preserved; the
+chunked event ``BlockSpec`` shared by the PTPE kernels must be a no-op on
+counts; and ``KERNEL_CALLS`` must prove the new kernels actually execute.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (EpisodeBatch, EventStream, StreamingCounter,
+                        StreamingMiner, count_a1, count_a1_sequential,
+                        count_a2, count_dispatch, count_two_pass,
+                        fold_pair, fold_pair_unrolled, make_segments,
+                        mapconcatenate_kernel, mine)
+from repro.core.count_a2 import count_single_slot
+from repro.core.mapconcat import _map_all_segments
+from repro.kernels import ops
+
+NUM_TYPES = 5
+
+
+@pytest.fixture(autouse=True)
+def _interpret_kernels(monkeypatch):
+    """Force the kernel dispatch policy on (interpret mode) and zero the
+    dispatch tally, so each test can assert the Pallas path executed."""
+    monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "1")
+    ops.reset_kernel_calls()
+    yield
+
+
+def tie_heavy_stream(seed, n=160):
+    rng = np.random.default_rng(seed)
+    gaps = rng.choice([0, 0, 1, 2], size=n)
+    times = (np.cumsum(gaps) + 1).astype(np.int32)
+    types = rng.integers(0, NUM_TYPES, size=n).astype(np.int32)
+    return EventStream(types, times, NUM_TYPES)
+
+
+def batch():
+    """Repeated types, zero lower bounds (tie-sensitive), heterogeneous
+    spans — the PR 1 stitch-zone batch."""
+    return EpisodeBatch(
+        np.int32([[0, 1, 2], [1, 2, 3], [2, 2, 0], [4, 0, 1]]),
+        np.int32([[1, 0], [0, 2], [0, 0], [0, 0]]),
+        np.int32([[5, 6], [4, 7], [3, 3], [6, 2]]))
+
+
+def split_by_index(stream, k):
+    n = stream.types.shape[0]
+    cuts = [0] + [n * j // k for j in range(1, k)] + [n]
+    return [EventStream(stream.types[a:b], stream.times[a:b],
+                        stream.num_types)
+            for a, b in zip(cuts[:-1], cuts[1:])]
+
+
+# ------------------------------------------------------------ fold stitch
+
+
+def test_fold_pair_unrolled_matches_fold_pair():
+    """The kernel-safe unrolled stitch is bit-identical to the gather-based
+    ``fold_pair`` — including unmatched tuples (flag set, k'=0 fallthrough
+    count)."""
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+
+        def tup():
+            vals = [jnp.asarray(rng.integers(0, 6, size=(3, 7)), jnp.int32)
+                    for _ in range(3)]
+            return tuple(vals) + (jnp.asarray(rng.random((3, 7)) < 0.2),)
+
+        left, right = tup(), tup()
+        want = fold_pair(left, right)
+        got = fold_pair_unrolled(left, right, 3)
+        for w, g in zip(want, got):
+            np.testing.assert_array_equal(np.asarray(w), np.asarray(g))
+    # fully unmatchable pair: every flag must come back set
+    big = tuple(jnp.full((2, 3), v, jnp.int32) for v in (0, 1, 50)) \
+        + (jnp.zeros((2, 3), bool),)
+    small = tuple(jnp.full((2, 3), v, jnp.int32) for v in (9, 1, 9)) \
+        + (jnp.zeros((2, 3), bool),)
+    assert np.asarray(fold_pair_unrolled(big, small, 2)[3]).all()
+
+
+# --------------------------------------------- acceptance matrix (exact)
+
+
+@pytest.mark.parametrize("num_segments", [1, 2, 4, 8])
+def test_mapc_kernel_counts_equal_single_scan(num_segments):
+    """Acceptance: in-kernel MapConcatenate == single-scan counting at
+    every segment count, on tie-heavy streams whose index splits land
+    mid-tie."""
+    eps = batch()
+    for seed in (0, 2, 5):
+        st = tie_heavy_stream(seed, n=200)
+        oracle = count_a1_sequential(st, eps)
+        ops.reset_kernel_calls()
+        got = mapconcatenate_kernel(st, eps, num_segments=num_segments)
+        np.testing.assert_array_equal(got, oracle)
+        assert ops.KERNEL_CALLS["a1_mapc"] >= 1
+
+
+@pytest.mark.parametrize("engine", ["ptpe", "mapconcatenate",
+                                    "mapconcat_kernel", "hybrid"])
+@pytest.mark.parametrize("two_pass", [True, False])
+@pytest.mark.parametrize("num_segments", [2, 8])
+def test_engine_twopass_segments_matrix(engine, two_pass, num_segments):
+    """Every engine × two-pass × segment count lands on the same counts
+    and survivor sets as the kernel-free reference."""
+    eps = batch()
+    st = tie_heavy_stream(3, n=220)
+    ref = count_two_pass(st, eps, theta=2, use_kernel=False)
+    if two_pass:
+        got = count_two_pass(st, eps, theta=2, engine=engine,
+                             num_segments=num_segments)
+        np.testing.assert_array_equal(got.counts, ref.counts)
+        np.testing.assert_array_equal(got.survived, ref.survived)
+        np.testing.assert_array_equal(got.frequent, ref.frequent)
+    else:
+        got = count_dispatch(st, eps, engine=engine,
+                             num_segments=num_segments)
+        np.testing.assert_array_equal(got,
+                                      count_a1(st, eps, use_kernel=False))
+    if engine == "mapconcat_kernel":
+        assert ops.KERNEL_CALLS["a1_mapc"] >= 1
+        if two_pass:
+            assert ops.KERNEL_CALLS["a2_mapc"] >= 1
+
+
+@pytest.mark.parametrize("num_segments", [2, 4, 8])
+def test_a2_mapc_kernel_equals_exact_a2(num_segments):
+    """Segmented pass-1: the A2 kernel count (after the unmatched
+    fallback) is *the* A2 count — Theorem 5.1's cull stays sound."""
+    eps = batch()
+    for seed in (1, 4):
+        st = tie_heavy_stream(seed, n=200)
+        want = count_a2(st, eps, use_kernel=False)
+        ops.reset_kernel_calls()
+        got = count_a2(st, eps, segments=num_segments)
+        np.testing.assert_array_equal(got, want)
+        assert ops.KERNEL_CALLS["a2_mapc"] >= 1
+
+
+def test_mapc_kernel_tuples_bit_identical_to_xla_fold():
+    """Drift guard: the kernel's fused Concatenate state equals the XLA
+    Map step's per-segment tuples folded left-to-right with ``fold_pair``
+    — same zones (``stitch_zones``), same starts (``phase_cum``), same
+    stitch."""
+    eps = batch()
+    st = tie_heavy_stream(7, n=300)
+    w = np.asarray(eps.max_span)
+    tau, wt, wtt = make_segments(st, 8, int(w.max()))
+    a, c, b, ovf = _map_all_segments(
+        jnp.asarray(wt), jnp.asarray(wtt), jnp.asarray(eps.etypes),
+        jnp.asarray(eps.tlo), jnp.asarray(eps.thi), jnp.asarray(tau),
+        jnp.asarray(w, jnp.int32), 4)
+    carry = (a[0], c[0], b[0], jnp.zeros(a[0].shape, bool))
+    for i in range(1, a.shape[0]):
+        carry = fold_pair(carry, (a[i], c[i], b[i],
+                                  jnp.zeros(a[i].shape, bool)))
+    ka, kc, kb, kf, kovf = ops.a1_mapconcat_tuples(
+        *ops.mapconcat_layout(eps, inclusive_lower=False),
+        ops.segment_bricks(wt, wtt, tau),
+        n_levels=eps.N, lcap=4, interpret=True)
+    k, m = eps.N, eps.M
+    for kern, ref in zip((ka, kc, kb), carry[:3]):
+        np.testing.assert_array_equal(np.asarray(kern)[:k, :m],
+                                      np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(kf)[:k, :m] != 0,
+                                  np.asarray(carry[3]))
+    np.testing.assert_array_equal(np.asarray(kovf)[0, :m] != 0,
+                                  np.asarray(ovf.any(axis=(0, 1))))
+
+
+# ------------------------------------------------- adversarial boundaries
+
+
+def test_boundary_straddler_at_exactly_tau_plus_w():
+    """An occurrence whose first event sits exactly on a segment boundary
+    and whose completion lands exactly at τ+W (the PR 1 inclusive-zone
+    case), plus a tie group square on the boundary — the kernel stitch
+    must see both sides."""
+    eps = EpisodeBatch(np.int32([[0, 1]]), np.int32([[0]]),
+                       np.int32([[10]]))
+    # times 1..99 → num_segments=2 boundary at τ=50 (asserted below)
+    times = [1, 5, 20, 33, 47, 50, 50, 50, 60, 61, 75, 88, 99]
+    types = [2, 0, 1, 2, 3, 0, 2, 2, 1, 0, 1, 2, 3]
+    st = EventStream(np.int32(types), np.int32(times), NUM_TYPES)
+    tau, _, _ = make_segments(st, 2, 10)
+    assert int(tau[1]) == 50, "fixture drifted off the τ=50 boundary"
+    oracle = count_a1_sequential(st, eps)
+    for p in (2, 4):
+        got = mapconcatenate_kernel(st, eps, num_segments=p)
+        np.testing.assert_array_equal(got, oracle)
+    a2got = count_a2(st, eps, segments=2)
+    np.testing.assert_array_equal(a2got, count_a2(st, eps,
+                                                  use_kernel=False))
+
+
+def test_mid_tie_streaming_splits_mapc_kernel():
+    """Streaming windows that cut inside tie groups, counted on the
+    segmented-kernel residency — bit-identical to one-shot counting."""
+    eps = batch()
+    for seed in (0, 4):
+        st = tie_heavy_stream(seed, n=240)
+        oracle = count_a1_sequential(st, eps)
+        for k in (2, 3, 8):
+            ops.reset_kernel_calls()
+            ctr = StreamingCounter(eps, engine="mapconcatenate",
+                                   use_kernel=True)
+            assert ctr._mapc_kernel, \
+                "segmented-kernel residency must engage under interpret"
+            for w in split_by_index(st, k):
+                ctr.update(w)
+            np.testing.assert_array_equal(ctr.finalize(), oracle)
+            assert ops.KERNEL_CALLS["a1_mapc"] >= 1
+
+
+# -------------------------------------------------- unmatched-flag fallback
+
+
+def test_unmatched_flag_fallback_restores_exactness():
+    """lcap=1 forces live evictions through the segmented kernel's
+    per-phase lists; flagged episodes must come back via the exact
+    recount."""
+    eps = batch()
+    st = tie_heavy_stream(1, n=220)
+    oracle = count_a1_sequential(st, eps)
+    counts, bad = ops.a1_mapconcat_count(st, eps, num_segments=4, lcap=1,
+                                         force="interpret")
+    assert bad.any(), "fixture no longer forces a flagged episode"
+    got = mapconcatenate_kernel(st, eps, num_segments=4, lcap=1)
+    np.testing.assert_array_equal(got, oracle)
+
+
+def test_unmatched_flag_propagates_through_kernel_fold():
+    """A doctored left-segment τ_{p+1} row makes its ``b`` default
+    disagree with the right segment's ``a`` values, so the in-kernel fold
+    must raise the unmatched flag rather than stitch silently."""
+    eps = batch()
+    st = tie_heavy_stream(2, n=200)
+    w_max = int(np.asarray(eps.max_span).max())
+    tau, wt, wtt = make_segments(st, 2, w_max)
+    segs = ops.segment_bricks(wt, wtt, tau)
+    # segment 0 now claims a boundary no machine can complete at, while
+    # segment 1 still records its tuple against the real boundary
+    segs = segs.at[0, 4, :].set(int(tau[-1]) + 10 * w_max)
+    _, _, _, f, _ = ops.a1_mapconcat_tuples(
+        *ops.mapconcat_layout(eps, inclusive_lower=False), segs,
+        n_levels=eps.N, lcap=4, interpret=True)
+    assert (np.asarray(f)[0, : eps.M] != 0).any()
+
+
+# ------------------------------------------- chunked event streaming (PTPE)
+
+
+def test_chunked_event_blockspec_is_count_invariant():
+    """The event-axis grid chunking (fresh and state-carried wrappers
+    share it) cannot change counts: tiny chunks == one chunk == XLA
+    scan."""
+    from repro.core.count_a1 import count_a1_vectorized
+    eps = batch()
+    st = tie_heavy_stream(6, n=300)
+    et, tlo, thi = ops.episode_layout(eps, inclusive_lower=False)
+    ev = ops.event_layout(st, with_dup=True)
+    whole = ops.a1_count_kernel(et, tlo, thi, ev, n_levels=eps.N, lcap=4,
+                                block_e=0, interpret=True)
+    chunked = ops.a1_count_kernel(et, tlo, thi, ev, n_levels=eps.N, lcap=4,
+                                  block_e=128, interpret=True)
+    for wv, cv in zip(whole, chunked):
+        np.testing.assert_array_equal(np.asarray(wv), np.asarray(cv))
+    sc, so = count_a1_vectorized(st, eps, lcap=4)
+    np.testing.assert_array_equal(
+        np.asarray(chunked[0])[0, : eps.M].astype(np.int64), sc)
+    np.testing.assert_array_equal(np.asarray(chunked[1])[0, : eps.M] != 0,
+                                  so)
+
+
+def test_long_stream_event_brick_chunks_and_counts():
+    """Streams past DEFAULT_BLOCK_E pad to a chunk multiple and walk the
+    multi-step event grid — counts (and the dispatch tally) unchanged."""
+    rng = np.random.default_rng(11)
+    n = 3000
+    times = (np.cumsum(rng.choice([0, 1, 1, 2], size=n)) + 1).astype(np.int32)
+    types = rng.integers(0, NUM_TYPES, size=n).astype(np.int32)
+    st = EventStream(types, times, NUM_TYPES)
+    eps = batch()
+    ev = ops.event_layout(st, with_dup=True)
+    assert ev.shape[1] % ops.DEFAULT_BLOCK_E == 0
+    assert ev.shape[1] // ops.DEFAULT_BLOCK_E >= 2
+    ops.reset_kernel_calls()
+    kc, kovf = ops.a1_count(st, eps, lcap=4, force="interpret")
+    assert ops.KERNEL_CALLS["a1"] == 1
+    oracle = count_a1_sequential(st, eps)
+    exact = ~kovf
+    np.testing.assert_array_equal(kc[exact], oracle[exact])
+
+
+def test_hybrid_auto_selects_mapc_kernel_on_long_streams():
+    """Eq. 2 dispatcher upgrade: a sub-lane-tile batch on a long stream
+    (the paper's low-M regime, Fig. 7) auto-selects the segmented kernel;
+    a short stream keeps the classic dispatch (no kernel launch)."""
+    from repro.core.hybrid import MAPC_KERNEL_MIN_EVENTS
+    rng = np.random.default_rng(13)
+    n = MAPC_KERNEL_MIN_EVENTS + 100
+    times = np.cumsum(rng.choice([1, 1, 2], size=n)).astype(np.int32)
+    types = rng.integers(0, NUM_TYPES, size=n).astype(np.int32)
+    st = EventStream(types, times, NUM_TYPES)
+    eps = batch()
+    ops.reset_kernel_calls()
+    got = count_dispatch(st, eps, engine="hybrid")
+    assert ops.KERNEL_CALLS["a1_mapc"] >= 1
+    np.testing.assert_array_equal(got, count_a1(st, eps, use_kernel=False))
+    ops.reset_kernel_calls()
+    short = EventStream(types[:200], times[:200], NUM_TYPES)
+    count_dispatch(short, eps, engine="hybrid")
+    assert ops.KERNEL_CALLS["a1_mapc"] == 0
+
+
+# --------------------------------------------------- miner / service level
+
+
+@pytest.mark.parametrize("two_pass", [True, False])
+def test_streaming_miner_mapc_kernel_equals_one_shot(two_pass):
+    """Cumulative mining on the segmented-kernel engine ends bit-identical
+    to one-shot ``mine`` on the concatenation."""
+    from repro.data import embedded_chain_stream
+    st = embedded_chain_stream(NUM_TYPES, [1, 2, 3], (2, 6),
+                               num_occurrences=25, noise_events=200,
+                               t_max=15_000, seed=11)
+    one = mine(st, intervals=[(2, 6)], theta=10, max_level=3,
+               engine="mapconcatenate", two_pass=two_pass)
+    ops.reset_kernel_calls()
+    miner = StreamingMiner([(2, 6)], 10, max_level=3, mode="cumulative",
+                           engine="mapconcat_kernel", two_pass=two_pass)
+    wins = split_by_index(st, 3)
+    for i, w in enumerate(wins):
+        res = miner.update(w, final=i == len(wins) - 1)
+    assert len(res.frequent) == len(one.frequent)
+    for fa, fb, ca, cb in zip(res.frequent, one.frequent,
+                              res.counts, one.counts):
+        np.testing.assert_array_equal(fa.etypes, fb.etypes)
+        np.testing.assert_array_equal(ca, cb)
+    assert ops.KERNEL_CALLS["a1_mapc"] >= 1
+
+
+def test_batcher_fuses_segmented_kernel_launches():
+    """The cross-session batcher's ``mapc_kernel_scan`` seam fuses
+    same-shape segmented launches into one vmapped pallas_call —
+    per-session results identical to standalone."""
+    from repro.service import MiningService, SessionConfig
+    svc = MiningService()
+    tenants = []
+    for i in range(3):
+        cfg = SessionConfig(intervals=((0, 4),), theta=3, max_level=3,
+                            engine="mapconcatenate", history_limit=4)
+        sid = svc.create_session(f"t{i}", cfg)
+        wins = split_by_index(tie_heavy_stream(i, n=220), 3)
+        tenants.append((sid, cfg, wins))
+        for j, w in enumerate(wins):
+            svc.ingest(sid, w, final=j == len(wins) - 1)
+    ops.reset_kernel_calls()
+    svc.pump()
+    assert ops.KERNEL_CALLS["a1_mapc"] >= 1
+    assert svc.batcher.batches > 0
+    for sid, cfg, wins in tenants:
+        deltas = svc.poll(sid)
+        standalone = cfg.make_miner()
+        for j, (d, w) in enumerate(zip(deltas, wins)):
+            ref = standalone.update(w, final=j == len(wins) - 1)
+            assert len(d.result.frequent) == len(ref.frequent)
+            for ca, cb in zip(d.result.counts, ref.counts):
+                np.testing.assert_array_equal(ca, cb)

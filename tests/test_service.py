@@ -104,6 +104,36 @@ def test_batcher_actually_fuses_same_shape_sessions():
     assert svc.batcher.fused_requests >= 2 * svc.batcher.batches
 
 
+@pytest.mark.parametrize("engine", ["ptpe", "mapconcatenate"])
+def test_heterogeneous_window_tenants_fuse_and_stay_exact(engine):
+    """Adaptive L re-bucketing: tenants whose windows land in *different*
+    event-buffer buckets (128 vs 512 events) must still fuse into shared
+    vmapped dispatches — previously they fragmented into singleton groups
+    keyed by L — and each tenant's fused results must stay bit-identical
+    to a standalone miner on its own stream."""
+    svc = MiningService()
+    tenants = []
+    for i, n in enumerate((180, 900, 260)):  # ~60 / ~300 / ~87 ev/window
+        cfg = SessionConfig(intervals=((0, 4),), theta=3, max_level=3,
+                            engine=engine, history_limit=4)
+        sid = svc.create_session(f"t{i}", cfg)
+        wins = split_by_index(tie_heavy_stream(i, n=n), 3)
+        tenants.append((sid, cfg, wins))
+        for j, w in enumerate(wins):
+            svc.ingest(sid, w, final=j == len(wins) - 1)
+    svc.pump()
+    assert svc.batcher.batches > 0, \
+        "heterogeneous-L tenants no longer fuse"
+    assert svc.batcher.fused_requests >= 2 * svc.batcher.batches
+    for sid, cfg, wins in tenants:
+        deltas = svc.poll(sid)
+        standalone = cfg.make_miner()
+        for j, (d, w) in enumerate(zip(deltas, wins)):
+            ref = standalone.update(w, final=j == len(wins) - 1)
+            assert_results_equal(d.result, ref,
+                                 f"{engine} {sid} window {j}")
+
+
 # -------------------------------------------------------- bounded memory
 
 
