@@ -36,7 +36,8 @@ def main() -> None:
             seconds=min(seconds, 10)),
         "stream": lambda: streaming_throughput.run(
             seconds=min(seconds, 12),
-            segments=(1, 2) if args.quick else (1, 2, 4)),
+            segments=(1, 2) if args.quick else (1, 2, 4),
+            devices=(1, 2) if args.quick else (1, 2, 4)),
         "service": lambda: service_scale.run(
             sessions=(2, 8) if args.quick else (2, 4, 8),
             seconds=min(seconds, 8)),

@@ -32,10 +32,21 @@ mapping shortens from n to ~n/P + 2W. On CPU CI (interpret mode =
 emulation speed) the proxy is the meaningful scaling signal; on TPU the
 wall clock is.
 
+A ``--devices`` sweep benchmarks the mesh-sharded residency
+(``engine="mapconcat_sharded"``): one child process per device count
+(``XLA_FLAGS=--xla_force_host_platform_device_count=d`` must precede the
+jax import, hence subprocesses) runs the sharded streaming counter and
+reports wall clock plus the per-*device* serial-step proxy — the longest
+per-device segment-group walk, ceil(P/d) × steps-per-segment, i.e. the
+critical path the data-axis sharding divides by d while the all-gathered
+tuple fold stays O(P·N). Forced host devices share the physical CPU, so
+wall clock is the TPU-side signal and the proxy the CPU CI one, as above.
+
 Usage:
   PYTHONPATH=src python benchmarks/streaming_throughput.py \
       [--seconds 12] [--m 128] [--n 3] [--windows-ms 2000 4000 8000] \
-      [--kernel auto|interpret|off] [--segments 1 2 4 8]
+      [--kernel auto|interpret|off] [--segments 1 2 4 8] \
+      [--devices 1 2 4 8]
 """
 
 from __future__ import annotations
@@ -81,6 +92,90 @@ def serial_step_proxy(stream, eps, num_segments):
     return int(wt.shape[1]), int(wt.shape[0])
 
 
+def _sharded_child(d: int, seconds: int, m: int, n: int, windows_ms,
+                   num_segments: int = 8):
+    """Body of one ``--devices`` child (this process's XLA_FLAGS already
+    forced ``d`` host devices): sharded streaming counter per window
+    size, exactness asserted, rows printed as one JSON line."""
+    import json
+
+    try:
+        from repro.kernels import ops as kops
+    except ImportError:
+        kops = None
+
+    stream, truth = sym26_stream(seconds=seconds)
+    eps = random_candidates(m, n,
+                            include=[truth["short"][0], truth["long"][0]])
+    oracle = count_a1(stream, eps, use_kernel=False)
+    rows = []
+    for wms in windows_ms:
+        windows = list(partition_windows(stream, wms))
+        calls0 = kops.KERNEL_CALLS["a1_mapc_shard"] if kops else 0
+        final, meter, ctr = bench_carry(windows, eps, "mapconcat_sharded",
+                                        use_kernel=True,
+                                        num_segments=num_segments)
+        np.testing.assert_array_equal(
+            final, oracle,
+            err_msg=f"sharded counts diverged at {wms}ms devices={d}")
+        s = meter.summary()
+        # a capable counter may still take single-device launches on every
+        # commit (spans too short for one stitch-safe segment per device);
+        # tag the mode — and claim the d-way proxy division — only when
+        # sharded launches actually ran
+        sharded_ran = (kops is not None
+                       and kops.KERNEL_CALLS["a1_mapc_shard"] > calls0)
+        d_eff = max(ctr._shard_d, 1) if sharded_ran else 1
+        steps, p_eff = serial_step_proxy(stream, eps,
+                                         max(num_segments, d_eff))
+        per_dev = steps * -(p_eff // -d_eff)  # ceil(P/d) groups per device
+        mode = ("sharded-kernel" if sharded_ran
+                else ("kernel" if ctr._mapc_kernel else "fallback-xla"))
+        rows.append({
+            "label": f"mapcs/w{wms}/d{d}", "seconds": s["seconds"],
+            "devices": d_eff, "segments": p_eff,
+            "windows": s["windows"], "events": s["events"],
+            "ev_per_s": round(s["events_per_sec"]),
+            "steady_ev_per_s": round(s["steady_events_per_sec"]),
+            "serial_steps_per_device": per_dev,
+            "proxy_speedup_vs_1dev": round(p_eff * steps / per_dev, 3),
+            "mapc_mode": mode})
+    print(json.dumps(rows))
+
+
+def _sharded_sweep(rep, devices, seconds, m, n, windows_ms, kernel):
+    """Parent side of ``--devices``: one subprocess per device count (the
+    forced-host-device flag must precede the jax import)."""
+    import json
+    import subprocess
+
+    script = Path(__file__).resolve()
+    root = script.parent.parent
+    for d in devices:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={d}"
+        env["PYTHONPATH"] = str(root / "src")
+        if kernel == "interpret":
+            env["REPRO_KERNEL_INTERPRET"] = "1"
+        cmd = [sys.executable, str(script), "--sharded-child", str(d),
+               "--seconds", str(seconds), "--m", str(m), "--n", str(n),
+               "--windows-ms"] + [str(w) for w in windows_ms]
+        out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                             cwd=str(root))
+        if out.returncode != 0:
+            print(f"[stream-bench] devices={d} sweep failed:\n"
+                  f"{out.stderr[-2000:]}", file=sys.stderr)
+            continue
+        for row in json.loads(out.stdout.strip().splitlines()[-1]):
+            label = row.pop("label")
+            seconds_row = row.pop("seconds")
+            rep.add(label, seconds_row, **row)
+            print(f"[stream-bench] {label} ({row['mapc_mode']}): "
+                  f"{row['steady_ev_per_s']:,} ev/s steady, "
+                  f"{row['serial_steps_per_device']} serial steps/device "
+                  f"({row['proxy_speedup_vs_1dev']:.2f}x vs 1-dev)")
+
+
 def bench_restart(windows, eps):
     meter = ThroughputMeter()
     total = np.zeros(eps.M, np.int64)
@@ -93,7 +188,7 @@ def bench_restart(windows, eps):
 
 def run(seconds: int = 12, m: int = 128, n: int = 3,
         windows_ms=(2000, 4000, 8000), engine: str = "ptpe",
-        kernel: str = "auto", segments=()):
+        kernel: str = "auto", segments=(), devices=()):
     if kernel == "interpret":
         os.environ["REPRO_KERNEL_INTERPRET"] = "1"
     stream, truth = sym26_stream(seconds=seconds)
@@ -131,6 +226,10 @@ def run(seconds: int = 12, m: int = 128, n: int = 3,
                       f"({mode}): {s['steady_events_per_sec']:,.0f} ev/s "
                       f"steady, serial steps/segment {steps} "
                       f"({steps1 / steps:.2f}x vs 1-seg)")
+
+    if devices and kernel != "off":
+        # mesh-sharded sweep: one subprocess per device count
+        _sharded_sweep(rep, devices, seconds, m, n, windows_ms, kernel)
 
     for wms in windows_ms:
         windows = list(partition_windows(stream, wms))
@@ -195,10 +294,20 @@ def main():
     ap.add_argument("--segments", type=int, nargs="*", default=[],
                     help="in-kernel MapConcatenate sweep: one "
                          "segmented-kernel run per (window size, P)")
+    ap.add_argument("--devices", type=int, nargs="*", default=[],
+                    help="mesh-sharded sweep: one forced-host-device-count "
+                         "subprocess per d, sharded streaming counter per "
+                         "window size")
+    ap.add_argument("--sharded-child", type=int, default=None,
+                    help=argparse.SUPPRESS)  # internal: --devices child
     args = ap.parse_args()
+    if args.sharded_child is not None:
+        _sharded_child(args.sharded_child, args.seconds, args.m, args.n,
+                       args.windows_ms)
+        return
     run(seconds=args.seconds, m=args.m, n=args.n,
         windows_ms=args.windows_ms, engine=args.engine, kernel=args.kernel,
-        segments=tuple(args.segments))
+        segments=tuple(args.segments), devices=tuple(args.devices))
 
 
 if __name__ == "__main__":

@@ -15,9 +15,11 @@ from .episodes import EpisodeBatch
 from .events import (PAD_TYPE, TIME_NEG_INF, EventStream, count_level1,
                      type_histogram)
 from .hybrid import count_dispatch, crossover, f_of_n
-from .mapconcat import (concatenate_tree, fold_pair, fold_pair_unrolled,
-                        make_segments, mapconcatenate, mapconcatenate_kernel,
-                        phase_cum, stitch_zones)
+from .mapconcat import (concatenate_tree, data_mesh, fold_pair,
+                        fold_pair_unrolled, make_segments, mapconcatenate,
+                        mapconcatenate_kernel, mapconcatenate_sharded,
+                        mapconcatenate_sharded_kernel, phase_cum,
+                        stitch_zones)
 from .miner import MiningResult, mine, mine_partitions
 from .connectivity import ConnectivityGraph, reconstruct
 from .ref import (count_a1_sequential, count_a2_sequential,

@@ -152,7 +152,8 @@ def count_single_slot(stream: EventStream, eps: EpisodeBatch,
 
 def count_a2(stream: EventStream, eps: EpisodeBatch,
              use_kernel: bool = True, state: A2State | None = None,
-             return_state: bool = False, segments: int | None = None):
+             return_state: bool = False, segments: int | None = None,
+             sharded: bool = False):
     """Paper Algorithm 3: upper-bound counts of the relaxed episodes α'.
 
     Dispatches to the Pallas kernel path when available (TPU target;
@@ -165,11 +166,15 @@ def count_a2(stream: EventStream, eps: EpisodeBatch,
 
     ``segments`` routes the one-shot count through the segment-parallel
     kernel (``kernels.ops.a2_mapconcat_count`` — grid = episode tile × time
-    segment with the Concatenate fold fused on-chip); episodes whose tuples
-    fail to stitch are recounted by the exact single-slot scan, so the
-    result is *the* A2 count either way and Theorem 5.1's cull stays sound.
-    Ignored in stateful mode (cross-chunk carry is a single sequential
-    scan) and when the kernel dispatch declines.
+    segment with the Concatenate fold fused on-chip); with ``sharded`` the
+    segment axis additionally shards over the mesh ``data`` devices — one
+    segmented launch per device, per-device tuples all-gathered and folded
+    replicated (``a2_mapconcat_sharded_count``; single-device hosts take
+    the plain segmented launch). Episodes whose tuples fail to stitch are
+    recounted by the exact single-slot scan, so the result is *the* A2
+    count either way and Theorem 5.1's cull stays sound. Ignored in
+    stateful mode (cross-chunk carry is a single sequential scan) and when
+    the kernel dispatch declines.
     """
     relaxed = eps.relaxed()
     if state is not None or return_state:
@@ -179,8 +184,12 @@ def count_a2(stream: EventStream, eps: EpisodeBatch,
     if use_kernel and segments is not None and eps.N > 1:
         try:
             from repro.kernels import ops as kops
-            counts, bad = kops.a2_mapconcat_count(stream, relaxed,
-                                                  num_segments=segments)
+            if sharded:
+                counts, bad = kops.a2_mapconcat_sharded_count(
+                    stream, relaxed, num_segments=segments)
+            else:
+                counts, bad = kops.a2_mapconcat_count(stream, relaxed,
+                                                      num_segments=segments)
             if bad.any():
                 idx = np.nonzero(bad)[0]
                 counts = counts.copy()

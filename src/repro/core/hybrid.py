@@ -15,8 +15,10 @@ from __future__ import annotations
 import numpy as np
 
 from .count_a1 import A1State, DEFAULT_LCAP, count_a1 as _count_a1
-from .mapconcat import (mapconcatenate as _mapconcatenate,
-                        mapconcatenate_kernel as _mapconcatenate_kernel)
+from .mapconcat import (
+    mapconcatenate as _mapconcatenate,
+    mapconcatenate_kernel as _mapconcatenate_kernel,
+    mapconcatenate_sharded_kernel as _mapconcatenate_sharded_kernel)
 from .episodes import EpisodeBatch
 from .events import EventStream
 
@@ -45,6 +47,13 @@ def _mapc_kernel_available() -> bool:
         return True
     except (ImportError, NotImplementedError):
         return False
+
+
+def shard_devices() -> int:
+    """Power-of-two device count the segment axis can shard over (1 on a
+    single-device host — the sharded mapping then stands down)."""
+    from .mapconcat import shard_device_count
+    return shard_device_count()
 
 
 def parallel_units() -> int:
@@ -78,10 +87,16 @@ def count_dispatch(stream: EventStream, eps: EpisodeBatch,
     ``"mapconcat_kernel"`` (the in-kernel MapConcatenate — one Pallas
     launch whose grid is episode tile × time segment with the Concatenate
     fold fused on-chip; falls back to the XLA mapping bit-identically when
-    the kernel dispatch declines), or ``"hybrid"`` (Eq. 2 dispatcher —
-    which additionally upgrades the segment-parallel side to the kernel
-    mapping on streams of >= ``MAPC_KERNEL_MIN_EVENTS`` events when
-    ``use_kernel`` is set).
+    the kernel dispatch declines), ``"mapconcat_sharded"`` (the
+    multi-device form — one segmented Pallas launch per mesh ``data``
+    device with the per-device tuples all-gathered and folded replicated;
+    degrades to the single-device kernel, the XLA shard_map Map step, or
+    plain ``mapconcatenate``, bit-identically, as devices/kernels become
+    unavailable), or ``"hybrid"`` (Eq. 2 dispatcher — which additionally
+    upgrades the segment-parallel side to the kernel mapping on streams of
+    >= ``MAPC_KERNEL_MIN_EVENTS`` events when ``use_kernel`` is set, and
+    to the *sharded* kernel mapping when the mesh has more than one
+    usable device).
 
     ``use_kernel`` and ``lcap`` are plumbed into every mapping — including
     MapConcatenate's exactness fallback — so hybrid/mapconcatenate callers
@@ -100,13 +115,17 @@ def count_dispatch(stream: EventStream, eps: EpisodeBatch,
     # validate before the stateful early-return: a bogus engine must raise,
     # not silently count via the carried ptpe path
     if engine not in ("ptpe", "mapconcatenate", "mapconcat_kernel",
-                     "hybrid"):
+                      "mapconcat_sharded", "hybrid"):
         raise ValueError(f"unknown engine {engine!r}")
     if state is not None or return_state:
         return _count_a1(stream, eps, lcap=lcap, use_kernel=use_kernel,
                          state=state, return_state=True)
     if engine == "ptpe":
         return _count_a1(stream, eps, lcap=lcap, use_kernel=use_kernel)
+    if engine == "mapconcat_sharded":
+        return _mapconcatenate_sharded_kernel(
+            stream, eps, num_segments=num_segments, lcap=lcap,
+            use_kernel=use_kernel)
     if engine == "mapconcat_kernel":
         return _mapconcatenate_kernel(stream, eps, num_segments=num_segments,
                                       lcap=lcap, use_kernel=use_kernel)
@@ -115,17 +134,22 @@ def count_dispatch(stream: EventStream, eps: EpisodeBatch,
                                lcap=lcap, use_kernel=use_kernel)
     mapc_kernel = (use_kernel and len(stream) >= MAPC_KERNEL_MIN_EVENTS
                    and _mapc_kernel_available())
+    # multi-device: each mesh device takes one segment group — throughput
+    # scales with hardware, not just segment count (ROADMAP multi-device)
+    mapc_engine = (_mapconcatenate_sharded_kernel
+                   if mapc_kernel and shard_devices() > 1
+                   else _mapconcatenate_kernel)
     if eps.M > crossover(eps.N):
         # episode-parallel regime — except when the batch cannot fill even
         # one lane tile and the stream is long: there the time axis is the
         # only parallelism on offer, the segmented kernel's home turf
         if mapc_kernel and eps.M <= MAPC_KERNEL_MAX_EPISODES:
-            return _mapconcatenate_kernel(
+            return mapc_engine(
                 stream, eps, num_segments=num_segments, lcap=lcap,
                 use_kernel=use_kernel)
         return _count_a1(stream, eps, lcap=lcap, use_kernel=use_kernel)
     if mapc_kernel:
-        return _mapconcatenate_kernel(stream, eps, num_segments=num_segments,
-                                      lcap=lcap, use_kernel=use_kernel)
+        return mapc_engine(stream, eps, num_segments=num_segments,
+                           lcap=lcap, use_kernel=use_kernel)
     return _mapconcatenate(stream, eps, num_segments=num_segments,
                            lcap=lcap, use_kernel=use_kernel)

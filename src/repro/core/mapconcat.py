@@ -24,10 +24,14 @@ reproduces the reference trajectory; we additionally track an ``unmatched``
 flag through the tree and recount flagged episodes with the single-scan
 engine, so the public API is exact even on adversarial streams.
 
-Distribution: ``mapconcat_sharded`` shard_maps the Map step over the mesh
-``data`` (= segment) axis; the (a, count, b) tuples are O(P·N) scalars, so
-the Concatenate tree runs replicated after an ``all_gather`` — the TPU
-analogue of the paper's single-kernel-launch concatenate.
+Distribution: ``mapconcatenate_sharded`` shard_maps the XLA Map step over
+the mesh ``data`` (= segment) axis; the (a, count, b) tuples are O(P·N)
+scalars, so the Concatenate tree runs replicated after an ``all_gather`` —
+the TPU analogue of the paper's single-kernel-launch concatenate.
+``mapconcatenate_sharded_kernel`` is the production form: one segmented
+*Pallas* launch per device (its contiguous segment group, in-group fold
+fused on-chip) with only the pre-stitched per-device tuples all-gathered
+for the replicated final fold (``kernels.ops.a1_mapconcat_sharded_count``).
 
 On-chip: ``mapconcatenate_kernel`` routes the whole computation into one
 Pallas launch (``kernels/a1_count.a1_mapconcat_kernel``) whose grid is
@@ -273,20 +277,52 @@ def _map_all_segments(wt, wtt, etypes, tlo, thi, tau, w, lcap):
     return jax.vmap(one_segment)(wt, wtt, tau32[:-1], tau32[1:])
 
 
+def shard_device_count() -> int:
+    """Largest power-of-two device count the segment axis can shard over
+    (segment counts are powers of two, so a ragged mesh would idle
+    devices); 1 means the sharded paths stand down. Single source of
+    truth for every sharded dispatch decision — ``kernels.ops``,
+    ``hybrid.shard_devices``, and the mesh builders all delegate here so
+    the kernel path, the XLA fallback, and the launcher mesh can never
+    disagree on the device set."""
+    import jax
+    d = jax.device_count()
+    p = 1
+    while p * 2 <= d:
+        p *= 2
+    return p
+
+
+def data_mesh(num_devices: int | None = None):
+    """1-D ``("data",)`` mesh over the first ``num_devices`` (default:
+    ``shard_device_count()``) devices — the mesh the sharded
+    streaming/counting paths shard segments over
+    (``launch.mesh.make_stream_mesh`` re-exports this for launchers)."""
+    import jax
+    from jax.sharding import Mesh
+
+    if num_devices is None:
+        num_devices = shard_device_count()
+    return Mesh(np.array(jax.devices()[:num_devices]), ("data",))
+
+
 def mapconcatenate_sharded(stream: EventStream, eps: EpisodeBatch,
-                           mesh, axis: str = "data",
+                           mesh=None, axis: str = "data",
                            lcap: int = DEFAULT_LCAP,
                            use_kernel: bool = False) -> np.ndarray:
     """Distributed MapConcatenate: the Map step shard_maps over the mesh
     ``axis`` (one segment per device — the paper's one-thread-block-per-
     segment), the O(P·N) tuples are all_gather'd, and the Concatenate tree
     folds replicated. Exactness fallback as in ``mapconcatenate``;
-    ``use_kernel`` selects the fallback engine."""
+    ``use_kernel`` selects the fallback engine. ``mesh=None`` builds the
+    default power-of-two ``data`` mesh (``data_mesh``)."""
     import jax
     from jax.sharding import PartitionSpec as P
 
     if eps.N == 1:
         return count_level1(stream, eps.etypes[:, 0])
+    if mesh is None:
+        mesh = data_mesh()
     p = mesh.shape[axis]
     w = eps.max_span
     w_max = int(w.max())
@@ -353,6 +389,53 @@ def mapconcatenate(stream: EventStream, eps: EpisodeBatch,
     count, bad = concatenate_tree(a, c, b, flag0)
     count = np.asarray(count, np.int64)
     bad = np.asarray(bad) | np.asarray(ovf.any(axis=(0, 1)))
+    if bad.any():
+        idx = np.nonzero(bad)[0]
+        count = count.copy()
+        count[idx] = _count_a1_exact(stream, eps.select(idx), lcap=lcap,
+                                     use_kernel=use_kernel)
+    return count
+
+
+def mapconcatenate_sharded_kernel(stream: EventStream, eps: EpisodeBatch,
+                                  num_segments: int = 8,
+                                  lcap: int = DEFAULT_LCAP,
+                                  use_kernel: bool = True,
+                                  num_devices: int | None = None
+                                  ) -> np.ndarray:
+    """Mesh-sharded in-kernel MapConcatenate — the cross-device half of
+    the paper's mapping: the committed span is cut into one contiguous
+    segment group per mesh ``data`` device, each device runs ONE segmented
+    Pallas launch (grid = episode tile × local segments, in-group
+    Concatenate fused on-chip — the same ``a1_mapconcat_kernel`` brick the
+    single-device path uses), the O(P·N) per-device (a, count, b) tuples
+    are all-gathered, and the final stitch folds replicated
+    (``fold_pair`` is associative across arbitrary cut points, which is
+    what makes the device boundaries invisible in the counts).
+
+    Exactness containment is identical to ``mapconcatenate``: unmatched
+    stitches and possibly-live evictions are recounted by the exact
+    single-scan engine. Degrades gracefully — kernel dispatch declined
+    (CPU without interpret mode) falls to the XLA shard_map Map step when
+    a multi-device mesh exists and to plain ``mapconcatenate`` otherwise;
+    fewer than two usable devices (or a stream too short to give every
+    device a stitch-safe segment) falls to the single-device kernel. Same
+    counts on every path.
+    """
+    if eps.N == 1:
+        return count_level1(stream, eps.etypes[:, 0])
+    try:
+        from repro.kernels import ops as kops
+        count, bad = kops.a1_mapconcat_sharded_count(
+            stream, eps, num_segments=num_segments, lcap=lcap,
+            num_devices=num_devices)
+    except (ImportError, NotImplementedError):
+        d = shard_device_count() if num_devices is None else num_devices
+        if d >= 2:
+            return mapconcatenate_sharded(stream, eps, mesh=data_mesh(d),
+                                          lcap=lcap, use_kernel=use_kernel)
+        return mapconcatenate(stream, eps, num_segments=num_segments,
+                              lcap=lcap, use_kernel=use_kernel)
     if bad.any():
         idx = np.nonzero(bad)[0]
         count = count.copy()

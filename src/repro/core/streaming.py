@@ -32,7 +32,20 @@ concatenated stream**:
       (``kernels.a1_count.a1_mapconcat_kernel``) — whose pre-stitched
       tuple folds onto the carry; the per-launch segment count is still
       chosen from the committed span vs ``W``. ``engine="mapconcat_kernel"``
-      is accepted as an alias that forces this path's selection.
+      is accepted as an alias that forces this path's selection. On a
+      multi-device host the commit additionally shards over the mesh
+      ``data`` axis: each device runs one segmented launch on its
+      contiguous segment group and the per-device tuples are all-gathered
+      and folded replicated (``kernels.ops.a1_mapconcat_sharded_tuples``),
+      with the per-commit segment count chosen device-count-aware (at
+      least one stitch-safe segment per device when the span allows;
+      commits too short to shard take the single-device launch,
+      bit-identically). ``engine="mapconcat_sharded"`` is the alias that
+      forces the segment-parallel engine with this residency preferred.
+      ``state_dict`` stays in the device-count-independent canonical
+      layout either way — a checkpoint written under sharded residency on
+      an 8-device mesh restores onto a single-device counter (and vice
+      versa) with identical subsequent counts.
     * ``"hybrid"``      — Eq. 2 dispatcher applied once at construction.
 
     Exactness containment is inherited from the one-shot engines: bounded
@@ -261,8 +274,10 @@ class StreamingCounter:
                  use_kernel: bool = True, keep_history: bool = True,
                  min_bucket: int = 128, executor=None,
                  checkpoint_interval: int | None = None):
-        if engine == "mapconcat_kernel":
-            # alias: the segment-parallel engine with the Pallas path forced
+        if engine in ("mapconcat_kernel", "mapconcat_sharded"):
+            # aliases: the segment-parallel engine with the Pallas path
+            # forced (sharded residency engages on its own whenever the
+            # mesh has more than one usable device)
             engine, use_kernel = "mapconcatenate", True
         if engine not in ("ptpe", "mapconcatenate", "hybrid"):
             raise ValueError(f"unknown engine {engine!r}")
@@ -279,6 +294,7 @@ class StreamingCounter:
         self.bounded = checkpoint_interval is not None
         self._kernel = False  # carried-Pallas path (resolved per engine)
         self._mapc_kernel = False  # segmented-Pallas path (mapconcatenate)
+        self._shard_d = 1   # mesh data-axis width the commits shard over
         # exact cum counts per window (bounded mode caps the tail retained)
         self.snapshots = (collections.deque(maxlen=8) if self.bounded
                           else [])
@@ -359,7 +375,11 @@ class StreamingCounter:
         an XLA Map step plus a host-side per-segment fold loop. The
         episode/phase bricks are packed once here; the segment count per
         launch is still chosen from the committed span vs W (see
-        ``_dispatch_mapc``)."""
+        ``_dispatch_mapc``). On a multi-device host the commits
+        additionally shard: one segmented launch per mesh ``data`` device
+        (its contiguous segment group), per-device tuples all-gathered and
+        folded replicated — the residency itself is host-local state, so
+        checkpoints stay portable across device counts."""
         try:
             from repro.kernels import ops as kops
             self._interp = kops.kernel_mode()
@@ -367,6 +387,7 @@ class StreamingCounter:
             return
         self._kops = kops
         self._mapc_kernel = True
+        self._shard_d = kops.shard_device_count()
         (self._ket, self._ktlo, self._kthi, self._kcum,
          self._kw) = kops.mapconcat_layout(self.eps, inclusive_lower=False)
 
@@ -505,8 +526,14 @@ class StreamingCounter:
             if tau_next - self._tau_c <= w:
                 return
         span = tau_next - self._tau_c
+        # device-count-aware segment count: with a sharded residency the
+        # commit wants at least one stitch-safe (> W) segment per mesh
+        # device, so the limit grows to cover the data axis; spans too
+        # short to reach one-segment-per-device keep q < d and take the
+        # single-device launch below (same counts either way)
+        q_limit = max(self.num_segments, self._shard_d)
         q = 1
-        while q * 2 <= self.num_segments and span // (q * 2) > w:
+        while q * 2 <= q_limit and span // (q * 2) > w:
             q *= 2
         tau = np.round(np.linspace(self._tau_c, tau_next,
                                    q + 1)).astype(np.int64)
@@ -521,11 +548,25 @@ class StreamingCounter:
             wtt[i, : hi[i] - lo[i]] = self._buf_tt[lo[i]: hi[i]]
         if self._mapc_kernel:
             # one segmented launch: Map + on-chip fold over this commit's
-            # q segments; its pre-stitched tuple folds onto the carry
+            # q segments; its pre-stitched tuple folds onto the carry. On
+            # a multi-device mesh (and q covering every device) the launch
+            # shards — one contiguous segment group per device, tuples
+            # all-gathered and folded replicated.
             segs = self._kops.segment_bricks(wt, wtt, tau, length=lw)
             kargs = (self._ket, self._ktlo, self._kthi, self._kcum,
                      self._kw, segs)
-            if self.executor is not None:
+            if self._shard_d > 1 and q >= self._shard_d:
+                if self.executor is not None:
+                    a, c, b, f, ovf = self.executor.mapc_sharded_scan(
+                        kargs, self.eps.N, self.lcap, self._interp,
+                        self._shard_d)
+                else:
+                    a, c, b, f, ovf = \
+                        self._kops.a1_mapconcat_sharded_tuples(
+                            *kargs, n_levels=self.eps.N, lcap=self.lcap,
+                            interpret=self._interp,
+                            num_devices=self._shard_d)
+            elif self.executor is not None:
                 a, c, b, f, ovf = self.executor.mapc_kernel_scan(
                     kargs, self.eps.N, self.lcap, self._interp)
             else:

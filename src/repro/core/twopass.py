@@ -53,8 +53,14 @@ def count_two_pass(stream: EventStream, eps: EpisodeBatch, theta: int,
     """Algorithm 4. ``engine`` picks the pass-2 mapping: "ptpe",
     "mapconcatenate", "mapconcat_kernel" (the in-kernel segment-parallel
     mapping — with it, the pass-1 A2 cull also runs its segmented kernel,
-    so *both* passes use the paper's two-axis grid), or "hybrid" (Eq. 2
-    dispatcher). ``num_segments`` feeds the segment-parallel mappings.
+    so *both* passes use the paper's two-axis grid), "mapconcat_sharded"
+    (the multi-device form: BOTH passes shard their segmented launches
+    over the mesh ``data`` axis — pass 1's A2 cull via
+    ``a2_mapconcat_sharded_count``, pass 2's exact A1 via
+    ``mapconcatenate_sharded_kernel`` — degrading bit-identically to the
+    single-device mappings when devices/kernels are unavailable), or
+    "hybrid" (Eq. 2 dispatcher). ``num_segments`` feeds the
+    segment-parallel mappings.
 
     Stateful mode (``state``/``return_state``) returns
     ``(TwoPassResult, TwoPassState)`` where counts are cumulative over
@@ -85,9 +91,10 @@ def count_two_pass(stream: EventStream, eps: EpisodeBatch, theta: int,
             a2_counts=a2,
             eliminated_frac=float(1.0 - survived.mean()) if eps.M else 0.0)
         return res, TwoPassState(a2=a2_new, a1=a1_new)
+    segmented = engine in ("mapconcat_kernel", "mapconcat_sharded")
     a2 = _count_a2(stream, eps, use_kernel=use_kernel,
-                   segments=(num_segments if engine == "mapconcat_kernel"
-                             else None))
+                   segments=(num_segments if segmented else None),
+                   sharded=engine == "mapconcat_sharded")
     survived = a2 >= theta
     counts = a2.copy()
     if survived.any():

@@ -31,7 +31,9 @@ Dispatch policy:
     back to the XLA-scan engine, which is the fast CPU path.
 
 ``KERNEL_CALLS`` tallies host-side kernel dispatches per kind ("a1", "a2",
-"a1_state", "a2_state", "a1_mapc", "a2_mapc") — the interpret-mode
+"a1_state", "a2_state", "a1_mapc", "a2_mapc", and the per-device
+"a1_mapc_shard"/"a2_mapc_shard" of the mesh-sharded MapConcatenate
+dispatch) — the interpret-mode
 instrumentation tests use it to assert the Pallas path actually executed
 (the bug this module's stateful API fixes was exactly a silent bypass that
 no test could see).
@@ -53,7 +55,8 @@ from repro.core.episodes import EpisodeBatch
 from repro.core.events import (PAD_TYPE, TIME_NEG_INF, EventStream,
                                count_level1)
 
-from repro.core.mapconcat import make_segments, phase_cum
+from repro.core.mapconcat import (data_mesh, make_segments, phase_cum,
+                                  shard_device_count)
 
 from .a1_count import (a1_count_kernel, a1_count_state_kernel,
                        a1_mapconcat_kernel)
@@ -384,6 +387,196 @@ def a2_mapconcat_count(stream: EventStream, eps: EpisodeBatch,
     counts = np.asarray(c[0, : eps.M], dtype=np.int64)
     bad = np.asarray(f[0, : eps.M] != 0)
     return counts, bad
+
+
+# --------------------------------------------------------------------------
+# Multi-device (mesh-sharded) MapConcatenate dispatch
+# --------------------------------------------------------------------------
+
+
+# shard_device_count is re-exported from core.mapconcat (the single
+# source of truth for the sharded dispatch's device-set policy).
+
+
+@functools.lru_cache(maxsize=None)
+def _stream_mesh(d: int):
+    """Cached 1-D ``("data",)`` mesh over the first ``d`` devices
+    (``core.mapconcat.data_mesh`` — same builder the XLA fallback and
+    ``launch.mesh.make_stream_mesh`` use)."""
+    return data_mesh(d)
+
+
+@functools.lru_cache(maxsize=None)
+def _mapc_sharded_fn(kind: str, n_levels: int, lcap: int, interpret: bool,
+                     d: int, lanes: bool):
+    """Build (and cache) the sharded segmented launch: a ``shard_map`` over
+    the mesh ``data`` axis where each device runs ONE segmented Pallas
+    launch on its contiguous segment group (grid = episode tile × local
+    segments, in-group Concatenate fused on-chip), then all-gathers the
+    O(P·N) per-device (a, count, b, f) tuples and folds them replicated —
+    the cross-device half of the paper's MapConcatenate (§5.2.2), sound
+    because the tuple fold is associative across arbitrary cut points.
+
+    ``lanes`` adds a leading session axis (the cross-session batcher's
+    fused variant): the per-device kernel is vmapped over lanes while the
+    segment axis shards over devices. Returns a jitted callable with the
+    same (a, c, b, f, ovf) output contract as ``a1_mapconcat_kernel``.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.mapconcat import fold_pair
+
+    mesh = _stream_mesh(d)
+    if kind == "a1":
+        base = functools.partial(a1_mapconcat_kernel, n_levels=n_levels,
+                                 lcap=lcap, interpret=interpret)
+    else:
+        base = functools.partial(a2_mapconcat_kernel, n_levels=n_levels,
+                                 interpret=interpret)
+    call = jax.vmap(base) if lanes else base
+    k = n_levels
+
+    def dev_fn(et, tlo, thi, cum, w, segs):
+        # one kernel launch over this device's P/d-segment group
+        a, c, b, f, ovf = call(et, tlo, thi, cum, w, segs)
+        tup = jnp.stack([a, c, b, f], axis=-3)     # [..., 4, NP, M]
+        g = jax.lax.all_gather(tup, "data")        # [d, ..., 4, NP, M]
+        og = jax.lax.all_gather(ovf, "data")       # [d, ..., 8, M]
+
+        def tup_at(i):
+            s = g[i]
+            return (s[..., 0, :k, :], s[..., 1, :k, :],
+                    s[..., 2, :k, :], s[..., 3, :k, :] != 0)
+
+        # replicated left fold across the device axis (Fig. 6; d is small
+        # and static, so the unrolled loop is one fused XLA computation)
+        carry = tup_at(0)
+        for i in range(1, d):
+            carry = fold_pair(carry, tup_at(i))
+        np_ = a.shape[-2]
+
+        def pad_rows(x):
+            x = x.astype(jnp.int32)
+            if np_ == k:
+                return x
+            zshape = x.shape[:-2] + (np_ - k, x.shape[-1])
+            return jnp.concatenate([x, jnp.zeros(zshape, jnp.int32)],
+                                   axis=-2)
+
+        a2_, c2_, b2_, f2_ = (pad_rows(x) for x in carry)
+        return a2_, c2_, b2_, f2_, og.max(axis=0)
+
+    seg_spec = P(None, "data") if lanes else P("data")
+    in_specs = (P(), P(), P(), P(), P(), seg_spec)
+    return jax.jit(shard_map(dev_fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=(P(),) * 5, check_rep=False))
+
+
+def a1_mapconcat_sharded_tuples(et, tlo, thi, cum, w, segs, *,
+                                n_levels: int, lcap: int, interpret: bool,
+                                num_devices: int):
+    """One mesh-sharded segmented A1 launch (instrumented): ``segs``'s
+    leading segment axis must be divisible by ``num_devices``. Same output
+    contract as ``a1_mapconcat_tuples`` — the stitched (a, c, b, f) bricks
+    plus the ovf rows OR'd over devices."""
+    KERNEL_CALLS["a1_mapc_shard"] += num_devices
+    fn = _mapc_sharded_fn("a1", n_levels, lcap, interpret, num_devices,
+                          lanes=False)
+    return fn(et, tlo, thi, cum, w, segs)
+
+
+def a2_mapconcat_sharded_tuples(et, tlo, thi, cum, w, segs, *,
+                                n_levels: int, interpret: bool,
+                                num_devices: int):
+    """Single-slot analogue of ``a1_mapconcat_sharded_tuples``."""
+    KERNEL_CALLS["a2_mapc_shard"] += num_devices
+    fn = _mapc_sharded_fn("a2", n_levels, 0, interpret, num_devices,
+                          lanes=False)
+    return fn(et, tlo, thi, cum, w, segs)
+
+
+def _sharded_segments(stream: EventStream, eps: EpisodeBatch,
+                      num_segments: int, d: int):
+    """Segment the stream for a d-device launch: at least one segment per
+    device, total divisible by d. Returns (tau, wt, wtt) or None when the
+    stream is too short to give every device a stitch-safe (> W) segment —
+    the caller then takes the single-device path."""
+    w_max = int(np.asarray(eps.max_span).max())
+    tau, wt, wtt = make_segments(stream, max(num_segments, d), w_max)
+    p = wt.shape[0]
+    if p < d or p % d:
+        return None
+    return tau, wt, wtt
+
+
+def a1_mapconcat_sharded_count(stream: EventStream, eps: EpisodeBatch,
+                               num_segments: int = 8,
+                               lcap: int = DEFAULT_LCAP,
+                               num_devices: int | None = None,
+                               force: str | None = None):
+    """Mesh-sharded MapConcatenate: one segmented kernel launch per device
+    with the per-device tuples all-gathered and folded replicated. Returns
+    (counts int64[M], bad bool[M]) exactly like ``a1_mapconcat_count``;
+    delegates to the single-device launch when fewer than two devices are
+    usable or the stream is too short to shard stitch-safely."""
+    interpret = _mode(force)
+    if eps.N == 1:
+        return (count_level1(stream, eps.etypes[:, 0]),
+                np.zeros(eps.M, dtype=bool))
+    d = shard_device_count() if num_devices is None else num_devices
+    made = (_sharded_segments(stream, eps, num_segments, d)
+            if d >= 2 and len(stream) else None)
+    if made is None:
+        return a1_mapconcat_count(stream, eps, num_segments=num_segments,
+                                  lcap=lcap, force=force)
+    tau, wt, wtt = made
+    et, tlo, thi, cum, w = mapconcat_layout(eps, inclusive_lower=False)
+    segs = segment_bricks(wt, wtt, tau)
+    _, c, _, f, ovf = a1_mapconcat_sharded_tuples(
+        et, tlo, thi, cum, w, segs, n_levels=eps.N, lcap=lcap,
+        interpret=interpret, num_devices=d)
+    counts = np.asarray(c[0, : eps.M], dtype=np.int64)
+    bad = np.asarray((f[0, : eps.M] != 0) | (ovf[0, : eps.M] != 0))
+    return counts, bad
+
+
+def a2_mapconcat_sharded_count(stream: EventStream, eps: EpisodeBatch,
+                               num_segments: int = 8,
+                               num_devices: int | None = None,
+                               force: str | None = None):
+    """Mesh-sharded segmented A2 counting (relaxed batch, inclusive-lower
+    strengthening) — see ``a2_mapconcat_count`` for the contract."""
+    interpret = _mode(force)
+    if eps.N == 1:
+        return (count_level1(stream, eps.etypes[:, 0]),
+                np.zeros(eps.M, dtype=bool))
+    d = shard_device_count() if num_devices is None else num_devices
+    made = (_sharded_segments(stream, eps, num_segments, d)
+            if d >= 2 and len(stream) else None)
+    if made is None:
+        return a2_mapconcat_count(stream, eps, num_segments=num_segments,
+                                  force=force)
+    tau, wt, wtt = made
+    et, tlo, thi, cum, w = mapconcat_layout(eps, inclusive_lower=True)
+    segs = segment_bricks(wt, wtt, tau)
+    _, c, _, f, _ = a2_mapconcat_sharded_tuples(
+        et, tlo, thi, cum, w, segs, n_levels=eps.N, interpret=interpret,
+        num_devices=d)
+    counts = np.asarray(c[0, : eps.M], dtype=np.int64)
+    bad = np.asarray(f[0, : eps.M] != 0)
+    return counts, bad
+
+
+def a1_mapc_sharded_vmapped(n_levels: int, lcap: int, interpret: bool,
+                            num_devices: int):
+    """Fused-lane variant of the sharded segmented launch: the per-device
+    kernel is vmapped over a leading session axis while the segment axis
+    shards over the mesh — the cross-session batcher's multi-device
+    MapConcatenate seam. Operands carry a leading lane axis; ``segs`` is
+    [S, P, 5, LW] with P divisible by ``num_devices``."""
+    return _mapc_sharded_fn("a1", n_levels, lcap, interpret, num_devices,
+                            lanes=True)
 
 
 @functools.lru_cache(maxsize=None)

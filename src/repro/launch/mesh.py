@@ -27,3 +27,13 @@ def make_host_mesh(model_parallel: int = 1):
     assert n % model_parallel == 0
     return jax.make_mesh((n // model_parallel, model_parallel),
                          ("data", "model"))
+
+
+def make_stream_mesh(num_devices: int | None = None):
+    """1-D ``("data",)`` mesh for the sharded streaming/MapConcatenate
+    paths: one contiguous segment group per device, power-of-two device
+    count (segment counts are powers of two — a ragged mesh would idle
+    devices). Delegates to ``core.mapconcat.data_mesh`` so launchers and
+    the counting engines agree on the device set."""
+    from repro.core.mapconcat import data_mesh
+    return data_mesh(num_devices)

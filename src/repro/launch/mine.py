@@ -60,7 +60,8 @@ def main():
     ap.add_argument("--interval", type=int, nargs=2, default=(5, 10),
                     metavar=("TLO", "THI"))
     ap.add_argument("--engine", default="hybrid",
-                    choices=["hybrid", "ptpe", "mapconcatenate", "mapconcat_kernel"])
+                    choices=["hybrid", "ptpe", "mapconcatenate", "mapconcat_kernel",
+                             "mapconcat_sharded"])
     ap.add_argument("--seed", type=int, default=0)
     mode = ap.add_mutually_exclusive_group()
     mode.add_argument("--stream", action="store_true", default=True,

@@ -42,7 +42,8 @@ def main():
     ap.add_argument("--interval", type=int, nargs=2, default=(5, 10),
                     metavar=("TLO", "THI"))
     ap.add_argument("--engine", default="hybrid",
-                    choices=["hybrid", "ptpe", "mapconcatenate", "mapconcat_kernel"])
+                    choices=["hybrid", "ptpe", "mapconcatenate", "mapconcat_kernel",
+                             "mapconcat_sharded"])
     ap.add_argument("--theta-mode", default="window",
                     choices=["window", "cumulative"])
     ap.add_argument("--history-limit", type=int, default=8,

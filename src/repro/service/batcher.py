@@ -27,6 +27,12 @@ lowers the mapped session axis onto the grid, so the whole fleet's
 machines advance in a single kernel launch). Lane results come back in
 kernel layout — the counters keep their state resident there.
 
+The multi-device MapConcatenate rides it too: ``mapc_sharded_scan``
+fuses same-shape tenants' sharded commits into one launch that vmaps the
+segmented kernel over the lane (session) axis *inside* the shard_map —
+devices split the segment axis while lanes fill each device's grid
+(``kernels.ops.a1_mapc_sharded_vmapped``).
+
 Every scan in this engine is integer-only (i32 compares/adds, bool
 masks), so the vmapped lane computation is bit-identical to the
 standalone dispatch — the service's exactness guarantee rests on that and
@@ -40,7 +46,10 @@ match an episode row, so per-lane results stay bit-identical to the
 standalone dispatch). Heterogeneous tenants — different window sizes,
 different ingest rates — therefore fuse into one launch instead of
 fragmenting into singleton groups keyed by L (the ROADMAP
-adaptive-shape-bucketing item).
+adaptive-shape-bucketing item). The guardrail on the other side is
+``max_pad_ratio``: a group whose lanes' event lengths spread beyond that
+factor is split before flushing (``_split_oversized``), so one tenant's
+giant windows cap — rather than multiply — the fleet's pad waste.
 """
 
 from __future__ import annotations
@@ -99,6 +108,7 @@ _EV_AXES = {
     "a1k": {3: 1},         # ev brick [3, EP]
     "a2k": {3: 1},         # ev brick [2, EP]
     "mapck": {5: 2},       # segment bricks [P, 5, LW]
+    "mapcs": {5: 2},       # sharded segment bricks [P, 5, LW]
 }
 
 
@@ -134,7 +144,7 @@ def _pad_events(kind: str, args, l_to: int):
         a = jnp.pad(a, pad, constant_values=PAD_TYPE if all_types else 0)
         if kind in ("a1k", "a2k"):          # ev brick: types = row 0
             a = a.at[0, l_to - grow:].set(PAD_TYPE)
-        elif kind == "mapck":               # segment brick: types = row 0
+        elif kind in ("mapck", "mapcs"):    # segment brick: types = row 0
             a = a.at[:, 0, l_to - grow:].set(PAD_TYPE)
         args[idx] = a
     return tuple(args)
@@ -169,12 +179,18 @@ class CrossSessionBatcher:
     shares jit caches with standalone runs.
     """
 
-    def __init__(self):
+    def __init__(self, max_pad_ratio: float = 4.0):
         self._lock = threading.Lock()
         self._pending: list[_Request] = []
         self._inflight = 0
         self.batches = 0        # flushes that actually fused >1 request
         self.fused_requests = 0
+        self.split_groups = 0   # oversized groups split to cap pad waste
+        # adaptive-L guardrail: a lane may be padded to at most this
+        # multiple of its own event-buffer length inside a fused group;
+        # beyond it the group splits (one tenant's giant windows must not
+        # make the whole fleet's lanes pay giant pads). None disables.
+        self.max_pad_ratio = max_pad_ratio
 
     # ------------------------------------------------------------ seams
 
@@ -233,6 +249,19 @@ class CrossSessionBatcher:
                                      (n_levels, lcap, interpret), None,
                                      None))
 
+    def mapc_sharded_scan(self, args, n_levels: int, lcap: int,
+                          interpret: bool, num_devices: int):
+        # mesh-sharded segmented launch: same operands as mapc_kernel_scan
+        # with the segment axis sharded over ``num_devices`` mesh devices
+        # at dispatch. Fused groups vmap over the lane (session) axis
+        # inside the shard_map, so the whole fleet's commits run as one
+        # per-device launch; P and the device count stay in the key.
+        key = ("mapcs", n_levels, lcap, interpret, tuple(args[0].shape),
+               args[5].shape[0], num_devices)
+        return self._submit(_Request("mapcs", key, args, None,
+                                     (n_levels, lcap, interpret,
+                                      num_devices), None, None))
+
     # --------------------------------------------------- step accounting
 
     def begin_step(self) -> None:
@@ -269,16 +298,49 @@ class CrossSessionBatcher:
         groups: dict[tuple, list[_Request]] = {}
         for r in pending:
             groups.setdefault(r.key, []).append(r)
-        for group in groups.values():
-            try:
-                results = self._run_group(group)
-                for r, out in zip(group, results):
-                    r.result = out
-            except Exception as e:  # surface in every parked thread
-                for r in group:
-                    r.error = e
+        for whole in groups.values():
+            for group in self._split_oversized(whole):
+                self._flush_group(group)
+
+    def _flush_group(self, group: list[_Request]) -> None:
+        try:
+            results = self._run_group(group)
+            for r, out in zip(group, results):
+                r.result = out
+        except Exception as e:  # surface in every parked thread
             for r in group:
-                r.event.set()
+                r.error = e
+        for r in group:
+            r.event.set()
+
+    def _split_oversized(self, group: list[_Request]):
+        """Cap the adaptive-L pad waste: within one fused group every
+        lane's event operands pad to the group max, so a single tenant
+        with huge windows would make every small lane pay
+        ``max_L / own_L`` wasted machine steps. Sort by event length and
+        cut wherever a lane would exceed ``max_pad_ratio`` × the smallest
+        length of its (sub)group — each side still fuses (lengths are
+        power-of-two buckets, so splits are rare and stable)."""
+        if (self.max_pad_ratio is None or len(group) < 2
+                or group[0].kind not in _EV_AXES):
+            return [group]
+        ev_axes = _EV_AXES[group[0].kind]
+
+        def ev_len(r):
+            return max(np.shape(r.args[i])[ax] for i, ax in ev_axes.items())
+
+        order = sorted(group, key=ev_len)
+        subs, cur, lo = [], [order[0]], ev_len(order[0])
+        for r in order[1:]:
+            if ev_len(r) > lo * self.max_pad_ratio:
+                subs.append(cur)
+                cur, lo = [r], ev_len(r)
+            else:
+                cur.append(r)
+        subs.append(cur)
+        if len(subs) > 1:
+            self.split_groups += len(subs) - 1
+        return subs
 
     @staticmethod
     def _slice(req: _Request, out):
@@ -307,13 +369,19 @@ class CrossSessionBatcher:
         l_to = max(np.shape(r.args[i])[ax] for r in group
                    for i, ax in ev_axes.items())
         lane_args = [_pad_events(kind, r.args, l_to) for r in lanes]
-        if kind not in ("a1k", "a2k", "mapck"):  # episode-axis pad (scans)
+        if kind not in ("a1k", "a2k", "mapck", "mapcs"):  # episode-axis pad
             lane_args = [_pad_m(p, r.spec, r.mb)
                          for p, r in zip(lane_args, lanes)]
         stacked = tuple(jnp.stack([jnp.asarray(p[i]) for p in lane_args])
                         for i in range(len(group[0].args)))
-        if kind in ("a1k", "a2k", "mapck"):
+        if kind in ("a1k", "a2k", "mapck", "mapcs"):
             from repro.kernels import ops as kops
+            if kind == "mapcs":
+                d = group[0].static[3]
+                kops.KERNEL_CALLS["a1_mapc_shard"] += len(group) * d
+                out = kops.a1_mapc_sharded_vmapped(
+                    *group[0].static)(*stacked)
+                return [tuple(o[i] for o in out) for i in range(len(group))]
             kops.KERNEL_CALLS[
                 {"a1k": "a1_state", "a2k": "a2_state",
                  "mapck": "a1_mapc"}[kind]] += len(group)
@@ -358,4 +426,10 @@ class CrossSessionBatcher:
             n_levels, lcap, interpret = req.static
             return kops.a1_mapconcat_tuples(*req.args, n_levels=n_levels,
                                             lcap=lcap, interpret=interpret)
+        if req.kind == "mapcs":
+            from repro.kernels import ops as kops
+            n_levels, lcap, interpret, d = req.static
+            return kops.a1_mapconcat_sharded_tuples(
+                *req.args, n_levels=n_levels, lcap=lcap,
+                interpret=interpret, num_devices=d)
         return _map_all_segments(*req.args, req.static)

@@ -13,10 +13,12 @@ import pytest
 
 
 def _run(script: str) -> dict:
+    import pathlib
+    root = pathlib.Path(__file__).resolve().parent.parent
     env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
+    env["PYTHONPATH"] = str(root / "src")
     out = subprocess.run([sys.executable, "-c", script], env=env,
-                         capture_output=True, text=True, cwd="/root/repo")
+                         capture_output=True, text=True, cwd=str(root))
     assert out.returncode == 0, out.stderr[-3000:]
     return json.loads(out.stdout.strip().splitlines()[-1])
 

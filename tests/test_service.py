@@ -134,6 +134,70 @@ def test_heterogeneous_window_tenants_fuse_and_stay_exact(engine):
                                  f"{engine} {sid} window {j}")
 
 
+@pytest.mark.parametrize("engine", ["ptpe", "mapconcatenate"])
+def test_oversized_group_splits_and_stays_exact(engine):
+    """Pad-waste guardrail: when one tenant's windows dwarf the fleet's
+    (event buffers beyond max_pad_ratio × the smallest lane's), the fused
+    group must split instead of padding every small lane to the giant —
+    and each tenant's results must stay bit-identical to a standalone
+    miner. The small tenants still fuse with each other."""
+    svc = MiningService()
+    svc.batcher.max_pad_ratio = 4.0
+    tenants = []
+    # three ~40-event windows (128 bucket) + one ~1300-event (2048 bucket)
+    for i, n in enumerate((120, 130, 125, 4000)):
+        cfg = SessionConfig(intervals=((0, 4),), theta=3, max_level=3,
+                            engine=engine, history_limit=4)
+        sid = svc.create_session(f"t{i}", cfg)
+        wins = split_by_index(tie_heavy_stream(i, n=n), 3)
+        tenants.append((sid, cfg, wins))
+        for j, w in enumerate(wins):
+            svc.ingest(sid, w, final=j == len(wins) - 1)
+    svc.pump()
+    assert svc.batcher.split_groups > 0, \
+        "giant-window tenant no longer splits the fused group"
+    assert svc.batcher.batches > 0  # the small lanes still fused
+    for sid, cfg, wins in tenants:
+        deltas = svc.poll(sid)
+        standalone = cfg.make_miner()
+        for j, (d, w) in enumerate(zip(deltas, wins)):
+            ref = standalone.update(w, final=j == len(wins) - 1)
+            assert_results_equal(d.result, ref,
+                                 f"{engine} {sid} window {j} (split path)")
+
+
+def test_pad_events_marks_segment_brick_tail_pad_for_every_mapc_kind():
+    """Adaptive-L padding of segment bricks must rewrite the padded tail's
+    *types* row to PAD_TYPE for BOTH segmented kinds ("mapck" and the
+    sharded "mapcs") — a zero-filled tail is a stream of real type-0
+    events and silently corrupts fused counts."""
+    from repro.core.events import PAD_TYPE
+    from repro.service.batcher import _pad_events
+    segs = np.ones((2, 5, 128), np.int32)  # [P, 5, LW] brick, types row 0
+    args = (None, None, None, None, None, segs)
+    for kind in ("mapck", "mapcs"):
+        padded = _pad_events(kind, args, 256)[5]
+        assert padded.shape == (2, 5, 256)
+        assert (np.asarray(padded[:, 0, 128:]) == PAD_TYPE).all(), kind
+        assert (np.asarray(padded[:, 0, :128]) == 1).all(), kind
+
+
+def test_split_disabled_keeps_single_group():
+    """max_pad_ratio=None restores the old fuse-everything behavior (the
+    split is a guardrail, not a semantics change)."""
+    svc = MiningService()
+    svc.batcher.max_pad_ratio = None
+    for i, n in enumerate((120, 4000)):
+        cfg = SessionConfig(intervals=((0, 4),), theta=3, max_level=2,
+                            history_limit=4)
+        sid = svc.create_session(f"t{i}", cfg)
+        wins = split_by_index(tie_heavy_stream(i, n=n), 3)
+        for j, w in enumerate(wins):
+            svc.ingest(sid, w, final=j == len(wins) - 1)
+    svc.pump()
+    assert svc.batcher.split_groups == 0
+
+
 # -------------------------------------------------------- bounded memory
 
 
