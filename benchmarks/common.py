@@ -10,7 +10,6 @@ redistributable here).
 
 from __future__ import annotations
 
-import dataclasses
 import json
 import time
 from pathlib import Path
@@ -18,7 +17,7 @@ from pathlib import Path
 import numpy as np
 
 from repro.core import EpisodeBatch
-from repro.data import random_stream, sym26
+from repro.data import sym26
 
 OUT_DIR = Path("experiments/bench")
 

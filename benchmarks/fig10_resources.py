@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import count_single_slot
 from repro.core.count_a1 import DEFAULT_LCAP, count_a1_vectorized

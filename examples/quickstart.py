@@ -3,9 +3,7 @@
   PYTHONPATH=src python examples/quickstart.py
 """
 
-import numpy as np
-
-from repro.core import EpisodeBatch, count_a1_sequential, mine
+from repro.core import count_a1_sequential, mine
 from repro.data import sym26
 
 # 1. A 26-neuron culture, 20 s, with two planted causal chains.
@@ -34,7 +32,7 @@ assert result.counts[2][idx] == exact
 
 # 4. Reconstruct the circuit (the paper's Fig. 1 end goal): the planted
 #    synapses dominate the excess-co-firing graph.
-from repro.core import reconstruct
+from repro.core import reconstruct  # noqa: E402
 g = reconstruct(stream, result)
 print("strongest inferred connections:")
 for a, b, w, c in g.top_edges(4):

@@ -1,0 +1,31 @@
+"""Kernel-contract auditor — the repo's static-analysis plane.
+
+Every regression this repo has shipped so far was a *silent contract
+violation*: the streaming hot path bypassing the on-chip counters
+(PR 3), a stitch-zone undercount (PR 1), kernel/XLA fold drift (PR 4).
+The dispatch plane's invariants — one interpret accessor, tallied
+dispatches and downgrades, donated state bricks, layout-contract brick
+shapes, VMEM-admissible launches — are machine-checkable, so this
+package checks them instead of relying on reviewer vigilance.
+
+Three passes, one CLI (``python -m repro.launch.audit``):
+
+  * ``contracts``  — Pass 1, AST kernel-contract linter (KC101–KC106):
+    no import of the audited code, pure source analysis.
+  * ``tracecheck`` — Pass 2, trace-time hot-path auditor (TR201–TR205):
+    jit-traces the counting entry points on small shapes, audits
+    jaxprs/HLO for host callbacks, dtype drift and donation, and runs a
+    multi-window recompilation sentinel against a compile budget.
+  * ``vmem``       — Pass 3, static VMEM budget checker (VM301–VM303):
+    recomputes per-launch footprints from the layout contracts over the
+    admitted dispatch envelope.
+
+Findings can be waived in place with a ``# audit-ok: <RULE> reason``
+trailing comment (see ``findings``); waivers surface in the JSON report
+rather than vanishing.  The dependency direction is one-way: this
+package may import the engines to trace them, the engines never import
+this package (policy constants like ``ops.MAX_SEG_BRICK_LW`` live with
+the dispatch code and are *validated* here).
+"""
+
+from .findings import Finding, Report  # noqa: F401

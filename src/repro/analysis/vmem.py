@@ -1,0 +1,154 @@
+"""Pass 3 — static VMEM budget checker (rules VM301–VM303).
+
+Recomputes, from the layout contracts alone, the VMEM-resident bytes of
+each Pallas launch the dispatch policy can admit — the same arithmetic
+the BlockSpecs in ``kernels/a1_count.py`` / ``a2_count.py`` imply — and
+fails any admitted configuration whose footprint exceeds the budget.
+Before this pass, an oversized commit window overflowed VMEM with a
+Mosaic allocation error at runtime as the only signal; now the admission
+bound (``ops.MAX_SEG_BRICK_LW``) is checked against the budget at audit
+time, and the runtime guard in ``ops.segment_bricks`` keeps the bound.
+
+The model is deliberately conservative:
+  * every operand block is counted on both the input and output side
+    (aliased pairs included — Mosaic still windows both), and
+  * everything is doubled for the pipeline's double buffering.
+
+Per-block bytes = prod(block shape) × 4 (the counting plane is i32-only,
+enforced by the Pass 2 dtype rule).
+
+The *admitted envelope* (``ADMITTED``) is part of the audited policy: it
+mirrors what dispatch actually accepts today (N padded to sublanes up to
+``MAX_N``, ``lcap`` up to ``MAX_LCAP``, event chunks up to
+``DEFAULT_BLOCK_E``, segment windows up to ``MAX_SEG_BRICK_LW``).
+Widening the envelope without budget headroom turns the audit red before
+it can turn a run red.
+"""
+
+from __future__ import annotations
+
+from .findings import Finding
+
+# layout constants — mirrors kernels/a2_count.py (the analysis plane must
+# not import the jax kernel stack; audited against it in tests)
+LANES = 128
+SUBLANES = 8
+SEG_ROWS = 5
+DEFAULT_BLOCK_E = 1024
+EV_ROWS = 3  # types; times; dup
+
+ITEM_BYTES = 4    # i32 everywhere in the counting plane
+DOUBLE_BUF = 2    # Pallas pipeline double buffering
+
+# ~16 MiB of VMEM per TPU core; leave 1 MiB headroom for Mosaic
+# scratch/semaphores the block model cannot see
+VMEM_BUDGET_BYTES = 15 * (1 << 20)
+
+# admitted dispatch envelope (see module docstring)
+MAX_N = 16
+MAX_LCAP = 16
+
+_POLICY_PATH = "repro/kernels/ops.py"  # where the admission policy lives
+
+
+def _round_up(x: int, q: int) -> int:
+    return -(-x // q) * q
+
+
+def _blocks_bytes(blocks) -> int:
+    total = 0
+    for shape in blocks:
+        n = 1
+        for d in shape:
+            n *= d
+        total += n
+    return total * ITEM_BYTES * DOUBLE_BUF
+
+
+def a1_state_footprint(n_levels: int, lcap: int, block_m: int = LANES,
+                       block_e: int = DEFAULT_BLOCK_E) -> int:
+    """VMEM bytes of one ``a1_count_state_kernel`` grid step."""
+    np_ = _round_up(max(n_levels, 1), SUBLANES)
+    ins = ([(np_, block_m)] * 3            # et / tlo / thi
+           + [(EV_ROWS, block_e)]          # event chunk
+           + [(np_, lcap, block_m)] * 2    # s / po bricks
+           + [(SUBLANES, block_m)] * 2)    # cnt / ovf
+    outs = ([(SUBLANES, block_m)] * 2      # cnt / ovf
+            + [(np_, lcap, block_m)] * 2)  # s / po (aliased)
+    return _blocks_bytes(ins + outs)
+
+
+def a2_state_footprint(n_levels: int, block_m: int = LANES,
+                       block_e: int = DEFAULT_BLOCK_E) -> int:
+    """VMEM bytes of one ``a2_count_state_kernel`` grid step."""
+    np_ = _round_up(max(n_levels, 1), SUBLANES)
+    ins = ([(np_, block_m)] * 3            # et / tlo / thi
+           + [(EV_ROWS, block_e)]          # event chunk
+           + [(np_, block_m)]              # s tile
+           + [(SUBLANES, block_m)])        # cnt
+    outs = [(SUBLANES, block_m), (np_, block_m)]
+    return _blocks_bytes(ins + outs)
+
+
+def mapconcat_footprint(n_levels: int, lw: int,
+                        block_m: int = LANES) -> int:
+    """VMEM bytes of one segmented (MapConcatenate) kernel grid step.
+
+    The A1 and A2 variants have identical block sets — ``lcap`` affects
+    only in-register state, not the windowed operands."""
+    np_ = _round_up(max(n_levels, 1), SUBLANES)
+    ins = ([(np_, block_m)] * 4            # et / tlo / thi / cum
+           + [(SUBLANES, block_m)]         # w
+           + [(1, SEG_ROWS, lw)])          # segment event brick
+    outs = [(np_, block_m)] * 4 + [(SUBLANES, block_m)]
+    return _blocks_bytes(ins + outs)
+
+
+def check_vmem(max_seg_brick_lw: int,
+               budget: int = VMEM_BUDGET_BYTES):
+    """Sweep the admitted dispatch envelope against the VMEM budget.
+
+    ``max_seg_brick_lw`` is the admission bound the runtime enforces
+    (``ops.MAX_SEG_BRICK_LW`` — passed in so this module stays
+    import-light). Returns (findings, summary).
+    """
+    findings: list[Finding] = []
+    worst = {"a1_state": 0, "a2_state": 0, "mapconcat": 0}
+
+    for n in range(2, MAX_N + 1):
+        for lcap in (4, 8, MAX_LCAP):
+            b = a1_state_footprint(n, lcap)
+            worst["a1_state"] = max(worst["a1_state"], b)
+            if b > budget:
+                findings.append(Finding(
+                    "VM301", _POLICY_PATH, 0,
+                    f"a1 state launch (N={n}, lcap={lcap}) needs "
+                    f"{b / 2**20:.1f} MiB VMEM > budget "
+                    f"{budget / 2**20:.1f} MiB"))
+        b = a2_state_footprint(n)
+        worst["a2_state"] = max(worst["a2_state"], b)
+        if b > budget:
+            findings.append(Finding(
+                "VM301", _POLICY_PATH, 0,
+                f"a2 state launch (N={n}) needs {b / 2**20:.1f} MiB "
+                f"VMEM > budget {budget / 2**20:.1f} MiB"))
+        # largest admitted segment window — the policy constant under test
+        b = mapconcat_footprint(n, max_seg_brick_lw)
+        worst["mapconcat"] = max(worst["mapconcat"], b)
+        if b > budget:
+            findings.append(Finding(
+                "VM302", _POLICY_PATH, 0,
+                f"segmented launch (N={n}, LW={max_seg_brick_lw}) needs "
+                f"{b / 2**20:.1f} MiB VMEM > budget "
+                f"{budget / 2**20:.1f} MiB — lower MAX_SEG_BRICK_LW"))
+
+    if max_seg_brick_lw % LANES:
+        findings.append(Finding(
+            "VM303", _POLICY_PATH, 0,
+            f"MAX_SEG_BRICK_LW={max_seg_brick_lw} is not a multiple of "
+            f"the {LANES}-lane window padding — admission and padding "
+            "quanta must agree"))
+
+    summary = {f"vmem_worst_{k}_bytes": v for k, v in worst.items()}
+    summary["vmem_budget_bytes"] = budget
+    return findings, summary

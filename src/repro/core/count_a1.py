@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.tally import record_fallback
+
 from . import ref
 from .episodes import EpisodeBatch
 from .events import TIME_NEG_INF, EventStream, count_level1
@@ -218,7 +220,7 @@ def count_a1(stream: EventStream, eps: EpisodeBatch,
                     stream, eps, state=state, lcap=lcap)
                 return counts, new_state
             except (ImportError, NotImplementedError):
-                pass
+                record_fallback("a1_stateful")
         out = count_a1_vectorized(stream, eps, lcap=lcap, state=state,
                                   return_state=True)
         counts, _, new_state = out
@@ -228,6 +230,7 @@ def count_a1(stream: EventStream, eps: EpisodeBatch,
             from repro.kernels import ops as kops
             counts, ovf = kops.a1_count(stream, eps, lcap=lcap)
         except (ImportError, NotImplementedError):
+            record_fallback("a1_count")
             counts, ovf = count_a1_vectorized(stream, eps, lcap=lcap)
     else:
         counts, ovf = count_a1_vectorized(stream, eps, lcap=lcap)

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.tally import record_fallback
+
 from .episodes import EpisodeBatch
 from .events import TIME_NEG_INF, EventStream, count_level1
 
@@ -137,7 +139,7 @@ def count_single_slot(stream: EventStream, eps: EpisodeBatch,
                 return counts, new_state
             return counts
         except (ImportError, NotImplementedError):
-            pass
+            record_fallback("a2_stateful")
     st = state if state is not None else init_a2_state(eps)
     s, count = _a2_carry_scan()(
         jnp.asarray(eps.etypes), tlo, jnp.asarray(eps.thi),
@@ -197,11 +199,11 @@ def count_a2(stream: EventStream, eps: EpisodeBatch,
                                                 inclusive_lower=True)
             return counts
         except (ImportError, NotImplementedError):
-            pass
+            record_fallback("a2_segments")
     if use_kernel:
         try:
             from repro.kernels import ops as kops
             return kops.a2_count(stream, relaxed)
         except (ImportError, NotImplementedError):
-            pass
+            record_fallback("a2_count")
     return count_single_slot(stream, relaxed, inclusive_lower=True)

@@ -12,7 +12,7 @@ the linear one; we re-fit a, b on this host in benchmarks/fig8).
 
 from __future__ import annotations
 
-import numpy as np
+from repro.kernels.tally import record_fallback
 
 from .count_a1 import A1State, DEFAULT_LCAP, count_a1 as _count_a1
 from .mapconcat import (
@@ -46,6 +46,7 @@ def _mapc_kernel_available() -> bool:
         kops.kernel_mode()
         return True
     except (ImportError, NotImplementedError):
+        record_fallback("hybrid_mapc_probe")
         return False
 
 

@@ -51,6 +51,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.tally import record_fallback
+
 from .count_a1 import DEFAULT_LCAP, count_a1 as _count_a1_exact, \
     dup_flags, step_bounded_list
 from .episodes import EpisodeBatch
@@ -430,6 +432,7 @@ def mapconcatenate_sharded_kernel(stream: EventStream, eps: EpisodeBatch,
             stream, eps, num_segments=num_segments, lcap=lcap,
             num_devices=num_devices)
     except (ImportError, NotImplementedError):
+        record_fallback("mapc_sharded")
         d = shard_device_count() if num_devices is None else num_devices
         if d >= 2:
             return mapconcatenate_sharded(stream, eps, mesh=data_mesh(d),
@@ -470,6 +473,7 @@ def mapconcatenate_kernel(stream: EventStream, eps: EpisodeBatch,
                                              num_segments=num_segments,
                                              lcap=lcap)
     except (ImportError, NotImplementedError):
+        record_fallback("mapc_kernel")
         return mapconcatenate(stream, eps, num_segments=num_segments,
                               lcap=lcap, use_kernel=use_kernel)
     if bad.any():

@@ -95,6 +95,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.tally import record_fallback
+
 from . import candidates as _cand
 from .count_a1 import (A1State, DEFAULT_LCAP, _a1_carry_scan, count_a1,
                        init_a1_state)
@@ -358,6 +360,7 @@ class StreamingCounter:
             from repro.kernels import ops as kops
             self._interp = kops.kernel_mode()
         except (ImportError, NotImplementedError):
+            record_fallback("stream_a1_residency")
             return
         self._kops = kops
         self._kernel = True
@@ -384,6 +387,7 @@ class StreamingCounter:
             from repro.kernels import ops as kops
             self._interp = kops.kernel_mode()
         except (ImportError, NotImplementedError):
+            record_fallback("stream_mapc_residency")
             return
         self._kops = kops
         self._mapc_kernel = True
@@ -546,7 +550,14 @@ class StreamingCounter:
         for i in range(q):
             wt[i, : hi[i] - lo[i]] = self._buf_t[lo[i]: hi[i]]
             wtt[i, : hi[i] - lo[i]] = self._buf_tt[lo[i]: hi[i]]
-        if self._mapc_kernel:
+        use_kernel = self._mapc_kernel
+        if use_kernel and lw > self._kops.MAX_SEG_BRICK_LW:
+            # the padded window brick would exceed segment_bricks'
+            # VMEM admission bound; run this commit on the XLA engine
+            # (bit-identical carry — residency resumes next commit)
+            record_fallback("stream_mapc_brick")
+            use_kernel = False
+        if use_kernel:
             # one segmented launch: Map + on-chip fold over this commit's
             # q segments; its pre-stitched tuple folds onto the carry. On
             # a multi-device mesh (and q covering every device) the launch
@@ -997,6 +1008,7 @@ class StreamingA2Counter:
             from repro.kernels import ops as kops
             self._interp = kops.kernel_mode()
         except (ImportError, NotImplementedError):
+            record_fallback("stream_a2_residency")
             return
         self._kops = kops
         self._kernel = True

@@ -5,7 +5,6 @@ iterator contract: dict batches keyed like model.loss_fn expects."""
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

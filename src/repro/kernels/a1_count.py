@@ -50,7 +50,7 @@ from jax.experimental import pallas as pl
 from repro.core.events import PAD_TYPE, TIME_NEG_INF
 from repro.core.mapconcat import stitch_zones
 
-from .a2_count import (DEFAULT_BLOCK_E, LANES, PAD_ROW_TYPE, SEG_DUP,
+from .a2_count import (DEFAULT_BLOCK_E, LANES, SEG_DUP,
                        SEG_ROWS, SEG_TAU_HI, SEG_TAU_LO, SEG_TIME, SEG_TYPE,
                        SEQ_GRID, SUBLANES, _block_e, _mapc_fold_and_emit)
 

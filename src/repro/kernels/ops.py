@@ -41,9 +41,7 @@ no test could see).
 
 from __future__ import annotations
 
-import collections
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
@@ -63,13 +61,17 @@ from .a1_count import (a1_count_kernel, a1_count_state_kernel,
 from .a2_count import (DEFAULT_BLOCK_E, LANES, PAD_ROW_TYPE, SEG_ROWS,
                        SUBLANES, a2_count_kernel, a2_count_state_kernel,
                        a2_mapconcat_kernel)
+from .tally import KERNEL_CALLS, interpret_requested
+from .tally import record_fallback, reset_kernel_calls  # noqa: F401
 
-KERNEL_CALLS: collections.Counter = collections.Counter()
-
-
-def reset_kernel_calls() -> None:
-    """Zero the dispatch tally (test instrumentation)."""
-    KERNEL_CALLS.clear()
+# Largest per-segment event-window length (LW) the segmented-kernel
+# dispatch admits. The segment brick is DMA'd whole per grid step —
+# 5 rows × LW × 4 bytes, double-buffered — so an unbounded LW can blow
+# the VMEM budget with a runtime crash as the only signal. Beyond this
+# the dispatch declines (NotImplementedError) and callers take the XLA
+# MapConcatenate, which has no VMEM ceiling; the admitted value is
+# validated against the budget by ``repro.analysis.vmem``.
+MAX_SEG_BRICK_LW = 1 << 17
 
 
 def _mode(force: str | None) -> bool:
@@ -80,8 +82,7 @@ def _mode(force: str | None) -> bool:
         return True
     if jax.default_backend() == "tpu":
         return False
-    if (os.environ.get("REPRO_INTERPRET_KERNELS") == "1"
-            or os.environ.get("REPRO_KERNEL_INTERPRET") == "1"):
+    if interpret_requested():
         return True
     raise NotImplementedError("no TPU and interpret mode not requested")
 
@@ -302,6 +303,12 @@ def segment_bricks(wt, wtt, tau, length: int | None = None):
     wtt = np.asarray(wtt, np.int32)
     p, lw = wt.shape
     lwp = _round_up(max(lw, 1), LANES) if length is None else length
+    if lwp > MAX_SEG_BRICK_LW:
+        # an unadmitted brick would overflow VMEM at launch; decline so
+        # the caller's graceful-degradation path takes the XLA engine
+        raise NotImplementedError(
+            f"segment brick LW={lwp} exceeds the admitted "
+            f"MAX_SEG_BRICK_LW={MAX_SEG_BRICK_LW} (VMEM budget)")
     ev = np.zeros((p, SEG_ROWS, lwp), np.int32)
     ev[:, 0, :] = PAD_TYPE
     ev[:, 0, :lw] = wt

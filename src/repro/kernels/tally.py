@@ -1,0 +1,68 @@
+"""Dispatch tally + interpret-mode env accessor (dependency-light).
+
+This module deliberately imports nothing heavy (no jax, no numpy) so the
+pure-XLA engines in ``core/`` can record kernel→XLA downgrades even when
+the Pallas stack itself is unimportable — the ``ImportError`` arm of the
+graceful-degradation ``except`` clauses is exactly the situation in which
+``kernels.ops`` cannot be loaded.
+
+``KERNEL_CALLS`` tallies host-side kernel dispatches per kind ("a1",
+"a1_state", "a1_mapc", "a1_mapc_shard", the "a2"/"a2_*" analogues) and —
+since PR 6 — every graceful degradation under a ``fallback:<site>`` kind
+(``record_fallback``).  A downgrade that does not move a tally is
+invisible to both the service telemetry and the contract auditor
+(``repro.analysis``), which is how PR 3's silent-bypass bug survived
+review; the auditor's KC105 rule now rejects any
+``except NotImplementedError`` degradation path that does not call
+``record_fallback``.
+
+``interpret_requested`` is the single accessor for the
+``REPRO_KERNEL_INTERPRET`` / ``REPRO_INTERPRET_KERNELS`` environment
+aliases (both spellings remain accepted; earlier PRs read them
+inconsistently from two call sites).  The auditor's KC106 rule rejects
+direct ``os.environ`` reads of either name anywhere else.
+"""
+
+from __future__ import annotations
+
+import collections
+import os
+
+# Accepted spellings for "run the Pallas kernels in interpret mode".
+# REPRO_KERNEL_INTERPRET is the documented name; the other is a legacy
+# alias kept so existing CI configs and scripts don't break.
+INTERPRET_ENV_VARS = ("REPRO_KERNEL_INTERPRET", "REPRO_INTERPRET_KERNELS")
+
+KERNEL_CALLS: collections.Counter = collections.Counter()
+
+
+def reset_kernel_calls() -> None:
+    """Zero the dispatch tally (test / audit instrumentation)."""
+    KERNEL_CALLS.clear()
+
+
+def record_fallback(site: str) -> None:
+    """Record one kernel→XLA graceful degradation at ``site``.
+
+    Every ``except (ImportError, NotImplementedError)`` arm that reroutes
+    a kernel dispatch onto an XLA engine must call this, so downgrades
+    show up in the same tally the kernel dispatches do —
+    ``KERNEL_CALLS["fallback:<site>"]``. Enforced by
+    ``repro.analysis.contracts`` rule KC105.
+    """
+    KERNEL_CALLS["fallback:" + site] += 1
+
+
+def fallback_counts() -> dict:
+    """The ``fallback:*`` slice of the tally (site → count)."""
+    return {k.split(":", 1)[1]: v for k, v in KERNEL_CALLS.items()
+            if k.startswith("fallback:")}
+
+
+def interpret_requested() -> bool:
+    """Whether the environment asks for interpret-mode kernels.
+
+    Single source of truth for the ``REPRO_KERNEL_INTERPRET`` /
+    ``REPRO_INTERPRET_KERNELS`` aliases — read the env through this
+    accessor only (audit rule KC106)."""
+    return any(os.environ.get(v) == "1" for v in INTERPRET_ENV_VARS)

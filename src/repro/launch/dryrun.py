@@ -19,19 +19,18 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --all [--force]
 """
 
-import argparse
-import json
-import time
-import traceback
-from pathlib import Path
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
 
-import jax
 
-from repro.configs import ARCHS, canonical, get_config
-from repro.launch import hlo_analysis
-from repro.launch.mesh import make_production_mesh
-from repro.launch.shapes import SHAPES, cell_is_runnable
-from repro.launch.steps import build_cell
+from repro.configs import ARCHS, canonical, get_config  # noqa: E402
+from repro.launch import hlo_analysis  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.shapes import SHAPES, cell_is_runnable  # noqa: E402
+from repro.launch.steps import build_cell  # noqa: E402
 
 MESHES = {"single": False, "multi": True}
 

@@ -22,7 +22,6 @@ Unit-tested against jitted modules with known content
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from collections import defaultdict
 

@@ -14,12 +14,11 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import make_decode_step, make_prefill_step
-from repro.models import (DecodeState, init_params, make_decode_caches)
+from repro.models import init_params, make_decode_caches
 
 
 def serve_batch(cfg, *, batch: int, prompt_len: int, gen: int,

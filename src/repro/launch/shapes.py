@@ -16,7 +16,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ARCHS, canonical, get_config
 from repro.models import make_decode_caches

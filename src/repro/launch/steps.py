@@ -8,13 +8,12 @@ from __future__ import annotations
 
 import contextlib
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models import (DecodeState, decode_step, init_params, loss_fn,
+from repro.models import (DecodeState, decode_step, loss_fn,
                           param_specs, prefill)
 from repro.models import sharding as shd
 from repro.models.config import ModelConfig

@@ -11,11 +11,9 @@ from __future__ import annotations
 
 import argparse
 import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import checkpoint as ckpt
 from repro.configs import get_config, get_smoke_config

@@ -4,7 +4,6 @@ comes from pjit sharding constraints (models/sharding.py)."""
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax

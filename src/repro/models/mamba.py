@@ -62,9 +62,9 @@ def _scan_chunked(a, b, h0, chunk: int):
     """h_t = a_t * h_{t-1} + b_t over axis 1, chunked associative scan.
     a/b [B, L, din, st]; h0 [B, din, st]. Returns (h_all [B,L,din,st], h_L).
     """
-    bsz, l, din, st = a.shape
-    nc = l // chunk
-    assert l % chunk == 0, f"L={l} % chunk={chunk} != 0"
+    bsz, seq, din, st = a.shape
+    nc = seq // chunk
+    assert seq % chunk == 0, f"L={seq} % chunk={chunk} != 0"
     ar = a.reshape(bsz, nc, chunk, din, st)
     br = b.reshape(bsz, nc, chunk, din, st)
 
@@ -82,7 +82,7 @@ def _scan_chunked(a, b, h0, chunk: int):
     hL, h_states = jax.lax.scan(chunk_step, h0,
                                 (jnp.moveaxis(ar, 1, 0),
                                  jnp.moveaxis(br, 1, 0)))
-    h_states = jnp.moveaxis(h_states, 0, 1).reshape(bsz, l, din, st)
+    h_states = jnp.moveaxis(h_states, 0, 1).reshape(bsz, seq, din, st)
     return h_states, hL
 
 
@@ -90,7 +90,7 @@ def mamba_layer(p, cfg: ModelConfig, x_in, h0=None, conv_state=None):
     """Full-sequence mixer. x_in [B, L, D] → (y [B, L, D], (h_L, conv_tail)).
 
     The returned state makes prefill → decode handoff possible."""
-    bsz, l, _ = x_in.shape
+    bsz, seq, _ = x_in.shape
     din, st = cfg.d_inner, cfg.ssm_state
     xz = x_in @ p["in_proj"]
     x, z, dt, bmat, cmat = _ssm_inputs(p, cfg, xz)
@@ -100,7 +100,7 @@ def mamba_layer(p, cfg: ModelConfig, x_in, h0=None, conv_state=None):
                * x.astype(jnp.float32)[..., None], "mamba_state")
     if h0 is None:
         h0 = jnp.zeros((bsz, din, st), jnp.float32)
-    h_states, hL = _scan_chunked(abar, bbar, h0, min(cfg.mamba_chunk, l))
+    h_states, hL = _scan_chunked(abar, bbar, h0, min(cfg.mamba_chunk, seq))
     y = jnp.einsum("blds,bls->bld", h_states, cmat)
     y = y + x.astype(jnp.float32) * p["d_skip"]
     y = (y.astype(x_in.dtype)) * jax.nn.silu(z)

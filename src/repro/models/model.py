@@ -12,7 +12,6 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .config import ModelConfig
 from .layers import rms_norm

@@ -22,7 +22,6 @@ import threading
 from typing import Any
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .config import ModelConfig

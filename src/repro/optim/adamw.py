@@ -18,7 +18,8 @@ class AdamWState(NamedTuple):
 
 
 def adamw_init(params, moment_dtype=jnp.float32) -> AdamWState:
-    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    def zeros(p):
+        return jnp.zeros(p.shape, moment_dtype)
     return AdamWState(step=jnp.zeros((), jnp.int32),
                       m=jax.tree.map(zeros, params),
                       v=jax.tree.map(zeros, params))

@@ -16,7 +16,6 @@ import time
 from collections import deque
 from typing import Any, Callable
 
-import jax
 import numpy as np
 
 

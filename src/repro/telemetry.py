@@ -147,8 +147,8 @@ def routing_events(topk_indices: np.ndarray, num_experts: int,
     Simultaneous events (same token, k experts, several layers) are exactly
     the tie case the engine's inclusive-lower A2 handles (DESIGN.md §2).
     """
-    l, t, k = topk_indices.shape
-    layers = list(range(l)) if layers is None else layers
+    nl, t, k = topk_indices.shape
+    layers = list(range(nl)) if layers is None else layers
     pairs = []
     for li, layer in enumerate(layers):
         for tok in range(t):

@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 from repro.core import (EpisodeBatch, EventStream, count_a1, count_a2,
-                        count_a1_vectorized, count_single_slot,
+                        count_single_slot,
                         count_a1_sequential, count_a2_sequential,
                         count_occurrences_naive, mapconcatenate)
 from repro.data import embedded_chain_stream, random_stream

@@ -9,7 +9,8 @@ pytest.importorskip(
            "same invariants lives in test_core_counting/test_streaming")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import (EpisodeBatch, EventStream, count_a1, count_a2,
+from repro.core import (EpisodeBatch, EventStream,  # noqa: E402
+                        count_a1, count_a2,
                         count_a1_sequential, count_a2_sequential,
                         count_single_slot, mapconcatenate)
 

@@ -9,7 +9,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 
 def _run(script: str) -> dict:

@@ -1,12 +1,6 @@
 """Fault-tolerance substrate tests: checkpoint atomicity/restart, watchdog
 retry, straggler detection, elastic re-mesh planning."""
 
-import json
-import shutil
-from pathlib import Path
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -19,7 +19,6 @@ from repro.core import (EpisodeBatch, EventStream, StreamingCounter,
                         count_a2, count_dispatch, count_two_pass,
                         fold_pair, fold_pair_unrolled, make_segments,
                         mapconcatenate_kernel, mine)
-from repro.core.count_a2 import count_single_slot
 from repro.core.mapconcat import _map_all_segments
 from repro.kernels import ops
 

@@ -16,8 +16,8 @@ from repro.core import (EpisodeBatch, EventStream, StreamingA2Counter,
                         StreamingCounter, StreamingMiner, count_a1,
                         count_a1_sequential, count_a2, count_a2_sequential,
                         count_dispatch, count_two_pass, mine)
-from repro.core.count_a1 import count_a1_vectorized, init_a1_state
-from repro.core.count_a2 import count_single_slot, init_a2_state
+from repro.core.count_a1 import count_a1_vectorized
+from repro.core.count_a2 import count_single_slot
 from repro.kernels import ops
 
 NUM_TYPES = 5

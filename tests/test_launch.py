@@ -2,13 +2,12 @@
 single-device; the full lower+compile path is exercised by the dry-run)."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHS, get_config
-from repro.launch.shapes import (SHAPES, LONG_CONTEXT_OK, batch_specs,
+from repro.launch.shapes import (SHAPES, LONG_CONTEXT_OK,
                                  cell_is_runnable, input_specs)
 from repro.models import param_specs
 from repro.models import sharding as shd

@@ -1,9 +1,6 @@
 """End-to-end miner behaviour: planted episodes are recovered."""
 
-import numpy as np
-
-from repro.core import EpisodeBatch, count_a1_sequential, mine, \
-    mine_partitions
+from repro.core import count_a1_sequential, mine, mine_partitions
 from repro.data import embedded_chain_stream, partition_windows, sym26
 
 

@@ -3,29 +3,29 @@ plus the serving meters (labels, latency percentiles, per-session bank)."""
 
 import numpy as np
 
-from repro.core import EpisodeBatch, count_a1_sequential, mine
+from repro.core import count_a1_sequential, mine
 from repro.telemetry import (MeterBank, ThroughputMeter,
                              decode_expert_episode, routing_events)
 
 
 def test_routing_events_roundtrip():
-    l, t, k, e = 2, 16, 2, 8
+    nl, t, k, e = 2, 16, 2, 8
     rng = np.random.default_rng(0)
-    topk = rng.integers(0, e, size=(l, t, k)).astype(np.int32)
+    topk = rng.integers(0, e, size=(nl, t, k)).astype(np.int32)
     stream = routing_events(topk, e)
-    assert len(stream) == l * t * k
-    assert stream.num_types == l * e
+    assert len(stream) == nl * t * k
+    assert stream.num_types == nl * e
     # decode a type back
     layer, expert = decode_expert_episode(int(stream.types[0]), e)
-    assert 0 <= layer < l and 0 <= expert < e
+    assert 0 <= layer < nl and 0 <= expert < e
 
 
 def test_planted_routing_cascade_is_mined():
     """A deterministic cascade (expert 1 at layer 0 → expert 5 at layer 1,
     next token) must dominate the mined 2-episodes."""
-    l, t, k, e = 2, 200, 1, 8
+    nl, t, k, e = 2, 200, 1, 8
     rng = np.random.default_rng(1)
-    topk = rng.integers(0, e, size=(l, t, k)).astype(np.int32)
+    topk = rng.integers(0, e, size=(nl, t, k)).astype(np.int32)
     topk[0, ::4, 0] = 1   # layer0 expert1 at tokens 0,4,8...
     topk[1, 1::4, 0] = 5  # layer1 expert5 one token later
     stream = routing_events(topk, e)
