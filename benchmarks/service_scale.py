@@ -34,7 +34,6 @@ from __future__ import annotations
 
 import argparse
 import sys
-import time
 from pathlib import Path
 
 try:  # package mode (python -m benchmarks.run)
@@ -44,6 +43,8 @@ except ImportError:  # direct script mode
     from common import Report
 
 from repro.data import partition_windows, sym26  # noqa: E402
+from repro.obs import TRACER, span  # noqa: E402
+from repro.obs.trace import step_breakdown  # noqa: E402
 from repro.service import (MiningService, SchedulerPolicy,  # noqa: E402
                            SessionConfig)
 
@@ -71,12 +72,18 @@ def _run_fleet(num_sessions: int, seconds: int, batching: bool):
         batching=batching)
     for sid, cfg, wins, _ in feeds:
         svc.create_session(sid, cfg)
-    t0 = time.perf_counter()
-    for sid, _, wins, _ in feeds:
-        for j, w in enumerate(wins):
-            svc.ingest(sid, w, final=j == len(wins) - 1)
-    svc.pump()
-    wall = time.perf_counter() - t0
+    # obs spans time the drain loop (bench.fleet is the wall clock) and
+    # step_breakdown() attributes it per phase — barrier wait vs pad/fuse
+    # host work vs device launch — from the same trace the service writes
+    TRACER.clear()
+    with span("bench.fleet", sessions=num_sessions, batched=batching):
+        for sid, _, wins, _ in feeds:
+            for j, w in enumerate(wins):
+                svc.ingest(sid, w, final=j == len(wins) - 1)
+        svc.pump()
+    wall = next(e.dur for e in reversed(TRACER.events())
+                if e.name == "bench.fleet")
+    bd = step_breakdown()
     total_events = sum(n for _, _, _, n in feeds)
     total_windows = sum(len(wins) for _, _, wins, _ in feeds)
     stats = svc.stats()
@@ -89,10 +96,24 @@ def _run_fleet(num_sessions: int, seconds: int, batching: bool):
         "p99_latency_s": stats["aggregate"]["p99_latency_s"],
         "fused": (stats["batcher"]["fused_requests"] if batching else 0),
         "batches": (stats["batcher"]["batches"] if batching else 0),
+        "breakdown": bd,
     }
 
 
-def run(sessions=(2, 4, 8), seconds: int = 8):
+def _phase_cols(bd: dict) -> dict:
+    return {
+        "steps": bd["steps"],
+        "snapshot_s": round(bd["snapshot_s"], 4),
+        "bucket_pad_s": round(bd["bucket_pad_s"], 4),
+        "mine_host_s": round(bd["mine_host_s"], 4),
+        "barrier_wait_s": round(bd["barrier_wait_s"], 4),
+        "pad_fuse_s": round(bd["pad_fuse_s"], 4),
+        "device_launch_s": round(bd["device_launch_s"], 4),
+        "phase_coverage": round(bd["coverage"], 4),
+    }
+
+
+def run(sessions=(2, 4, 8), seconds: int = 8, trace_out: str | None = None):
     rep = Report("service_scale")
     for s in sessions:
         r = _run_fleet(s, seconds, batching=True)
@@ -100,17 +121,29 @@ def run(sessions=(2, 4, 8), seconds: int = 8):
                 sessions=s, events=r["events"], windows=r["windows"],
                 agg_ev_per_s=round(r["agg_ev_per_s"]),
                 p99_ms=round(r["p99_latency_s"] * 1e3, 1),
-                fused=r["fused"], batches=r["batches"])
+                fused=r["fused"], batches=r["batches"],
+                **_phase_cols(r["breakdown"]))
+        bd = r["breakdown"]
         print(f"[service-bench] {s:2d} sessions (batched): "
               f"{r['agg_ev_per_s']:,.0f} ev/s aggregate over "
               f"{r['windows']} windows, p99 {r['p99_latency_s']*1e3:.0f} ms,"
               f" {r['fused']} scans fused into {r['batches']} batches")
+        print(f"[service-bench]    phases: wait {bd['barrier_wait_s']:.2f}s"
+              f" pad/fuse {bd['pad_fuse_s']:.2f}s"
+              f" launch {bd['device_launch_s']:.2f}s"
+              f" mine-host {bd['mine_host_s']:.2f}s"
+              f" ({bd['coverage']:.0%} of step wall attributed)")
+        if trace_out:
+            # trace of the LAST batched fleet size survives (per-run clear)
+            n = TRACER.export_chrome(trace_out)
+            print(f"[service-bench] wrote {n} spans to {trace_out}")
     s = max(sessions)
     r = _run_fleet(s, seconds, batching=False)
     rep.add(f"unbatched/s{s}", r["wall_s"],
             sessions=s, events=r["events"], windows=r["windows"],
             agg_ev_per_s=round(r["agg_ev_per_s"]),
-            p99_ms=round(r["p99_latency_s"] * 1e3, 1))
+            p99_ms=round(r["p99_latency_s"] * 1e3, 1),
+            **_phase_cols(r["breakdown"]))
     print(f"[service-bench] {s:2d} sessions (unbatched baseline): "
           f"{r['agg_ev_per_s']:,.0f} ev/s aggregate")
     rep.save()
@@ -123,6 +156,9 @@ def main():
     ap.add_argument("--sessions", type=int, nargs="+",
                     default=None)
     ap.add_argument("--seconds", type=int, default=None)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export the largest batched fleet's span trace "
+                         "as Chrome trace-event JSON (Perfetto-loadable)")
     args = ap.parse_args()
     if args.smoke:
         sessions = tuple(args.sessions or (2, 8))
@@ -130,7 +166,7 @@ def main():
     else:
         sessions = tuple(args.sessions or (2, 4, 8, 16))
         seconds = args.seconds or 12
-    run(sessions=sessions, seconds=seconds)
+    run(sessions=sessions, seconds=seconds, trace_out=args.trace_out)
 
 
 if __name__ == "__main__":

@@ -66,13 +66,30 @@ except ImportError:  # direct script mode
 
 from repro.core import StreamingCounter, count_a1  # noqa: E402
 from repro.data import partition_windows  # noqa: E402
+from repro.obs import TRACER  # noqa: E402
 from repro.telemetry import ThroughputMeter  # noqa: E402
+
+_HOST_SPANS = ("stream.prepare", "stream.commit", "stream.checkpoint")
+
+
+def stream_phases() -> dict:
+    """Host-vs-device split of the buffered stream.* spans: prepare /
+    commit / checkpoint are host-side staging, launch is the dispatch
+    call's wall time (a device lower bound on accelerator backends)."""
+    host = dev = 0.0
+    for e in TRACER.events():
+        if e.name in _HOST_SPANS:
+            host += e.dur
+        elif e.name == "stream.launch":
+            dev += e.dur
+    return {"host_s": round(host, 4), "device_s": round(dev, 4)}
 
 
 def bench_carry(windows, eps, engine, use_kernel=False, num_segments=8):
     ctr = StreamingCounter(eps, engine=engine, use_kernel=use_kernel,
                            num_segments=num_segments)
     meter = ThroughputMeter()
+    TRACER.clear()  # per-run phase attribution (stream_phases)
     gen = ctr.run(windows)
     for w in windows:
         meter.start()
@@ -221,7 +238,7 @@ def run(seconds: int = 12, m: int = 128, n: int = 3,
                         steady_ev_per_s=round(s["steady_events_per_sec"]),
                         serial_steps_per_segment=steps,
                         proxy_speedup_vs_1seg=round(steps1 / steps, 3),
-                        mapc_mode=mode)
+                        mapc_mode=mode, **stream_phases())
                 print(f"[stream-bench] mapck w={wms}ms P={p_eff} "
                       f"({mode}): {s['steady_events_per_sec']:,.0f} ev/s "
                       f"steady, serial steps/segment {steps} "
@@ -247,10 +264,11 @@ def run(seconds: int = 12, m: int = 128, n: int = 3,
                     windows=sk["windows"], events=sk["events"],
                     ev_per_s=round(sk["events_per_sec"]),
                     steady_ev_per_s=round(sk["steady_events_per_sec"]),
-                    kernel_mode=mode)
+                    kernel_mode=mode, **stream_phases())
             kernel_line = (f"kernel({mode}) "
                            f"{sk['steady_events_per_sec']:,.0f} ev/s vs ")
         final, meter_c, _ = bench_carry(windows, eps, engine)
+        carry_phases = stream_phases()
         np.testing.assert_array_equal(
             final, oracle,
             err_msg=f"carry counts diverged from one-shot at {wms}ms")
@@ -260,7 +278,8 @@ def run(seconds: int = 12, m: int = 128, n: int = 3,
         rep.add(f"carry/w{wms}", sc["seconds"],
                 windows=sc["windows"], events=sc["events"],
                 ev_per_s=round(sc["events_per_sec"]),
-                steady_ev_per_s=round(sc["steady_events_per_sec"]))
+                steady_ev_per_s=round(sc["steady_events_per_sec"]),
+                **carry_phases)
         rep.add(f"restart/w{wms}", sr["seconds"],
                 windows=sr["windows"], events=sr["events"],
                 ev_per_s=round(sr["events_per_sec"]),

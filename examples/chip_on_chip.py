@@ -29,7 +29,13 @@ from repro.core import mine
 from repro.models import init_params
 from repro.models.config import ModelConfig
 from repro.models.layers import rms_norm
+from repro.obs import TRACER, span
 from repro.telemetry import decode_expert_episode, routing_events
+
+
+def _span_s(name: str) -> float:
+    """Wall seconds of the most recent completed span called ``name``."""
+    return next(e.dur for e in reversed(TRACER.events()) if e.name == name)
 
 # --- a small MoE with a biased router so routing has real structure
 cfg = get_smoke_config("dbrx_132b")
@@ -60,13 +66,16 @@ def capture_routing(params, cfg: ModelConfig, tokens):
     return jnp.stack(out)  # [L, T, K]
 
 
-topk = np.asarray(capture_routing(params, cfg, toks))
-stream = routing_events(topk, cfg.num_experts, ticks_per_token=1)
+with span("example.capture_routing"):
+    topk = np.asarray(capture_routing(params, cfg, toks))
+    stream = routing_events(topk, cfg.num_experts, ticks_per_token=1)
 print(f"captured {len(stream)} routing events over {T} tokens "
-      f"({topk.shape[0]} layers × top-{cfg.top_k})")
+      f"({topk.shape[0]} layers × top-{cfg.top_k}) "
+      f"in {_span_s('example.capture_routing'):.2f}s")
 
 # mine expert cascades: within-3-token chains, inclusive of simultaneity
-res = mine(stream, intervals=[(0, 3)], theta=int(T * 0.06), max_level=3)
+with span("example.mine_routing"):
+    res = mine(stream, intervals=[(0, 3)], theta=int(T * 0.06), max_level=3)
 lv = res.frequent[-1] if res.frequent[-1].M else res.frequent[-2]
 order = np.argsort(-res.counts[len(res.frequent) - 1]) \
     if res.frequent[-1].M else np.argsort(-res.counts[-2])
@@ -82,6 +91,7 @@ for i in order[:5]:
     print(f"  {path}   ×{int(cnt)}")
     shown += 1
 assert shown > 0
+print(f"mined in {_span_s('example.mine_routing'):.2f}s")
 
 # --- part 2: two electrode-array sessions through the mining service
 from repro.data import partition_windows, sym26  # noqa: E402
@@ -103,16 +113,17 @@ for sid, seed, rate, window_ms in (("culture-a", 0, 20.0, 1000),
           f"(planted chain {truth['short'][0]})")
 
 # interleaved ingest — both cultures are mined concurrently, not in turn
-for j in range(max(len(w) for w in tenants.values())):
-    for sid, wins in tenants.items():
-        if j < len(wins):
-            svc.ingest(sid, wins[j], final=j == len(wins) - 1)
-    svc.pump()
-    for sid in tenants:
-        for d in svc.poll(sid):
-            top = sorted(d.episodes(level=3), key=lambda ec: -ec[1])[:2]
-            print(f"  {sid} window {d.window_idx}: "
-                  f"{d.n_events} events, top 3-episodes {top}")
+with span("example.serve"):
+    for j in range(max(len(w) for w in tenants.values())):
+        for sid, wins in tenants.items():
+            if j < len(wins):
+                svc.ingest(sid, wins[j], final=j == len(wins) - 1)
+        svc.pump()
+        for sid in tenants:
+            for d in svc.poll(sid):
+                top = sorted(d.episodes(level=3), key=lambda ec: -ec[1])[:2]
+                print(f"  {sid} window {d.window_idx}: "
+                      f"{d.n_events} events, top 3-episodes {top}")
 
 stats = svc.stats()
 for sid in tenants:
@@ -120,6 +131,8 @@ for sid in tenants:
     print(f"  {sid}: {s['events_per_sec']:,.0f} ev/s sustained, "
           f"p99 window latency {s['p99_latency_s']*1e3:.0f} ms")
 print(f"  batcher fused {stats['batcher']['fused_requests']} scans into "
-      f"{stats['batcher']['batches']} device batches")
+      f"{stats['batcher']['batches']} device batches over "
+      f"{_span_s('example.serve'):.2f}s; kernel fallbacks "
+      f"{stats['kernel']['fallbacks']}")
 assert all(svc.session(sid).windows_done == len(w)
            for sid, w in tenants.items())

@@ -1,4 +1,4 @@
-"""Pass 1 — AST kernel-contract linter (rules KC101–KC106).
+"""Pass 1 — AST kernel-contract linter (rules KC101–KC107).
 
 Enforces the dispatch-plane conventions the engines already follow, so a
 new engine (or a refactor of an old one) cannot quietly drop them:
@@ -23,6 +23,12 @@ new engine (or a refactor of an old one) cannot quietly drop them:
   KC106  direct ``os.environ`` read of the interpret-mode variables
          outside ``kernels/tally.py``.  One accessor
          (``interpret_requested``) owns the env aliases.
+  KC107  shadow dispatch tally outside the accessor module: a direct
+         ``REGISTRY.counter("kernel_calls", ...)`` write, or a
+         ``KERNEL_CALLS["fallback:..."]`` write instead of
+         ``record_fallback``.  The ``kernel_calls`` registry family is
+         owned by ``kernels/tally.py`` — a second writer lets the audit
+         artifact, the health snapshot, and exported metrics drift.
 
 ``lint_source`` lints one snippet (used by the analyzer's own tests);
 ``lint_tree`` walks a source root and applies ``# audit-ok:`` markers.
@@ -45,6 +51,8 @@ KERNEL_DEF_MODULES = ("kernels/a1_count.py", "kernels/a2_count.py")
 
 INTERPRET_ENV_VARS = ("REPRO_KERNEL_INTERPRET", "REPRO_INTERPRET_KERNELS")
 ENV_ACCESSOR_MODULE = "kernels/tally.py"
+# the registry family kernels/tally.py owns; KC107 rejects other writers
+TALLY_FAMILY = "kernel_calls"
 
 
 def _call_name(node: ast.Call) -> str:
@@ -175,6 +183,31 @@ def lint_source(source: str, path: str) -> list[Finding]:
                     "KC106", path, node.lineno,
                     f"direct os.environ read of {key} — use "
                     "kernels.tally.interpret_requested()"))
+
+        # KC107 — shadow dispatch tally outside the accessor module
+        if not in_accessor:
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in ("counter", "gauge", "histogram") \
+                    and node.args and _const_str(node.args[0]) \
+                    == TALLY_FAMILY:
+                findings.append(Finding(
+                    "KC107", path, node.lineno,
+                    f"direct registry write to the {TALLY_FAMILY!r} "
+                    "family — the dispatch tally is owned by "
+                    "kernels.tally (KERNEL_CALLS / record_fallback)"))
+            if isinstance(node, ast.Subscript) and (
+                    isinstance(node.value, ast.Name)
+                    and node.value.id == "KERNEL_CALLS"
+                    or isinstance(node.value, ast.Attribute)
+                    and node.value.attr == "KERNEL_CALLS"):
+                key = _const_str(node.slice)
+                if key is not None and key.startswith("fallback:"):
+                    findings.append(Finding(
+                        "KC107", path, node.lineno,
+                        f"KERNEL_CALLS[{key!r}] written directly — "
+                        "record a degradation through "
+                        "kernels.tally.record_fallback(site)"))
 
     for fn in funcs:
         # KC102 — untallied raw kernel dispatch outside defining module

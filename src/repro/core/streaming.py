@@ -96,6 +96,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.tally import record_fallback
+from repro.obs import span as _obs_span
 
 from . import candidates as _cand
 from .count_a1 import (A1State, DEFAULT_LCAP, _a1_carry_scan, count_a1,
@@ -420,6 +421,11 @@ class StreamingCounter:
         prepare calls must stay in window order — but none of this depends
         on the *device* state, which is what lets ``run`` overlap window
         p+1's transfer with window p's scan."""
+        with _obs_span("stream.prepare", final=final):
+            return self._prepare_impl(window, final)
+
+    def _prepare_impl(self, window: EventStream | None,
+                      final: bool) -> _Staged:
         if window is None:
             t = tt = _EMPTY_I32
         else:
@@ -486,9 +492,10 @@ class StreamingCounter:
                         out = self.executor.a1_kernel_scan(
                             args, self.eps.N, self.lcap, self._interp)
                     else:
-                        out = self._kops.a1_state_call(
-                            *args, n_levels=self.eps.N, lcap=self.lcap,
-                            interpret=self._interp)
+                        with _obs_span("stream.launch", kind="a1_state"):
+                            out = self._kops.a1_state_call(
+                                *args, n_levels=self.eps.N, lcap=self.lcap,
+                                interpret=self._interp)
                     c, ovf, s, po = out
                     self._kst = (s, po, c, ovf)
                 else:
@@ -499,7 +506,8 @@ class StreamingCounter:
                     if self.executor is not None:
                         s, ptr, c, ovf = self.executor.a1_scan(args)
                     else:
-                        s, ptr, c, ovf = _a1_carry_scan()(*args)
+                        with _obs_span("stream.launch", kind="a1_scan"):
+                            s, ptr, c, ovf = _a1_carry_scan()(*args)
                     self._state = A1State(s=s, ptr=ptr, count=c, ovf=ovf)
         else:
             self._dispatch_mapc(staged)
@@ -529,27 +537,28 @@ class StreamingCounter:
             tau_next = t_f - w
             if tau_next - self._tau_c <= w:
                 return
-        span = tau_next - self._tau_c
-        # device-count-aware segment count: with a sharded residency the
-        # commit wants at least one stitch-safe (> W) segment per mesh
-        # device, so the limit grows to cover the data axis; spans too
-        # short to reach one-segment-per-device keep q < d and take the
-        # single-device launch below (same counts either way)
-        q_limit = max(self.num_segments, self._shard_d)
-        q = 1
-        while q * 2 <= q_limit and span // (q * 2) > w:
-            q *= 2
-        tau = np.round(np.linspace(self._tau_c, tau_next,
-                                   q + 1)).astype(np.int64)
-        tau[0], tau[-1] = self._tau_c, tau_next
-        lo = np.searchsorted(self._buf_tt, tau[:-1] - w, side="right")
-        hi = np.searchsorted(self._buf_tt, tau[1:] + w, side="right")
-        lw = bucket_size(int((hi - lo).max()), self.min_bucket)
-        wt = np.full((q, lw), PAD_TYPE, np.int32)
-        wtt = np.zeros((q, lw), np.int32)
-        for i in range(q):
-            wt[i, : hi[i] - lo[i]] = self._buf_t[lo[i]: hi[i]]
-            wtt[i, : hi[i] - lo[i]] = self._buf_tt[lo[i]: hi[i]]
+        with _obs_span("stream.commit"):
+            span = tau_next - self._tau_c
+            # device-count-aware segment count: with a sharded residency the
+            # commit wants at least one stitch-safe (> W) segment per mesh
+            # device, so the limit grows to cover the data axis; spans too
+            # short to reach one-segment-per-device keep q < d and take the
+            # single-device launch below (same counts either way)
+            q_limit = max(self.num_segments, self._shard_d)
+            q = 1
+            while q * 2 <= q_limit and span // (q * 2) > w:
+                q *= 2
+            tau = np.round(np.linspace(self._tau_c, tau_next,
+                                       q + 1)).astype(np.int64)
+            tau[0], tau[-1] = self._tau_c, tau_next
+            lo = np.searchsorted(self._buf_tt, tau[:-1] - w, side="right")
+            hi = np.searchsorted(self._buf_tt, tau[1:] + w, side="right")
+            lw = bucket_size(int((hi - lo).max()), self.min_bucket)
+            wt = np.full((q, lw), PAD_TYPE, np.int32)
+            wtt = np.zeros((q, lw), np.int32)
+            for i in range(q):
+                wt[i, : hi[i] - lo[i]] = self._buf_t[lo[i]: hi[i]]
+                wtt[i, : hi[i] - lo[i]] = self._buf_tt[lo[i]: hi[i]]
         use_kernel = self._mapc_kernel
         if use_kernel and lw > self._kops.MAX_SEG_BRICK_LW:
             # the padded window brick would exceed segment_bricks'
@@ -572,18 +581,20 @@ class StreamingCounter:
                         kargs, self.eps.N, self.lcap, self._interp,
                         self._shard_d)
                 else:
-                    a, c, b, f, ovf = \
-                        self._kops.a1_mapconcat_sharded_tuples(
-                            *kargs, n_levels=self.eps.N, lcap=self.lcap,
-                            interpret=self._interp,
-                            num_devices=self._shard_d)
+                    with _obs_span("stream.launch", kind="a1_mapc_shard"):
+                        a, c, b, f, ovf = \
+                            self._kops.a1_mapconcat_sharded_tuples(
+                                *kargs, n_levels=self.eps.N, lcap=self.lcap,
+                                interpret=self._interp,
+                                num_devices=self._shard_d)
             elif self.executor is not None:
                 a, c, b, f, ovf = self.executor.mapc_kernel_scan(
                     kargs, self.eps.N, self.lcap, self._interp)
             else:
-                a, c, b, f, ovf = self._kops.a1_mapconcat_tuples(
-                    *kargs, n_levels=self.eps.N, lcap=self.lcap,
-                    interpret=self._interp)
+                with _obs_span("stream.launch", kind="a1_mapc"):
+                    a, c, b, f, ovf = self._kops.a1_mapconcat_tuples(
+                        *kargs, n_levels=self.eps.N, lcap=self.lcap,
+                        interpret=self._interp)
             k, m = self.eps.N, self.eps.M
             self._ovf |= np.asarray(ovf[0, :m] != 0)
             tup = (a[:k, :m], c[:k, :m], b[:k, :m], f[:k, :m] != 0)
@@ -599,7 +610,8 @@ class StreamingCounter:
         if self.executor is not None:
             a, c, b, ovf = self.executor.mapc_scan(margs, self.lcap)
         else:
-            a, c, b, ovf = _map_all_segments(*margs, self.lcap)
+            with _obs_span("stream.launch", kind="mapc_scan"):
+                a, c, b, ovf = _map_all_segments(*margs, self.lcap)
         self._ovf |= np.asarray(ovf.any(axis=(0, 1)))
         i0 = 0
         if self._carry is None:
@@ -735,6 +747,10 @@ class StreamingCounter:
         suffix. Retained history is thereby O(checkpoint interval) windows
         regardless of stream length, and flags no longer accumulate into
         ever-growing genesis recounts."""
+        with _obs_span("stream.checkpoint", engine=self.engine):
+            self._advance_base_impl()
+
+    def _advance_base_impl(self) -> None:
         self._wsb = 0
         t_all, tt_all = self._suffix_concat()
         take = self._suffix_take(tt_all)
@@ -1052,8 +1068,9 @@ class StreamingA2Counter:
                 c, s = self.executor.a2_kernel_scan(args, self.eps.N,
                                                     self._interp)
             else:
-                c, s = self._kops.a2_state_call(
-                    *args, n_levels=self.eps.N, interpret=self._interp)
+                with _obs_span("stream.launch", kind="a2_state"):
+                    c, s = self._kops.a2_state_call(
+                        *args, n_levels=self.eps.N, interpret=self._interp)
             self._kst = (s, c)
             out = np.asarray(c[0, : self.eps.M], np.int64)
         else:
@@ -1069,9 +1086,10 @@ class StreamingA2Counter:
                 self._state = A2State(s=s, count=c)
                 out = np.asarray(c, np.int64)
             else:
-                out, self._state = count_single_slot(
-                    padded, self._relaxed, inclusive_lower=True,
-                    state=self._state, return_state=True)
+                with _obs_span("stream.launch", kind="a2_scan"):
+                    out, self._state = count_single_slot(
+                        padded, self._relaxed, inclusive_lower=True,
+                        state=self._state, return_state=True)
         self.snapshots.append(out)
         self.windows_seen += 1
         return out

@@ -61,6 +61,8 @@ from .a1_count import (a1_count_kernel, a1_count_state_kernel,
 from .a2_count import (DEFAULT_BLOCK_E, LANES, PAD_ROW_TYPE, SEG_ROWS,
                        SUBLANES, a2_count_kernel, a2_count_state_kernel,
                        a2_mapconcat_kernel)
+from repro.obs.jaxprof import annotate
+
 from .tally import KERNEL_CALLS, interpret_requested
 from .tally import record_fallback, reset_kernel_calls  # noqa: F401
 
@@ -157,8 +159,9 @@ def a2_count(stream: EventStream, eps: EpisodeBatch,
     et, tlo, thi = episode_layout(eps, inclusive_lower=True)
     ev = event_layout(stream, with_dup=False)
     KERNEL_CALLS["a2"] += 1
-    out = a2_count_kernel(et, tlo, thi, ev, n_levels=eps.N,
-                          interpret=interpret)
+    with annotate("kernel:a2"):
+        out = a2_count_kernel(et, tlo, thi, ev, n_levels=eps.N,
+                              interpret=interpret)
     return np.asarray(out[0, : eps.M], dtype=np.int64)
 
 
@@ -174,8 +177,9 @@ def a1_count(stream: EventStream, eps: EpisodeBatch, lcap: int = 4,
     et, tlo, thi = episode_layout(eps, inclusive_lower=False)
     ev = event_layout(stream, with_dup=True)
     KERNEL_CALLS["a1"] += 1
-    cnt, ovf = a1_count_kernel(et, tlo, thi, ev, n_levels=eps.N, lcap=lcap,
-                               interpret=interpret)
+    with annotate("kernel:a1"):
+        cnt, ovf = a1_count_kernel(et, tlo, thi, ev, n_levels=eps.N,
+                                   lcap=lcap, interpret=interpret)
     return (np.asarray(cnt[0, : eps.M], dtype=np.int64),
             np.asarray(ovf[0, : eps.M], dtype=bool))
 
@@ -248,9 +252,10 @@ def a1_state_call(et, tlo, thi, ev, s, po, cnt, ovf, *, n_levels: int,
     """One carried A1 chunk in kernel layout (instrumented). Returns
     (cnt, ovf, s, po); the passed state arrays are donated."""
     KERNEL_CALLS["a1_state"] += 1
-    return a1_count_state_kernel(et, tlo, thi, ev, s, po, cnt, ovf,
-                                 n_levels=n_levels, lcap=lcap,
-                                 interpret=interpret)
+    with annotate("kernel:a1_state"):
+        return a1_count_state_kernel(et, tlo, thi, ev, s, po, cnt, ovf,
+                                     n_levels=n_levels, lcap=lcap,
+                                     interpret=interpret)
 
 
 def a2_state_call(et, tlo, thi, ev, s, cnt, *, n_levels: int,
@@ -258,8 +263,9 @@ def a2_state_call(et, tlo, thi, ev, s, cnt, *, n_levels: int,
     """One carried A2 chunk in kernel layout (instrumented). Returns
     (cnt, s); the passed state arrays are donated."""
     KERNEL_CALLS["a2_state"] += 1
-    return a2_count_state_kernel(et, tlo, thi, ev, s, cnt,
-                                 n_levels=n_levels, interpret=interpret)
+    with annotate("kernel:a2_state"):
+        return a2_count_state_kernel(et, tlo, thi, ev, s, cnt,
+                                     n_levels=n_levels, interpret=interpret)
 
 
 # --------------------------------------------------------------------------
@@ -327,17 +333,19 @@ def a1_mapconcat_tuples(et, tlo, thi, cum, w, segs, *, n_levels: int,
     """One segmented A1 launch in kernel layout (instrumented). Returns the
     stitched (a, c, b, f) bricks plus the ovf rows."""
     KERNEL_CALLS["a1_mapc"] += 1
-    return a1_mapconcat_kernel(et, tlo, thi, cum, w, segs,
-                               n_levels=n_levels, lcap=lcap,
-                               interpret=interpret)
+    with annotate("kernel:a1_mapc"):
+        return a1_mapconcat_kernel(et, tlo, thi, cum, w, segs,
+                                   n_levels=n_levels, lcap=lcap,
+                                   interpret=interpret)
 
 
 def a2_mapconcat_tuples(et, tlo, thi, cum, w, segs, *, n_levels: int,
                         interpret: bool):
     """One segmented A2 launch in kernel layout (instrumented)."""
     KERNEL_CALLS["a2_mapc"] += 1
-    return a2_mapconcat_kernel(et, tlo, thi, cum, w, segs,
-                               n_levels=n_levels, interpret=interpret)
+    with annotate("kernel:a2_mapc"):
+        return a2_mapconcat_kernel(et, tlo, thi, cum, w, segs,
+                                   n_levels=n_levels, interpret=interpret)
 
 
 def _mapc_inputs(stream: EventStream, eps: EpisodeBatch, num_segments: int,
@@ -490,7 +498,8 @@ def a1_mapconcat_sharded_tuples(et, tlo, thi, cum, w, segs, *,
     KERNEL_CALLS["a1_mapc_shard"] += num_devices
     fn = _mapc_sharded_fn("a1", n_levels, lcap, interpret, num_devices,
                           lanes=False)
-    return fn(et, tlo, thi, cum, w, segs)
+    with annotate("kernel:a1_mapc_shard"):
+        return fn(et, tlo, thi, cum, w, segs)
 
 
 def a2_mapconcat_sharded_tuples(et, tlo, thi, cum, w, segs, *,
@@ -500,7 +509,8 @@ def a2_mapconcat_sharded_tuples(et, tlo, thi, cum, w, segs, *,
     KERNEL_CALLS["a2_mapc_shard"] += num_devices
     fn = _mapc_sharded_fn("a2", n_levels, 0, interpret, num_devices,
                           lanes=False)
-    return fn(et, tlo, thi, cum, w, segs)
+    with annotate("kernel:a2_mapc_shard"):
+        return fn(et, tlo, thi, cum, w, segs)
 
 
 def _sharded_segments(stream: EventStream, eps: EpisodeBatch,

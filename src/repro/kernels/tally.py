@@ -4,7 +4,8 @@ This module deliberately imports nothing heavy (no jax, no numpy) so the
 pure-XLA engines in ``core/`` can record kernel→XLA downgrades even when
 the Pallas stack itself is unimportable — the ``ImportError`` arm of the
 graceful-degradation ``except`` clauses is exactly the situation in which
-``kernels.ops`` cannot be loaded.
+``kernels.ops`` cannot be loaded.  (``repro.obs.registry`` is pure
+stdlib, so depending on it keeps that property.)
 
 ``KERNEL_CALLS`` tallies host-side kernel dispatches per kind ("a1",
 "a1_state", "a1_mapc", "a1_mapc_shard", the "a2"/"a2_*" analogues) and —
@@ -16,6 +17,14 @@ review; the auditor's KC105 rule now rejects any
 ``except NotImplementedError`` degradation path that does not call
 ``record_fallback``.
 
+Since the obs PR the tally is a *view* over the process-global metrics
+registry: ``KERNEL_CALLS[kind]`` reads/writes the
+``kernel_calls{kind=...}`` counter family in ``repro.obs.REGISTRY``, so
+the audit artifact (``dict(KERNEL_CALLS)``), the service health snapshot,
+and exported metrics are one set of numbers that cannot drift.  Audit
+rule KC107 rejects any shadow tally or direct ``fallback:`` write outside
+this accessor module.
+
 ``interpret_requested`` is the single accessor for the
 ``REPRO_KERNEL_INTERPRET`` / ``REPRO_INTERPRET_KERNELS`` environment
 aliases (both spellings remain accepted; earlier PRs read them
@@ -25,15 +34,56 @@ direct ``os.environ`` reads of either name anywhere else.
 
 from __future__ import annotations
 
-import collections
 import os
+from collections.abc import MutableMapping
+
+from repro.obs.registry import REGISTRY
 
 # Accepted spellings for "run the Pallas kernels in interpret mode".
 # REPRO_KERNEL_INTERPRET is the documented name; the other is a legacy
 # alias kept so existing CI configs and scripts don't break.
 INTERPRET_ENV_VARS = ("REPRO_KERNEL_INTERPRET", "REPRO_INTERPRET_KERNELS")
 
-KERNEL_CALLS: collections.Counter = collections.Counter()
+_FAMILY = "kernel_calls"
+
+
+class _KernelCallsView(MutableMapping):
+    """``collections.Counter``-compatible view over the registry's
+    ``kernel_calls`` family.
+
+    Supports everything the codebase and tests do with the old Counter:
+    ``KERNEL_CALLS[k] += n`` (missing keys read as 0), ``dict(...)``,
+    ``.items()``, ``.clear()``, comparisons against ints. Iteration
+    yields only kinds that have been touched, like a Counter that never
+    stored zero-count keys."""
+
+    def __getitem__(self, kind: str) -> int:
+        for labels, m in REGISTRY.family_items(_FAMILY):
+            if labels.get("kind") == kind:
+                return m.value
+        return 0
+
+    def __setitem__(self, kind: str, value: int) -> None:
+        REGISTRY.counter(_FAMILY, kind=kind)._force_set(value)
+
+    def __delitem__(self, kind: str) -> None:
+        REGISTRY.counter(_FAMILY, kind=kind)._force_set(0)
+
+    def __iter__(self):
+        return iter([labels["kind"]
+                     for labels, _ in REGISTRY.family_items(_FAMILY)])
+
+    def __len__(self) -> int:
+        return len(REGISTRY.family_items(_FAMILY))
+
+    def clear(self) -> None:
+        REGISTRY.clear_family(_FAMILY)
+
+    def __repr__(self) -> str:
+        return f"KERNEL_CALLS({dict(self)})"
+
+
+KERNEL_CALLS = _KernelCallsView()
 
 
 def reset_kernel_calls() -> None:
@@ -48,9 +98,10 @@ def record_fallback(site: str) -> None:
     a kernel dispatch onto an XLA engine must call this, so downgrades
     show up in the same tally the kernel dispatches do —
     ``KERNEL_CALLS["fallback:<site>"]``. Enforced by
-    ``repro.analysis.contracts`` rule KC105.
+    ``repro.analysis.contracts`` rule KC105; writing the ``fallback:``
+    kind anywhere else is a KC107 violation.
     """
-    KERNEL_CALLS["fallback:" + site] += 1
+    REGISTRY.counter(_FAMILY, kind="fallback:" + site).inc()
 
 
 def fallback_counts() -> dict:

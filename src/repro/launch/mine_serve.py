@@ -17,8 +17,12 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import contextlib
+import json
 
 from repro.data import partition_windows, sym26
+from repro.obs import REGISTRY, TRACER
+from repro.obs.jaxprof import capture_step
 from repro.service import (BackpressureError, MiningService, SchedulerPolicy,
                            SessionConfig)
 
@@ -54,6 +58,16 @@ def main():
     ap.add_argument("--no-kernel", action="store_true",
                     help="force the XLA-scan engines (default: carried "
                          "Pallas kernels when the dispatch policy allows)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the serving run's span trace as Chrome "
+                         "trace-event JSON (load in Perfetto / "
+                         "chrome://tracing); PATH.jsonl gets the raw spans")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the final metrics-registry snapshot "
+                         "(flat JSON) after the run")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture one jax.profiler trace of the serving "
+                         "loop into DIR (TensorBoard/Perfetto)")
     args = ap.parse_args()
 
     svc = MiningService(
@@ -82,18 +96,21 @@ def main():
     # interleaved ingest: each producer pushes until backpressure, the
     # scheduler pumps, repeat — the real-time loop in miniature
     shed = 0
-    while any(feeds.values()):
-        for sid, wins in feeds.items():
-            while wins:
-                w, final = wins[0]
-                try:
-                    svc.ingest(sid, w, final=final)
-                except BackpressureError:
-                    shed += 1
-                    break
-                wins.pop(0)
-        svc.pump()
-        _print_deltas(svc, args.max_level)
+    prof = (capture_step(args.profile_dir) if args.profile_dir
+            else contextlib.nullcontext())
+    with prof:
+        while any(feeds.values()):
+            for sid, wins in feeds.items():
+                while wins:
+                    w, final = wins[0]
+                    try:
+                        svc.ingest(sid, w, final=final)
+                    except BackpressureError:
+                        shed += 1
+                        break
+                    wins.pop(0)
+            svc.pump()
+            _print_deltas(svc, args.max_level)
 
     stats = svc.stats()
     agg = stats["aggregate"]
@@ -110,6 +127,18 @@ def main():
         print(f"[serve] batcher fused {stats['batcher']['fused_requests']} "
               f"scans into {stats['batcher']['batches']} device batches; "
               f"backpressure deferrals: {shed}")
+    if stats["kernel"]["fallbacks"] or stats["kernel"]["recompiles"]:
+        print(f"[serve] kernel fallbacks: {stats['kernel']['fallbacks']} "
+              f"recompiles: {stats['kernel']['recompiles']}")
+    if args.trace_out:
+        n = TRACER.export_chrome(args.trace_out)
+        TRACER.export_jsonl(args.trace_out + ".jsonl")
+        print(f"[serve] wrote {n} spans to {args.trace_out} "
+              f"(Perfetto/chrome://tracing) and {args.trace_out}.jsonl")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(REGISTRY.snapshot(), f, indent=2, sort_keys=True)
+        print(f"[serve] wrote metrics snapshot to {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -66,6 +66,7 @@ from repro.core.count_a2 import _a2_scan_core
 from repro.core.events import PAD_TYPE, TIME_NEG_INF
 from repro.core.mapconcat import _map_all_segments
 from repro.core.streaming import bucket_size
+from repro.obs import REGISTRY, span
 
 
 @functools.lru_cache(maxsize=None)
@@ -186,6 +187,8 @@ class CrossSessionBatcher:
         self.batches = 0        # flushes that actually fused >1 request
         self.fused_requests = 0
         self.split_groups = 0   # oversized groups split to cap pad waste
+        self.pad_events = 0     # event slots added padding lanes to max L
+        self.pad_lanes = 0      # repeated lanes padding groups to 2^k
         # adaptive-L guardrail: a lane may be padded to at most this
         # multiple of its own event-buffer length inside a fused group;
         # beyond it the group splits (one tenant's giant windows must not
@@ -283,7 +286,13 @@ class CrossSessionBatcher:
                 return self._run_group([req])[0]
             self._pending.append(req)
             self._maybe_flush_locked()
-        req.event.wait()
+        # the parked time: for a non-leader this covers co-tenant staging
+        # skew plus the leader's flush work (pad/fuse + fused launch); the
+        # flush leader itself ran the flush inside _maybe_flush_locked
+        # above and passes straight through (~0) here.
+        # obs.trace.step_breakdown separates the two.
+        with span("batch.barrier_wait", kind=req.kind):
+            req.event.wait()
         if req.error is not None:
             raise req.error
         return req.result
@@ -340,6 +349,8 @@ class CrossSessionBatcher:
         subs.append(cur)
         if len(subs) > 1:
             self.split_groups += len(subs) - 1
+            REGISTRY.counter("batcher_split_groups_total").inc(
+                len(subs) - 1)
         return subs
 
     @staticmethod
@@ -354,9 +365,12 @@ class CrossSessionBatcher:
     def _run_group(self, group: list[_Request]):
         kind = group[0].kind
         if len(group) == 1:
-            return [self._run_single(group[0])]
+            with span("batch.device_launch", kind=kind, lanes=1):
+                return [self._run_single(group[0])]
         self.batches += 1
         self.fused_requests += len(group)
+        REGISTRY.counter("batcher_batches_total").inc()
+        REGISTRY.counter("batcher_fused_requests_total").inc(len(group))
         s = bucket_size(len(group), 1)
         lanes = group + [group[0]] * (s - len(group))  # pad: repeat lane 0
         # adaptive L re-bucketing: lanes with shorter event buffers pad to
@@ -368,38 +382,52 @@ class CrossSessionBatcher:
         ev_axes = _EV_AXES[kind]
         l_to = max(np.shape(r.args[i])[ax] for r in group
                    for i, ax in ev_axes.items())
-        lane_args = [_pad_events(kind, r.args, l_to) for r in lanes]
-        if kind not in ("a1k", "a2k", "mapck", "mapcs"):  # episode-axis pad
-            lane_args = [_pad_m(p, r.spec, r.mb)
-                         for p, r in zip(lane_args, lanes)]
-        stacked = tuple(jnp.stack([jnp.asarray(p[i]) for p in lane_args])
-                        for i in range(len(group[0].args)))
-        if kind in ("a1k", "a2k", "mapck", "mapcs"):
-            from repro.kernels import ops as kops
-            if kind == "mapcs":
-                d = group[0].static[3]
-                kops.KERNEL_CALLS["a1_mapc_shard"] += len(group) * d
-                out = kops.a1_mapc_sharded_vmapped(
-                    *group[0].static)(*stacked)
-                return [tuple(o[i] for o in out) for i in range(len(group))]
-            kops.KERNEL_CALLS[
-                {"a1k": "a1_state", "a2k": "a2_state",
-                 "mapck": "a1_mapc"}[kind]] += len(group)
-            if kind == "a1k":
-                out = kops.a1_state_vmapped(*group[0].static)(*stacked)
-            elif kind == "a2k":
-                out = kops.a2_state_vmapped(*group[0].static)(*stacked)
+        with span("batch.pad_fuse", kind=kind, lanes=len(group)):
+            waste = sum(
+                l_to - max(np.shape(r.args[i])[ax]
+                           for i, ax in ev_axes.items())
+                for r in group)
+            self.pad_events += waste
+            self.pad_lanes += s - len(group)
+            REGISTRY.counter("batcher_pad_events_total").inc(waste)
+            REGISTRY.counter("batcher_pad_lanes_total").inc(
+                s - len(group))
+            lane_args = [_pad_events(kind, r.args, l_to) for r in lanes]
+            if kind not in ("a1k", "a2k", "mapck", "mapcs"):  # M-axis pad
+                lane_args = [_pad_m(p, r.spec, r.mb)
+                             for p, r in zip(lane_args, lanes)]
+            stacked = tuple(jnp.stack([jnp.asarray(p[i])
+                                       for p in lane_args])
+                            for i in range(len(group[0].args)))
+        with span("batch.device_launch", kind=kind, lanes=len(group)):
+            if kind in ("a1k", "a2k", "mapck", "mapcs"):
+                from repro.kernels import ops as kops
+                if kind == "mapcs":
+                    d = group[0].static[3]
+                    kops.KERNEL_CALLS["a1_mapc_shard"] += len(group) * d
+                    out = kops.a1_mapc_sharded_vmapped(
+                        *group[0].static)(*stacked)
+                    return [tuple(o[i] for o in out)
+                            for i in range(len(group))]
+                kops.KERNEL_CALLS[
+                    {"a1k": "a1_state", "a2k": "a2_state",
+                     "mapck": "a1_mapc"}[kind]] += len(group)
+                if kind == "a1k":
+                    out = kops.a1_state_vmapped(*group[0].static)(*stacked)
+                elif kind == "a2k":
+                    out = kops.a2_state_vmapped(*group[0].static)(*stacked)
+                else:
+                    out = kops.a1_mapc_vmapped(*group[0].static)(*stacked)
+                return [tuple(o[i] for o in out)
+                        for i in range(len(group))]
+            if kind == "a1":
+                out = _vmapped_a1()(*stacked)
+            elif kind == "a2":
+                out = _vmapped_a2()(*stacked)
             else:
-                out = kops.a1_mapc_vmapped(*group[0].static)(*stacked)
-            return [tuple(o[i] for o in out) for i in range(len(group))]
-        if kind == "a1":
-            out = _vmapped_a1()(*stacked)
-        elif kind == "a2":
-            out = _vmapped_a2()(*stacked)
-        else:
-            out = _vmapped_mapc(group[0].static)(*stacked)
-        return [self._slice(r, tuple(o[i] for o in out))
-                for i, r in enumerate(group)]
+                out = _vmapped_mapc(group[0].static)(*stacked)
+            return [self._slice(r, tuple(o[i] for o in out))
+                    for i, r in enumerate(group)]
 
     @staticmethod
     def _run_single(req: _Request):

@@ -28,6 +28,7 @@ import threading
 from collections import deque
 
 from repro.core.events import EventStream
+from repro.obs import REGISTRY, span
 from repro.runtime.ft import StepFailure, StepWatchdog, WatchdogConfig
 
 from .session import MiningSession, SessionConfig, WindowDelta
@@ -72,19 +73,23 @@ class RoundRobinScheduler:
 
     def admit(self, session_id: str, config: SessionConfig) -> MiningSession:
         if session_id in self.sessions:
+            REGISTRY.counter("scheduler_admission_rejected_total").inc()
             raise AdmissionError(f"session {session_id!r} already admitted")
         if len(self.sessions) >= self.policy.max_sessions:
+            REGISTRY.counter("scheduler_admission_rejected_total").inc()
             raise AdmissionError(
                 f"at capacity ({self.policy.max_sessions} sessions); "
                 f"admission of {session_id!r} refused")
         s = MiningSession(session_id, config, executor=self.batcher)
         self.sessions[session_id] = s
         self._rr.append(session_id)
+        REGISTRY.gauge("scheduler_sessions").set(len(self.sessions))
         return s
 
     def evict(self, session_id: str) -> MiningSession:
         s = self.sessions.pop(session_id)
         self._rr = deque(x for x in self._rr if x != session_id)
+        REGISTRY.gauge("scheduler_sessions").set(len(self.sessions))
         return s
 
     # ------------------------------------------------------- ingestion
@@ -93,10 +98,17 @@ class RoundRobinScheduler:
                final: bool = False) -> None:
         s = self.sessions[session_id]
         if s.queue_depth >= self.policy.max_pending_windows:
+            # the producer must shed or spool this window upstream —
+            # count it: shed pressure is the service's earliest overload
+            # signal and invisible in throughput numbers alone
+            REGISTRY.counter("scheduler_backpressure_total").inc()
+            REGISTRY.counter("scheduler_shed_windows_total",
+                             session=session_id).inc()
             raise BackpressureError(
                 f"session {session_id!r} queue at depth {s.queue_depth} "
                 f"(cap {self.policy.max_pending_windows})")
         s.enqueue(window, final=final)
+        REGISTRY.gauge("scheduler_queue_depth").set(self.pending_windows)
 
     @property
     def pending_windows(self) -> int:
@@ -123,6 +135,14 @@ class RoundRobinScheduler:
         chosen = self._choose()
         if not chosen:
             return {}
+        with span("schedule.step", step=self.steps, sessions=len(chosen)):
+            out = self._step_chosen(chosen)
+        REGISTRY.counter("scheduler_steps_total").inc()
+        REGISTRY.gauge("scheduler_queue_depth").set(self.pending_windows)
+        REGISTRY.gauge("scheduler_heartbeat_ts").set_now()
+        return out
+
+    def _step_chosen(self, chosen: list[MiningSession]):
         if not self.policy.retry_snapshots:
             def run_once():
                 try:
@@ -134,12 +154,14 @@ class RoundRobinScheduler:
             out = self.watchdog.run_step(self.steps, run_once)
             self.steps += 1
             return out
-        snapshots = {s.session_id: s.state_dict() for s in chosen}
-        meter_marks = {s.session_id: len(s.meter.rows) for s in chosen}
+        with span("schedule.snapshot", sessions=len(chosen)):
+            snapshots = {s.session_id: s.state_dict() for s in chosen}
+            meter_marks = {s.session_id: len(s.meter.rows) for s in chosen}
         attempt = [0]
 
         def run_batch():
             if attempt[0]:  # retry: rewind every tenant to the snapshot
+                REGISTRY.counter("scheduler_watchdog_retries_total").inc()
                 for s in chosen:
                     # state_dict covers miner state + both queues (results
                     # from the failed attempt are dropped by the reload)

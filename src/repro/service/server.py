@@ -32,6 +32,8 @@ from __future__ import annotations
 import itertools
 
 from repro.core.events import EventStream
+from repro.obs import REGISTRY, span
+from repro.obs.jaxprof import ensure_recompile_listener
 from repro.telemetry import MeterBank
 
 from .batcher import CrossSessionBatcher
@@ -45,6 +47,9 @@ class MiningService:
         self.batcher = CrossSessionBatcher() if batching else None
         self.scheduler = RoundRobinScheduler(policy, self.batcher)
         self._auto_ids = itertools.count()
+        # recompilation is a serving SLO hazard (a shape-bucket miss mid-
+        # stream stalls every fused tenant); count every one from the start
+        ensure_recompile_listener()
 
     # --------------------------------------------------------- sessions
 
@@ -72,7 +77,8 @@ class MiningService:
                final: bool = False) -> None:
         """Queue one partition window (raises ``BackpressureError`` when
         the tenant's queue is full — shed or spool upstream)."""
-        self.scheduler.submit(session_id, window, final=final)
+        with span("service.ingest", session=session_id):
+            self.scheduler.submit(session_id, window, final=final)
 
     def pump(self, max_steps: int | None = None) -> int:
         """Run batched scheduler steps until queues drain (or the step
@@ -88,8 +94,18 @@ class MiningService:
     # ------------------------------------------------------------ stats
 
     def stats(self) -> dict:
-        """Per-session sustained events/sec + latency percentiles, the
-        cross-session aggregate, and batcher fusion counters."""
+        """Full service health snapshot.
+
+        Per-session sustained events/sec + latency percentiles and the
+        cross-session aggregate (the exact meter rows), plus the registry-
+        backed operational counters: scheduler queue/heartbeat gauges,
+        backpressure/shed/retry counts, batcher fusion and pad-waste
+        counters, and the kernel plane's dispatch/fallback/recompile
+        tallies. ``metrics`` is the full flat registry snapshot the
+        structured fields are drawn from — one set of numbers, whether
+        read here, from ``KERNEL_CALLS``, or from ``--metrics-out``."""
+        from repro.kernels.tally import KERNEL_CALLS, fallback_counts
+
         bank = MeterBank()
         for sid, s in self.scheduler.sessions.items():
             bank.meters[sid] = s.meter
@@ -97,12 +113,35 @@ class MiningService:
         out["scheduler"] = {
             "steps": self.scheduler.steps,
             "retries": self.scheduler.watchdog.retries,
+            "watchdog_retries": int(REGISTRY.counter(
+                "scheduler_watchdog_retries_total").value),
             "sessions": len(self.scheduler.sessions),
             "pending_windows": self.scheduler.pending_windows,
+            "queue_depth": int(REGISTRY.gauge(
+                "scheduler_queue_depth").value),
+            "heartbeat_ts": float(REGISTRY.gauge(
+                "scheduler_heartbeat_ts").value),
+            "backpressure": int(REGISTRY.counter(
+                "scheduler_backpressure_total").value),
+            "admission_rejected": int(REGISTRY.counter(
+                "scheduler_admission_rejected_total").value),
         }
         if self.batcher is not None:
             out["batcher"] = {
                 "batches": self.batcher.batches,
                 "fused_requests": self.batcher.fused_requests,
+                "pad_events": self.batcher.pad_events,
+                "pad_lanes": self.batcher.pad_lanes,
+                "split_groups": int(REGISTRY.counter(
+                    "batcher_split_groups_total").value),
             }
+        out["kernel"] = {
+            "calls": {k: v for k, v in sorted(KERNEL_CALLS.items())
+                      if not k.startswith("fallback:")},
+            "fallbacks": fallback_counts(),
+            "recompiles": {labels.get("kernel", "?"): m.value
+                           for labels, m in
+                           REGISTRY.family_items("recompiles")},
+        }
+        out["metrics"] = REGISTRY.snapshot()
         return out

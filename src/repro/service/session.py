@@ -25,6 +25,7 @@ from repro.checkpoint import ckpt
 from repro.core.events import PAD_TYPE, EventStream
 from repro.core.miner import MiningResult
 from repro.core.streaming import StreamingMiner, _state_sub
+from repro.obs import span
 from repro.telemetry import ThroughputMeter
 
 
@@ -120,7 +121,9 @@ class MiningSession:
             return None
         window, final = self.pending.popleft()
         self.meter.start()
-        res = self.miner.update(window, final=final)
+        with span("session.mine_window", session=self.session_id,
+                  window=self.windows_done):
+            res = self.miner.update(window, final=final)
         real = int((window.types != PAD_TYPE).sum())
         self.meter.stop(real)
         delta = WindowDelta(self.windows_done, res, real, final)

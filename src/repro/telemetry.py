@@ -16,6 +16,7 @@ import time
 import numpy as np
 
 from repro.core.events import EventStream
+from repro.obs.registry import REGISTRY
 
 
 class ThroughputMeter:
@@ -29,6 +30,12 @@ class ThroughputMeter:
     first (compile-warming) window excluded, plus p50/p99 window-latency
     percentiles (the serving SLO the multi-tenant scheduler watches).
     ``label`` names the meter (one per session in the mining service).
+
+    Every ``stop()`` also feeds the process-global metrics registry
+    (``repro.obs``): ``session_events_total{session=<label>}`` and the
+    ``window_latency_s{session=<label>}`` histogram — the meter's exact
+    rows stay authoritative for ``summary()``; the registry series are
+    the exported/health-snapshot view of the same measurements.
     """
 
     def __init__(self, label: str | None = None):
@@ -48,6 +55,11 @@ class ThroughputMeter:
         self.spans.append((self._t0, t1))
         self._t0 = None
         self.rows.append((int(n_events), dt))
+        session = self.label if self.label is not None else "_unlabeled"
+        REGISTRY.counter("session_events_total",
+                         session=session).inc(int(n_events))
+        REGISTRY.counter("session_windows_total", session=session).inc()
+        REGISTRY.histogram("window_latency_s", session=session).observe(dt)
         return dt
 
     @property

@@ -64,6 +64,13 @@ CASES = [
      "FLAG = os.environ.get('REPRO_KERNEL_INTERPRET') == '1'\n",
      "from repro.kernels.tally import interpret_requested\n"
      "FLAG = interpret_requested()\n"),
+    ("KC107",
+     "def f():\n"
+     "    REGISTRY.counter('kernel_calls', kind='a1').inc()\n",
+     "def f():\n    KERNEL_CALLS['a1'] += 1\n"),
+    ("KC107",
+     "def f():\n    KERNEL_CALLS['fallback:site'] += 1\n",
+     "def f():\n    record_fallback('site')\n"),
 ]
 
 
@@ -90,6 +97,14 @@ def test_env_accessor_module_exempt_from_kc106():
     src = "import os\nV = os.environ.get('REPRO_INTERPRET_KERNELS')\n"
     assert lint_source(src, "repro/kernels/tally.py") == []
     assert rules_of(lint_source(src, "repro/core/x.py")) == ["KC106"]
+
+
+def test_tally_accessor_module_exempt_from_kc107():
+    src = ("def record_fallback(site):\n"
+           "    REGISTRY.counter('kernel_calls',"
+           " kind='fallback:' + site).inc()\n")
+    assert lint_source(src, "repro/kernels/tally.py") == []
+    assert rules_of(lint_source(src, "repro/core/x.py")) == ["KC107"]
 
 
 def test_suppression_marker_waives_and_reports():
