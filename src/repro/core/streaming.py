@@ -1130,6 +1130,21 @@ class StreamingA2Counter:
                 count=jnp.asarray(d["count"].astype(np.int32))))
 
 
+@dataclasses.dataclass(frozen=True)
+class StagedWindow:
+    """Host-side prepared form of one partition window: PAD stripped and
+    the level-1 type histogram precomputed. Produced by
+    ``StreamingMiner.stage`` so the service scheduler can run this pure
+    host work for window p+1 while window p's scans occupy the device;
+    ``update`` accepts it in place of the raw window. Staging mutates no
+    miner state — a staged window can be dropped (retry rewind) and
+    re-staged freely."""
+
+    stream: EventStream
+    hist: np.ndarray
+    n_events: int
+
+
 class StreamingMiner:
     """Level-wise frequent-episode mining over carried counting machines.
 
@@ -1321,19 +1336,29 @@ class StreamingMiner:
             seed = frequent
         return counts, frequent, survived, seed
 
-    def update(self, window: EventStream, final: bool = False) -> MiningResult:
-        """Mine one partition window; returns a per-window ``MiningResult``
-        (same shape the one-shot miner produces)."""
+    def stage(self, window: EventStream) -> StagedWindow:
+        """Run ``update``'s pure host-side prefix — PAD strip plus the
+        level-1 histogram — without touching miner state, so the scheduler
+        can prepare window p+1 while window p is on device."""
         real = window.types != PAD_TYPE
         w = EventStream(window.types[real], window.times[real],
                         window.num_types)
+        return StagedWindow(w, type_histogram(w), int(real.sum()))
+
+    def update(self, window: EventStream | StagedWindow,
+               final: bool = False) -> MiningResult:
+        """Mine one partition window (raw or pre-``stage``d); returns a
+        per-window ``MiningResult`` (same shape the one-shot miner
+        produces)."""
+        staged = (window if isinstance(window, StagedWindow)
+                  else self.stage(window))
+        w, wh = staged.stream, staged.hist
         if self._num_types is None:
             self._num_types = w.num_types
             self._l1_cum = np.zeros(w.num_types, np.int64)
         frequent, counts, stats = [], [], []
 
         t0 = time.perf_counter()
-        wh = type_histogram(w)
         self._l1_cum += wh
         c1 = _cand.level1(self._num_types)
         if self.mode == "per_window":

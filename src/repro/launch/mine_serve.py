@@ -55,6 +55,20 @@ def main():
     ap.add_argument("--queue-depth", type=int, default=4,
                     help="per-session ingest cap (backpressure beyond)")
     ap.add_argument("--no-batching", action="store_true")
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="step staging depth: 2 double-buffers the next "
+                         "step's host prepare (snapshots, PAD strip, "
+                         "histograms) under the current step's device "
+                         "work; 1 restores the serial schedule")
+    ap.add_argument("--fusion-gate", default="on", choices=["on", "off"],
+                    help="gate cross-session fusion on the measured "
+                         "cost model (off = always fuse multi-lane "
+                         "shape groups)")
+    ap.add_argument("--max-concurrent-lanes", type=int, default=None,
+                    metavar="N",
+                    help="concurrent session threads per batched step "
+                         "(default: host core count, min 2); extra "
+                         "lanes run in later affinity-ordered chunks")
     ap.add_argument("--no-kernel", action="store_true",
                     help="force the XLA-scan engines (default: carried "
                          "Pallas kernels when the dispatch policy allows)")
@@ -72,7 +86,10 @@ def main():
 
     svc = MiningService(
         policy=SchedulerPolicy(max_sessions=max(args.sessions, 1),
-                               max_pending_windows=args.queue_depth),
+                               max_pending_windows=args.queue_depth,
+                               pipeline_depth=args.pipeline_depth,
+                               fusion_gate=args.fusion_gate == "on",
+                               max_concurrent_lanes=args.max_concurrent_lanes),
         batching=not args.no_batching)
 
     feeds = {}
@@ -125,8 +142,13 @@ def main():
               f"p99 {s['p99_latency_s']*1e3:.1f} ms")
     if "batcher" in stats:
         print(f"[serve] batcher fused {stats['batcher']['fused_requests']} "
-              f"scans into {stats['batcher']['batches']} device batches; "
+              f"scans into {stats['batcher']['batches']} device batches "
+              f"over {stats['batcher']['flush_groups']} group flushes; "
+              f"gate: {stats['batcher']['fusion_gate']}; "
               f"backpressure deferrals: {shed}")
+        print(f"[serve] pipeline overlap "
+              f"{stats['scheduler']['pipeline_overlap_s']*1e3:.0f} ms of "
+              f"next-step staging under device work")
     if stats["kernel"]["fallbacks"] or stats["kernel"]["recompiles"]:
         print(f"[serve] kernel fallbacks: {stats['kernel']['fallbacks']} "
               f"recompiles: {stats['kernel']['recompiles']}")

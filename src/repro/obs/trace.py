@@ -12,8 +12,15 @@ Span names are dotted ``layer.phase`` strings; the window lifecycle uses
 
     service.ingest -> schedule.step -> schedule.snapshot ->
     session.mine_window -> stream.prepare -> batch.barrier_wait ->
-    batch.pad_fuse -> batch.device_launch -> stream.launch ->
-    stream.commit -> stream.checkpoint
+    batch.gate -> batch.pad_fuse -> batch.device_launch ->
+    batch.self_launch -> stream.launch -> stream.commit ->
+    stream.checkpoint -> schedule.stage
+
+(``schedule.stage`` is the pipelined scheduler's double-buffered host
+prepare for the *next* step, running on a session thread while other
+lanes hold the device; ``batch.gate`` is a zero-width marker recording
+each flush group's fusion-gate decision; ``batch.self_launch`` is a
+lane's own standalone dispatch when the gate declines fusion.)
 
 Exports: ``export_jsonl`` (one span per line, absolute timestamps) and
 ``export_chrome`` (Chrome trace-event JSON — open in Perfetto or
@@ -36,10 +43,14 @@ SpanEvent = namedtuple("SpanEvent", "name tid t0 dur depth args")
 # session.mine_window contain them and are never summed)
 _HOST_PHASES = frozenset(
     {"stream.prepare", "stream.commit", "stream.checkpoint"})
-_DEVICE_PHASES = frozenset({"stream.launch"})
+# batch.self_launch: a lane's own dispatch when the fusion gate declines
+# to fuse — device time on the lane's thread, same as stream.launch
+_DEVICE_PHASES = frozenset({"stream.launch", "batch.self_launch"})
 _FLUSH_PHASES = frozenset({"batch.pad_fuse", "batch.device_launch"})
 _WAIT_PHASE = "batch.barrier_wait"
 _SNAPSHOT_PHASE = "schedule.snapshot"
+_STAGE_PHASE = "schedule.stage"
+_GATE_PHASE = "batch.gate"
 _STEP_PHASE = "schedule.step"
 _MINE_PHASE = "session.mine_window"
 
@@ -167,6 +178,12 @@ def step_breakdown(events=None, tracer=None) -> dict:
     sums to the step wall modulo thread spawn/join overhead; ``coverage``
     reports the attributed fraction so the benchmark's 10% attribution
     bound is checkable from the output alone.
+
+    Pipelined-scheduler additions: ``stage_s`` is t*'s double-buffered
+    next-step staging (it extends t*'s critical path to the join);
+    ``pipeline_overlap_s`` is *all* lanes' staging inside the step — the
+    host work removed from the next step's serial prepare; ``gate``
+    counts ``batch.gate`` fusion decisions by verdict.
     """
     if events is None:
         events = (tracer or TRACER).events()
@@ -174,9 +191,11 @@ def step_breakdown(events=None, tracer=None) -> dict:
     out = {
         "steps": 0, "wall_s": 0.0, "snapshot_s": 0.0, "bucket_pad_s": 0.0,
         "mine_host_s": 0.0, "barrier_wait_s": 0.0, "pad_fuse_s": 0.0,
-        "device_launch_s": 0.0, "attributed_s": 0.0,
+        "device_launch_s": 0.0, "stage_s": 0.0, "pipeline_overlap_s": 0.0,
+        "attributed_s": 0.0, "gate": {},
     }
-    zero = {"host": 0.0, "dev": 0.0, "wait": 0.0, "flush": 0.0, "mine": 0.0}
+    zero = {"host": 0.0, "dev": 0.0, "wait": 0.0, "flush": 0.0,
+            "mine": 0.0, "stage": 0.0}
     for step in steps:
         w0, w1 = step.t0, step.t0 + step.dur
         inside = [e for e in events
@@ -196,21 +215,31 @@ def step_breakdown(events=None, tracer=None) -> dict:
                 b["flush"] += e.dur
             elif e.name == _MINE_PHASE:
                 b["mine"] += e.dur
+            elif e.name == _STAGE_PHASE:
+                b["stage"] += e.dur
+            elif e.name == _GATE_PHASE and e.args:
+                d = str(e.args.get("decision"))
+                out["gate"][d] = out["gate"].get(d, 0) + 1
         pad_fuse = sum(e.dur for e in inside if e.name == "batch.pad_fuse")
         fused_launch = sum(e.dur for e in inside
                            if e.name == "batch.device_launch")
+        # the step joins every lane thread, and a lane's double-buffered
+        # staging runs after its mining — the critical path is mining (or
+        # its leaf decomposition) plus that thread's staging tail
         star = (max(per_tid.values(),
                     key=lambda b: max(b["mine"], b["host"] + b["dev"]
-                                      + b["wait"] + b["flush"]))
+                                      + b["wait"] + b["flush"])
+                    + b["stage"])
                 if per_tid else dict(zero))
         # t*'s mine_window time not inside any leaf phase: candidate
         # generation and the rest of the level loop's host work
         mine_host = max(star["mine"] - (star["host"] + star["dev"]
                                         + star["wait"] + star["flush"]), 0.0)
-        # other threads' flush-leader work overlaps t*'s barrier wait (the
-        # flush runs under the batcher lock while waiters park on it), so
-        # credit it against the wait — capped at the wait actually seen,
-        # since flushes concurrent with t*'s own work cost the step nothing
+        # other threads' flush work overlaps t*'s barrier wait (whichever
+        # thread completed the group runs the launch while its members
+        # park), so credit it against the wait — capped at the wait
+        # actually seen, since flushes concurrent with t*'s own work cost
+        # the step nothing
         flush_global = pad_fuse + fused_launch
         credit = min(max(flush_global - star["flush"], 0.0), star["wait"])
         flush_attr = star["flush"] + credit
@@ -223,9 +252,15 @@ def step_breakdown(events=None, tracer=None) -> dict:
         out["barrier_wait_s"] += star["wait"] - credit
         out["pad_fuse_s"] += flush_attr * pad_share
         out["device_launch_s"] += flush_attr * (1.0 - pad_share) + star["dev"]
+        out["stage_s"] += star["stage"]
+        # total staging overlapped with the step across all lanes — the
+        # host work the double-buffer removed from the next step's
+        # serial-prepare critical path
+        out["pipeline_overlap_s"] += sum(b["stage"]
+                                         for b in per_tid.values())
         out["attributed_s"] += (snapshot + star["host"] + star["dev"]
                                 + mine_host + (star["wait"] - credit)
-                                + flush_attr)
+                                + flush_attr + star["stage"])
     out["coverage"] = (out["attributed_s"] / out["wall_s"]
                        if out["wall_s"] > 0 else 0.0)
     return out

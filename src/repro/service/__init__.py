@@ -3,14 +3,17 @@ service" framing): many concurrent electrode-array sessions share the
 devices through cross-session batched streaming with bounded per-session
 memory."""
 
-from .batcher import CrossSessionBatcher
+from .batcher import CrossSessionBatcher, FusionCostModel
 from .scheduler import (AdmissionError, BackpressureError,
-                        RoundRobinScheduler, SchedulerPolicy)
+                        RoundRobinScheduler, SchedulerPolicy,
+                        UnknownSessionError)
 from .server import MiningService
-from .session import MiningSession, SessionConfig, WindowDelta
+from .session import (MiningSession, PreparedStep, SessionConfig,
+                      WindowDelta)
 
 __all__ = [
     "MiningService", "MiningSession", "SessionConfig", "WindowDelta",
-    "CrossSessionBatcher", "RoundRobinScheduler", "SchedulerPolicy",
-    "AdmissionError", "BackpressureError",
+    "PreparedStep", "CrossSessionBatcher", "FusionCostModel",
+    "RoundRobinScheduler", "SchedulerPolicy",
+    "AdmissionError", "BackpressureError", "UnknownSessionError",
 ]

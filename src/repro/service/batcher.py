@@ -1,27 +1,42 @@
-"""Cross-session batching: one padded, shape-bucketed device batch per
-scan kind, vmapped over a session axis.
+"""Cross-session batching: shape-bucketed device batches per scan kind,
+vmapped over a session axis, with group-scoped flushes and a measured
+fusion gate.
 
 The multi-tenant service advances many ``MiningSession``s concurrently.
 Each session's miner bottoms out in a handful of jit'd scans (A1
 bounded-list, A2 single-slot, MapConcatenate segment map); running S
 sessions naively issues S small dispatches per level per window. This
-module is the barrier executor that turns those into one dispatch per
-shape bucket:
+module is the executor that turns those into one dispatch per shape
+bucket:
 
 * each session step runs in its own worker thread and installs this
   executor into its counters (``StreamingCounter.executor`` seam);
 * a counter's scan call becomes ``submit()`` — the thread parks on an
   event;
-* when every in-flight session step is parked (or finished), the *last*
-  arriver becomes the flush leader: it groups the pending requests by
-  shape bucket, stacks each group's operands along a new leading session
-  axis, runs one jit'd ``vmap`` of the underlying scan per bucket, and
-  scatters the per-lane results back.
+* each pending shape-group flushes **the moment its own members are
+  parked** (group-scoped flush): expected membership per group is
+  learned from the session's previous step's request keys (or declared
+  at ``begin_step``), so a group never waits on tenants that were never
+  going to join it. The thread whose submit (or ``end_step``) completes
+  a group executes its flush: it stacks the group's operands along a new
+  leading session axis and runs one jit'd ``vmap`` of the underlying
+  scan, scattering per-lane results back. Singleton lanes dispatch
+  immediately through the plain unvmapped call. Sessions with no
+  prediction yet (first step) are wildcards — all groups then wait for
+  every live step to park, the old global barrier — and a
+  ``flush_deadline_s`` timeout force-flushes a group should a stale
+  prediction ever strand it.
+* fusion is **cost-gated** (``FusionCostModel``): per-(key, lane-bucket)
+  EWMAs of fused vs standalone launch seconds, fed from the flush paths'
+  own timings, decide per group whether the vmapped launch actually
+  beats per-lane dispatches; losing groups release their lanes to
+  launch concurrently (``batch.self_launch``). Decisions are exported
+  as ``batcher_fusion_gate_total{decision=...}``.
 
-The carried Pallas kernels ride the same barrier: ``a1_kernel_scan`` /
+The carried Pallas kernels ride the same protocol: ``a1_kernel_scan`` /
 ``a2_kernel_scan`` take operands already in kernel brick layout (every
 lane in a group shares (NP, LCAP, MP, EP) shapes — the counters'
-shape-bucketed staging guarantees that), and the flush leader runs one
+shape-bucketed staging guarantees that), and a fused flush runs one
 ``vmap`` of the state-in/state-out ``pallas_call`` per group (Pallas
 lowers the mapped session axis onto the grid, so the whole fleet's
 machines advance in a single kernel launch). Lane results come back in
@@ -55,7 +70,10 @@ giant windows cap — rather than multiply — the fleet's pad waste.
 from __future__ import annotations
 
 import functools
+import itertools
 import threading
+import time
+from collections import Counter, deque
 
 import jax
 import jax.numpy as jnp
@@ -151,9 +169,61 @@ def _pad_events(kind: str, args, l_to: int):
     return tuple(args)
 
 
+class FusionCostModel:
+    """Measured fusion gate: EWMA launch costs fed from the flush paths.
+
+    ``observe_fused`` records pad/fuse + vmapped-launch seconds for a
+    (key, power-of-two lane bucket) combo; ``observe_single`` one plain
+    dispatch of the same key. The first sample of every combo carries
+    the jit compile and is discarded — the gate compares steady states.
+    ``decide`` returns ``"fuse"`` when the fused estimate beats
+    ``threshold`` × lanes × the standalone estimate, and also while
+    either side is still unmeasured: fusing is the optimistic prior (it
+    is the only way to measure the fused side, and forcing per-lane
+    probe rounds would pay the standalone jit compiles *on top of* the
+    fused ones — ruinous on compile-bound hosts). Standalone estimates
+    accrue organically from singleton flushes and declined groups.
+    ``"standalone"`` means the measurement says per-lane dispatches
+    win."""
+
+    def __init__(self, alpha: float = 0.25, threshold: float = 1.0):
+        self.alpha = alpha
+        self.threshold = threshold
+        self._fused: dict = {}   # (key, lane bucket) -> EWMA seconds
+        self._single: dict = {}  # key -> EWMA seconds
+        self._warm: set = set()  # combos whose compile sample is spent
+
+    def _ewma(self, table: dict, key, dt: float) -> None:
+        prev = table.get(key)
+        table[key] = dt if prev is None else prev + self.alpha * (dt - prev)
+
+    def observe_fused(self, key, lanes: int, dt: float) -> None:
+        k = ("f", key, bucket_size(lanes, 1))
+        if k not in self._warm:
+            self._warm.add(k)
+            return
+        self._ewma(self._fused, (key, bucket_size(lanes, 1)), dt)
+
+    def observe_single(self, key, dt: float) -> None:
+        k = ("s", key)
+        if k not in self._warm:
+            self._warm.add(k)
+            return
+        self._ewma(self._single, key, dt)
+
+    def decide(self, key, lanes: int) -> str:
+        single = self._single.get(key)
+        fused = self._fused.get((key, bucket_size(lanes, 1)))
+        if fused is None or single is None:
+            return "fuse"  # optimistic until both sides are measured
+        if fused <= self.threshold * lanes * single:
+            return "fuse"
+        return "standalone"
+
+
 class _Request:
     __slots__ = ("kind", "key", "args", "spec", "static", "m", "mb",
-                 "event", "result", "error")
+                 "event", "result", "error", "sid", "run_self")
 
     def __init__(self, kind, key, args, spec, static, m, mb):
         self.kind = kind
@@ -166,29 +236,58 @@ class _Request:
         self.event = threading.Event()
         self.result = None
         self.error = None
+        self.sid = None       # owning step's session id
+        self.run_self = False  # gate verdict: owner launches its own lane
 
 
 class CrossSessionBatcher:
-    """Barrier executor for cross-session scan batching.
+    """Group-scoped flush executor for cross-session scan batching.
 
-    Protocol (driven by the scheduler): call ``begin_step()`` once per
-    session step about to run, run each step in its own thread, have the
-    step call ``end_step()`` when done. Counters inside the step call
-    ``a1_scan``/``a2_scan``/``mapc_scan``, which block until the flush
-    leader executes the batch. Single-request groups fall through to the
-    plain (unvmapped) dispatch so a lone tenant pays no batching tax and
-    shares jit caches with standalone runs.
-    """
+    Protocol (driven by the scheduler): ``begin_step(session_id)`` once
+    per session step about to run — from the dispatching thread, before
+    any worker starts, so no group ever flushes early because a slow
+    thread had not registered yet. Each step then runs in its own worker
+    thread, which calls ``bind_session(session_id)`` first and
+    ``end_step(session_id)`` when the step finishes, error or not (that
+    re-check is what keeps co-tenants from wedging when a step dies
+    before its first submit). Counters inside the step call
+    ``a1_scan``/``a2_scan``/``mapc_scan``, which park until their shape
+    group flushes; single-request groups fall through to the plain
+    (unvmapped) dispatch so a lone tenant pays no batching tax and
+    shares jit caches with standalone runs. Anonymous ``begin_step()``
+    (legacy callers) registers a wildcard step that the first unbound
+    submitting thread claims — an all-wildcard fleet reproduces the old
+    all-parked global barrier exactly."""
 
-    def __init__(self, max_pad_ratio: float = 4.0):
+    def __init__(self, max_pad_ratio: float = 4.0,
+                 fusion_gate: bool = True,
+                 flush_deadline_s: float = 0.5):
         self._lock = threading.Lock()
-        self._pending: list[_Request] = []
-        self._inflight = 0
+        self._local = threading.local()
+        # group-scoped flush state: pending requests per shape key, the
+        # live step set, and per-step predicted/observed key multisets
+        self._pending: dict[tuple, list[_Request]] = {}
+        self._alive: set[str] = set()
+        self._wildcard: set[str] = set()      # steps with no prediction
+        self._remaining: dict[str, Counter] = {}  # predicted, not yet seen
+        self._seen: dict[str, Counter] = {}       # submitted this step
+        self._predicted: dict[str, Counter] = {}  # learned at end_step
+        self._parked: Counter = Counter()         # parked requests per step
+        self._anon_pool: deque[str] = deque()
+        self._anon_ids = itertools.count()
+        self.cost_model = FusionCostModel()
+        self.fusion_gate = fusion_gate
+        # safety net for stale predictions: a parked group force-flushes
+        # after this many seconds even if a predicted member never shows
+        self.flush_deadline_s = flush_deadline_s
         self.batches = 0        # flushes that actually fused >1 request
         self.fused_requests = 0
         self.split_groups = 0   # oversized groups split to cap pad waste
         self.pad_events = 0     # event slots added padding lanes to max L
         self.pad_lanes = 0      # repeated lanes padding groups to 2^k
+        self.flush_groups = 0   # group flushes, any gate decision
+        self.deadline_flushes = 0
+        self.gate_decisions: Counter = Counter()
         # adaptive-L guardrail: a lane may be padded to at most this
         # multiple of its own event-buffer length inside a fused group;
         # beyond it the group splits (one tenant's giant windows must not
@@ -267,59 +366,197 @@ class CrossSessionBatcher:
 
     # --------------------------------------------------- step accounting
 
-    def begin_step(self) -> None:
+    def begin_step(self, session: str | None = None, expected=None) -> str:
+        """Register one session step about to run. ``session`` names the
+        tenant so its flush-group membership can be predicted from its
+        previous step's request keys; ``expected`` (an iterable of
+        request keys, duplicates meaning counts) declares the membership
+        explicitly and overrides the learned prediction. An anonymous
+        step (no session) is a wildcard — every group waits for it to
+        park or finish, the old global-barrier behavior."""
         with self._lock:
-            self._inflight += 1
+            sid = session
+            if sid is None:
+                sid = f"anon-{next(self._anon_ids)}"
+                self._anon_pool.append(sid)
+            self._alive.add(sid)
+            self._seen[sid] = Counter()
+            pred = (Counter(expected) if expected is not None
+                    else self._predicted.get(sid))
+            if pred is None:
+                self._wildcard.add(sid)
+                self._remaining[sid] = Counter()
+            else:
+                self._wildcard.discard(sid)
+                self._remaining[sid] = Counter(pred)
+            return sid
 
-    def end_step(self) -> None:
+    def bind_session(self, session: str) -> None:
+        """Tie the calling thread's submissions to ``session``'s step."""
+        self._local.sid = session
+
+    def end_step(self, session: str | None = None) -> None:
+        """Retire a step: record its submitted keys as the session's next
+        prediction and re-check every pending group — a step that ends
+        without submitting (early error included) must release any group
+        that was waiting on it."""
         with self._lock:
-            self._inflight -= 1
-            self._maybe_flush_locked()
+            sid = (session if session is not None
+                   else self._thread_sid_locked())
+            self._local.sid = None
+            if sid is not None:
+                self._alive.discard(sid)
+                self._wildcard.discard(sid)
+                seen = self._seen.pop(sid, None)
+                if seen is not None:
+                    self._predicted[sid] = seen
+                self._remaining.pop(sid, None)
+                self._parked.pop(sid, None)
+            ready = self._collect_ready_locked()
+        self._run_flushes(ready)
+
+    def forget(self, session: str) -> None:
+        """Drop an (evicted) session's learned membership prediction."""
+        with self._lock:
+            self._predicted.pop(session, None)
+
+    def predicted_signature(self, session: str) -> tuple | None:
+        """The session's learned shape-group membership as a sortable
+        signature (or None before its first completed step). The
+        scheduler orders a step's lanes by this so tenants that will
+        park on the same flush groups run in the same bounded-width
+        chunk — with fewer concurrent lanes than sessions, adjacency is
+        what keeps groups filling instead of timing out."""
+        with self._lock:
+            pred = self._predicted.get(session)
+        if not pred:
+            return None
+        return tuple(sorted(str(k) for k in pred))
+
+    def _thread_sid_locked(self) -> str | None:
+        sid = getattr(self._local, "sid", None)
+        if sid is not None and sid in self._alive:
+            return sid
+        if self._anon_pool:  # unbound thread claims an anonymous step
+            sid = self._local.sid = self._anon_pool.popleft()
+            return sid
+        return None
 
     # ----------------------------------------------------------- engine
 
     def _submit(self, req: _Request):
         with self._lock:
-            if self._inflight == 0:
-                # no barrier in effect (counter used outside a scheduled
-                # step): degenerate to the direct dispatch
-                return self._run_group([req])[0]
-            self._pending.append(req)
-            self._maybe_flush_locked()
-        # the parked time: for a non-leader this covers co-tenant staging
-        # skew plus the leader's flush work (pad/fuse + fused launch); the
-        # flush leader itself ran the flush inside _maybe_flush_locked
-        # above and passes straight through (~0) here.
-        # obs.trace.step_breakdown separates the two.
+            sid = self._thread_sid_locked() if self._alive else None
+            if sid is not None:
+                req.sid = sid
+                self._seen[sid][req.key] += 1
+                rem = self._remaining.get(sid)
+                if rem is not None and rem[req.key] > 0:
+                    rem[req.key] -= 1
+                self._pending.setdefault(req.key, []).append(req)
+                self._parked[sid] += 1
+                ready = self._collect_ready_locked()
+        if sid is None:
+            # no step barrier applies to this thread (counter used outside
+            # a scheduled step): degenerate to the direct dispatch
+            return self._run_single_timed(req)
+        self._run_flushes(ready)
+        # the parked time: co-tenant staging skew plus whichever thread
+        # executes this group's flush (it completed the group, so it runs
+        # the launch while we park). obs.trace.step_breakdown separates
+        # wait from flush work.
         with span("batch.barrier_wait", kind=req.kind):
-            req.event.wait()
+            while not req.event.wait(timeout=self.flush_deadline_s):
+                late = []
+                with self._lock:
+                    if not req.event.is_set() and req.key in self._pending:
+                        # a predicted member never showed and never parked
+                        # elsewhere — stale prediction; force the flush
+                        self.deadline_flushes += 1
+                        REGISTRY.counter(
+                            "batcher_deadline_flush_total").inc()
+                        late = self._take_group_locked(req.key)
+                self._run_flushes(late)
+        if req.run_self:
+            # gate chose per-lane dispatch: every owner thread launches
+            # its own request concurrently (XLA releases the GIL), which
+            # is also the standalone measurement the cost model needs
+            return self._run_single_timed(req)
         if req.error is not None:
             raise req.error
         return req.result
 
-    def _maybe_flush_locked(self) -> None:
-        """Flush when every in-flight step is parked on a pending request.
-        Called with the lock held; at that moment no other session thread
-        is runnable, so executing under the lock is race-free."""
-        if not self._pending or len(self._pending) < self._inflight:
-            return
-        pending, self._pending = self._pending, []
-        groups: dict[tuple, list[_Request]] = {}
-        for r in pending:
-            groups.setdefault(r.key, []).append(r)
-        for whole in groups.values():
-            for group in self._split_oversized(whole):
-                self._flush_group(group)
+    # Flush-readiness, with the lock held. A group may flush when every
+    # live step is accounted for: parked on this key, parked on another
+    # key (a thread is in one place at a time — if it is expected here
+    # too, it joins a later flush of this key instead of wedging two
+    # groups against each other), finished, or not predicted to submit
+    # this key. Wildcard steps (no prediction) hold every group until
+    # they park or end.
+    def _group_ready_locked(self, key) -> bool:
+        here = {r.sid for r in self._pending[key]}
+        for sid in self._alive:
+            if sid in here or self._parked[sid] > 0:
+                continue
+            if sid in self._wildcard or self._remaining[sid][key] > 0:
+                return False
+        return True
 
-    def _flush_group(self, group: list[_Request]) -> None:
+    def _collect_ready_locked(self) -> list[list[_Request]]:
+        ready = []
+        for key in list(self._pending):
+            if self._group_ready_locked(key):
+                ready.extend(self._take_group_locked(key))
+        return ready
+
+    def _take_group_locked(self, key) -> list[list[_Request]]:
+        group = self._pending.pop(key, [])
+        if not group:
+            return []
+        for r in group:
+            self._parked[r.sid] -= 1
+        self.flush_groups += 1
+        REGISTRY.counter("batcher_flush_groups_total").inc()
+        return [group]
+
+    def _run_flushes(self, groups: list[list[_Request]]) -> None:
+        """Execute flushed groups OUTSIDE the lock: other groups keep
+        collecting and flushing concurrently — that overlap (one group's
+        device launch against another's host staging) is the point of
+        group-scoped flushes."""
+        for group in groups:
+            for sub in self._split_oversized(group):
+                self._dispatch_group(sub)
+
+    def _dispatch_group(self, sub: list[_Request]) -> None:
+        kind, key, lanes = sub[0].kind, sub[0].key, len(sub)
+        if lanes == 1:
+            decision = "singleton"
+        elif not self.fusion_gate:
+            decision = "fuse"
+        else:
+            decision = self.cost_model.decide(key, lanes)
+        with self._lock:
+            self.gate_decisions[decision] += 1
+        REGISTRY.counter("batcher_fusion_gate_total",
+                         decision=decision).inc()
+        with span("batch.gate", kind=kind, lanes=lanes, decision=decision):
+            pass  # zero-width marker: step_breakdown tallies decisions
+        if decision != "fuse":
+            # singleton fall-through or measured loss: release every
+            # lane to run its own plain dispatch
+            for r in sub:
+                r.run_self = True
+                r.event.set()
+            return
         try:
-            results = self._run_group(group)
-            for r, out in zip(group, results):
+            results = self._run_fused(sub)
+            for r, out in zip(sub, results):
                 r.result = out
         except Exception as e:  # surface in every parked thread
-            for r in group:
+            for r in sub:
                 r.error = e
-        for r in group:
+        for r in sub:
             r.event.set()
 
     def _split_oversized(self, group: list[_Request]):
@@ -348,7 +585,8 @@ class CrossSessionBatcher:
                 cur.append(r)
         subs.append(cur)
         if len(subs) > 1:
-            self.split_groups += len(subs) - 1
+            with self._lock:
+                self.split_groups += len(subs) - 1
             REGISTRY.counter("batcher_split_groups_total").inc(
                 len(subs) - 1)
         return subs
@@ -362,13 +600,12 @@ class CrossSessionBatcher:
             return tuple(o[..., :req.m] for o in out)
         return tuple(o[:req.m] for o in out)
 
-    def _run_group(self, group: list[_Request]):
-        kind = group[0].kind
-        if len(group) == 1:
-            with span("batch.device_launch", kind=kind, lanes=1):
-                return [self._run_single(group[0])]
-        self.batches += 1
-        self.fused_requests += len(group)
+    def _run_fused(self, group: list[_Request]):
+        kind, key = group[0].kind, group[0].key
+        t0 = time.perf_counter()
+        with self._lock:
+            self.batches += 1
+            self.fused_requests += len(group)
         REGISTRY.counter("batcher_batches_total").inc()
         REGISTRY.counter("batcher_fused_requests_total").inc(len(group))
         s = bucket_size(len(group), 1)
@@ -387,8 +624,9 @@ class CrossSessionBatcher:
                 l_to - max(np.shape(r.args[i])[ax]
                            for i, ax in ev_axes.items())
                 for r in group)
-            self.pad_events += waste
-            self.pad_lanes += s - len(group)
+            with self._lock:
+                self.pad_events += waste
+                self.pad_lanes += s - len(group)
             REGISTRY.counter("batcher_pad_events_total").inc(waste)
             REGISTRY.counter("batcher_pad_lanes_total").inc(
                 s - len(group))
@@ -407,27 +645,47 @@ class CrossSessionBatcher:
                     kops.KERNEL_CALLS["a1_mapc_shard"] += len(group) * d
                     out = kops.a1_mapc_sharded_vmapped(
                         *group[0].static)(*stacked)
-                    return [tuple(o[i] for o in out)
-                            for i in range(len(group))]
-                kops.KERNEL_CALLS[
-                    {"a1k": "a1_state", "a2k": "a2_state",
-                     "mapck": "a1_mapc"}[kind]] += len(group)
-                if kind == "a1k":
-                    out = kops.a1_state_vmapped(*group[0].static)(*stacked)
-                elif kind == "a2k":
-                    out = kops.a2_state_vmapped(*group[0].static)(*stacked)
                 else:
-                    out = kops.a1_mapc_vmapped(*group[0].static)(*stacked)
-                return [tuple(o[i] for o in out)
-                        for i in range(len(group))]
-            if kind == "a1":
-                out = _vmapped_a1()(*stacked)
-            elif kind == "a2":
-                out = _vmapped_a2()(*stacked)
+                    kops.KERNEL_CALLS[
+                        {"a1k": "a1_state", "a2k": "a2_state",
+                         "mapck": "a1_mapc"}[kind]] += len(group)
+                    if kind == "a1k":
+                        out = kops.a1_state_vmapped(
+                            *group[0].static)(*stacked)
+                    elif kind == "a2k":
+                        out = kops.a2_state_vmapped(
+                            *group[0].static)(*stacked)
+                    else:
+                        out = kops.a1_mapc_vmapped(
+                            *group[0].static)(*stacked)
+                results = [tuple(o[i] for o in out)
+                           for i in range(len(group))]
             else:
-                out = _vmapped_mapc(group[0].static)(*stacked)
-            return [self._slice(r, tuple(o[i] for o in out))
-                    for i, r in enumerate(group)]
+                if kind == "a1":
+                    out = _vmapped_a1()(*stacked)
+                elif kind == "a2":
+                    out = _vmapped_a2()(*stacked)
+                else:
+                    out = _vmapped_mapc(group[0].static)(*stacked)
+                results = [self._slice(r, tuple(o[i] for o in out))
+                           for i, r in enumerate(group)]
+        with self._lock:
+            self.cost_model.observe_fused(key, len(group),
+                                          time.perf_counter() - t0)
+        return results
+
+    def _run_single_timed(self, req: _Request):
+        """One lane's plain dispatch, in the owning thread, timed for the
+        cost model. ``batch.self_launch`` is a per-thread device phase in
+        ``step_breakdown`` — concurrent self-launches must not read as
+        serialized flush work."""
+        t0 = time.perf_counter()
+        with span("batch.self_launch", kind=req.kind):
+            out = self._run_single(req)
+        with self._lock:
+            self.cost_model.observe_single(req.key,
+                                           time.perf_counter() - t0)
+        return out
 
     @staticmethod
     def _run_single(req: _Request):

@@ -44,7 +44,10 @@ from .session import MiningSession, SessionConfig, WindowDelta
 class MiningService:
     def __init__(self, policy: SchedulerPolicy | None = None,
                  batching: bool = True):
-        self.batcher = CrossSessionBatcher() if batching else None
+        policy = policy or SchedulerPolicy()
+        self.batcher = CrossSessionBatcher(
+            fusion_gate=policy.fusion_gate,
+            flush_deadline_s=policy.flush_deadline_s) if batching else None
         self.scheduler = RoundRobinScheduler(policy, self.batcher)
         self._auto_ids = itertools.count()
         # recompilation is a serving SLO hazard (a shape-bucket miss mid-
@@ -63,13 +66,13 @@ class MiningService:
 
     def close_session(self, session_id: str) -> MiningSession:
         """Drain the session's remaining windows, then remove it."""
-        s = self.scheduler.sessions[session_id]
+        s = self.scheduler.session(session_id)
         while s.queue_depth:
             self.scheduler.step()
         return self.scheduler.evict(session_id)
 
     def session(self, session_id: str) -> MiningSession:
-        return self.scheduler.sessions[session_id]
+        return self.scheduler.session(session_id)
 
     # ------------------------------------------------------ ingest/poll
 
@@ -89,7 +92,7 @@ class MiningService:
     def poll(self, session_id: str,
              max_items: int | None = None) -> list[WindowDelta]:
         """Per-window frequent-episode deltas mined since the last poll."""
-        return self.scheduler.sessions[session_id].poll(max_items)
+        return self.scheduler.session(session_id).poll(max_items)
 
     # ------------------------------------------------------------ stats
 
@@ -125,6 +128,7 @@ class MiningService:
                 "scheduler_backpressure_total").value),
             "admission_rejected": int(REGISTRY.counter(
                 "scheduler_admission_rejected_total").value),
+            "pipeline_overlap_s": self.scheduler.pipeline_overlap_s,
         }
         if self.batcher is not None:
             out["batcher"] = {
@@ -134,6 +138,9 @@ class MiningService:
                 "pad_lanes": self.batcher.pad_lanes,
                 "split_groups": int(REGISTRY.counter(
                     "batcher_split_groups_total").value),
+                "flush_groups": self.batcher.flush_groups,
+                "deadline_flushes": self.batcher.deadline_flushes,
+                "fusion_gate": dict(self.batcher.gate_decisions),
             }
         out["kernel"] = {
             "calls": {k: v for k, v in sorted(KERNEL_CALLS.items())

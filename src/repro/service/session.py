@@ -22,9 +22,9 @@ from pathlib import Path
 import numpy as np
 
 from repro.checkpoint import ckpt
-from repro.core.events import PAD_TYPE, EventStream
+from repro.core.events import EventStream
 from repro.core.miner import MiningResult
-from repro.core.streaming import StreamingMiner, _state_sub
+from repro.core.streaming import StagedWindow, StreamingMiner, _state_sub
 from repro.obs import span
 from repro.telemetry import ThroughputMeter
 
@@ -88,8 +88,36 @@ class WindowDelta:
         return out
 
 
+@dataclasses.dataclass
+class PreparedStep:
+    """One window's host-side preparation, ready for device execution.
+
+    Produced by ``MiningSession.prepare``: the raw window (so an evicted
+    prep can be re-queued), its ``StagedWindow`` (PAD strip + histogram
+    already done), the retry ``state_dict`` snapshot, and the meter
+    rewind mark. The scheduler double-buffers these — step p+1's preps
+    are built on session threads while step p's scans hold the device —
+    then runs ``execute`` and ``commit``."""
+
+    window: EventStream
+    final: bool
+    window_idx: int
+    staged: StagedWindow
+    snapshot: dict | None
+    meter_mark: int
+
+
 class MiningSession:
-    """A tenant's streaming miner plus its ingest/result queues."""
+    """A tenant's streaming miner plus its ingest/result queues.
+
+    The step lifecycle is split for the pipelined scheduler:
+    ``prepare()`` pops the next window and does every host-only piece
+    (retry snapshot, meter mark, PAD strip, histogram); ``execute()``
+    runs the miner update (the device work); ``commit()`` publishes the
+    delta. ``step()`` composes the three for serial callers. A prepared
+    step that will not run — watchdog rewind, eviction — is returned to
+    the queue with ``unstage()`` (or dropped with ``discard()`` when a
+    snapshot restore is about to re-queue its window anyway)."""
 
     def __init__(self, session_id: str, config: SessionConfig,
                  executor=None, max_results: int = 256):
@@ -100,6 +128,7 @@ class MiningSession:
         self.pending: deque[tuple[EventStream, bool]] = deque()
         self.results: deque[WindowDelta] = deque(maxlen=max_results)
         self.windows_done = 0
+        self.staged_count = 0  # prepared-but-uncommitted windows
         self.closed = False
 
     # ------------------------------------------------------------- data
@@ -112,24 +141,65 @@ class MiningSession:
 
     @property
     def queue_depth(self) -> int:
-        return len(self.pending)
+        # staged windows still count: backpressure, drain, and close must
+        # see prepared-but-uncommitted work as queued
+        return len(self.pending) + self.staged_count
+
+    def prepare(self, snapshot: bool = True) -> PreparedStep | None:
+        """Host-side half of a step: snapshot (retry insurance — taken
+        *before* the pop so a restore re-queues the window), pop the
+        oldest pending window, and stage it. Mines nothing."""
+        if not self.pending:
+            return None
+        snap = self.state_dict() if snapshot else None
+        mark = self.meter.mark()
+        window, final = self.pending.popleft()
+        staged = self.miner.stage(window)
+        prep = PreparedStep(window, final,
+                            self.windows_done + self.staged_count,
+                            staged, snap, mark)
+        self.staged_count += 1
+        return prep
+
+    def execute(self, prep: PreparedStep) -> WindowDelta:
+        """Device half: run the miner over the staged window (this is
+        where the step parks in the cross-session batcher)."""
+        self.meter.start()
+        with span("session.mine_window", session=self.session_id,
+                  window=prep.window_idx):
+            res = self.miner.update(prep.staged, final=prep.final)
+        self.meter.stop(prep.staged.n_events)
+        return WindowDelta(prep.window_idx, res, prep.staged.n_events,
+                           prep.final)
+
+    def commit(self, prep: PreparedStep, delta: WindowDelta) -> WindowDelta:
+        """Publish an executed step: count the window and queue the delta
+        for ``poll``. Runs before the *next* ``prepare`` of the same
+        session so its snapshot includes this delta."""
+        self.windows_done += 1
+        self.staged_count -= 1
+        self.results.append(delta)
+        return delta
+
+    def discard(self, prep: PreparedStep) -> None:
+        """Drop a prepared step whose window is about to come back via a
+        snapshot restore (watchdog rewind) — only the staging accounting
+        unwinds here."""
+        self.staged_count -= 1
+
+    def unstage(self, prep: PreparedStep) -> None:
+        """Return a prepared step's window to the front of the queue (no
+        restore coming — e.g. eviction of a double-buffered session)."""
+        self.pending.appendleft((prep.window, prep.final))
+        self.staged_count -= 1
 
     def step(self) -> WindowDelta | None:
         """Mine the oldest pending window (called by the scheduler, inside
         a batching step). Returns the delta, also queued for ``poll``."""
-        if not self.pending:
+        prep = self.prepare(snapshot=False)
+        if prep is None:
             return None
-        window, final = self.pending.popleft()
-        self.meter.start()
-        with span("session.mine_window", session=self.session_id,
-                  window=self.windows_done):
-            res = self.miner.update(window, final=final)
-        real = int((window.types != PAD_TYPE).sum())
-        self.meter.stop(real)
-        delta = WindowDelta(self.windows_done, res, real, final)
-        self.windows_done += 1
-        self.results.append(delta)
-        return delta
+        return self.commit(prep, self.execute(prep))
 
     def poll(self, max_items: int | None = None) -> list[WindowDelta]:
         out = []

@@ -62,6 +62,27 @@ class ThroughputMeter:
         REGISTRY.histogram("window_latency_s", session=session).observe(dt)
         return dt
 
+    def mark(self) -> int:
+        """Opaque rewind point (row count) for ``truncate``. Take one
+        before speculative work — e.g. the scheduler snapshots a session
+        before a step it may retry — and rewind to it on failure."""
+        return len(self.rows)
+
+    def truncate(self, mark: int) -> None:
+        """Discard every row (and its wall-clock span) recorded after
+        ``mark``, un-counting windows a retried step will re-measure.
+        The registry series are monotone by design and keep the
+        discarded measurements; the meter's rows stay authoritative for
+        ``summary()``."""
+        del self.rows[mark:]
+        del self.spans[mark:]
+
+    def abort(self) -> None:
+        """Drop an open ``start()`` without recording a row — the
+        in-flight window died (step failure) and its partial time must
+        not leak into the next measurement. Safe when no start is open."""
+        self._t0 = None
+
     @property
     def events(self) -> int:
         return sum(n for n, _ in self.rows)

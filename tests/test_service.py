@@ -459,3 +459,164 @@ def test_watchdog_retry_restores_snapshot():
     for j, (d, w) in enumerate(zip(deltas, wins)):
         ref = clean.update(w, final=j == len(wins) - 1)
         assert_results_equal(d.result, ref, f"window {j} after retry")
+
+
+def test_error_before_first_submit_does_not_wedge_cotenants():
+    """A tenant whose step dies before its *first* batcher submit must
+    not strand co-tenants parked in their flush groups: ``end_step`` in
+    the worker's finally re-checks group readiness, so the good lanes'
+    groups flush, the step fails cleanly, and the watchdog retry makes
+    everyone whole — bit-identically."""
+    cfg = SessionConfig(intervals=((0, 4),), theta=3, max_level=3,
+                        history_limit=4)
+    # all three lanes co-resident: the good tenants must be parked in
+    # their groups when the bad one dies
+    svc = MiningService(policy=SchedulerPolicy(max_sessions=3,
+                                               max_concurrent_lanes=3))
+    streams = [tie_heavy_stream(20 + i, n=200) for i in range(3)]
+    sids = []
+    for i, stream in enumerate(streams):
+        sid = svc.create_session(f"wedge-{i}", cfg)
+        for j, w in enumerate(split_by_index(stream, 4)):
+            svc.ingest(sid, w, final=j == 3)
+        sids.append(sid)
+    bad = svc.session(sids[2])
+    real_update = bad.miner.update
+    fails = {"left": 2}
+
+    def dying_update(window, final=False):
+        if fails["left"]:  # raises before any scan reaches the batcher
+            fails["left"] -= 1
+            raise RuntimeError("dies before first submit")
+        return real_update(window, final=final)
+
+    bad.miner.update = dying_update
+    svc.pump()  # must terminate: no wedged co-tenant threads
+    assert svc.scheduler.watchdog.retries == 2
+    for i, sid in enumerate(sids):
+        deltas = svc.poll(sid)
+        assert [d.window_idx for d in deltas] == [0, 1, 2, 3]
+        standalone = cfg.make_miner()
+        for j, (d, w) in enumerate(zip(deltas,
+                                       split_by_index(streams[i], 4))):
+            ref = standalone.update(w, final=j == 3)
+            assert_results_equal(d.result, ref, f"{sid} window {j}")
+
+
+def test_group_scoped_flush_mixed_fleet_stays_exact():
+    """Group-scoped flushes across a mixed fleet: same-shape tenants
+    fuse, the odd-engine tenant's groups fall through as singletons, an
+    oversized tenant forces a ``_split_oversized`` cut — and every
+    tenant stays bit-identical to its standalone miner. Also pins the
+    new stats surface (flush groups, gate decisions, pipeline
+    overlap)."""
+    # wide lanes so the whole hybrid fleet parks in one chunk and the
+    # oversized tenant lands in the same flush group as the small ones
+    svc = MiningService(policy=SchedulerPolicy(max_sessions=5,
+                                               max_concurrent_lanes=8))
+    svc.batcher.max_pad_ratio = 4.0
+    tenants = []
+    for i, n in enumerate((120, 130, 125, 4000)):
+        cfg = SessionConfig(intervals=((0, 4),), theta=3, max_level=3,
+                            engine="ptpe", history_limit=4)
+        sid = svc.create_session(f"mix-{i}", cfg)
+        wins = split_by_index(tie_heavy_stream(i, n=n), 3)
+        tenants.append((sid, cfg, wins))
+    odd_cfg = SessionConfig(intervals=((0, 4),), theta=3, max_level=3,
+                            engine="mapconcatenate", history_limit=4)
+    sid = svc.create_session("mix-odd", odd_cfg)
+    wins = split_by_index(tie_heavy_stream(9, n=200), 3)
+    tenants.append((sid, odd_cfg, wins))
+    for sid, _, wins in tenants:
+        for j, w in enumerate(wins):
+            svc.ingest(sid, w, final=j == len(wins) - 1)
+    svc.pump()
+    assert svc.batcher.flush_groups > 0
+    assert svc.batcher.batches > 0          # same-shape lanes fused
+    assert svc.batcher.split_groups > 0     # oversized lane split out
+    assert svc.batcher.gate_decisions["singleton"] > 0  # lone lanes
+    stats = svc.stats()
+    assert stats["batcher"]["flush_groups"] == svc.batcher.flush_groups
+    assert sum(stats["batcher"]["fusion_gate"].values()) == \
+        svc.batcher.flush_groups + svc.batcher.split_groups
+    assert stats["scheduler"]["pipeline_overlap_s"] > 0.0
+    for sid, cfg, wins in tenants:
+        deltas = svc.poll(sid)
+        standalone = cfg.make_miner()
+        for j, (d, w) in enumerate(zip(deltas, wins)):
+            ref = standalone.update(w, final=j == len(wins) - 1)
+            assert_results_equal(d.result, ref,
+                                 f"{sid} window {j} (group-scoped flush)")
+
+
+def test_watchdog_retry_double_buffered_no_double_count():
+    """A mid-run failure lands while the scheduler has already staged the
+    *next* step's windows (double-buffering). The rewind must drop those
+    preps, restore every lane, and re-run — no window double-counted, no
+    meter row duplicated, results bit-identical."""
+    cfg = SessionConfig(intervals=((0, 4),), theta=3, max_level=3,
+                        history_limit=4)
+    svc = MiningService(policy=SchedulerPolicy(max_sessions=3))
+    streams = [tie_heavy_stream(30 + i, n=220) for i in range(3)]
+    sids = []
+    for i, stream in enumerate(streams):
+        sid = svc.create_session(f"dbuf-{i}", cfg)
+        for j, w in enumerate(split_by_index(stream, 4)):
+            svc.ingest(sid, w, final=j == 3)
+        sids.append(sid)
+    flaky = svc.session(sids[1])
+    real_update = flaky.miner.update
+    state = {"calls": 0, "failed": False}
+
+    def flaky_update(window, final=False):
+        state["calls"] += 1
+        if state["calls"] == 3 and not state["failed"]:
+            state["failed"] = True  # fail once, mid-run, step 3
+            raise RuntimeError("transient mid-run failure")
+        return real_update(window, final=final)
+
+    flaky.miner.update = flaky_update
+    svc.pump()
+    assert svc.scheduler.watchdog.retries == 1
+    for i, sid in enumerate(sids):
+        s = svc.session(sid)
+        assert s.windows_done == 4
+        assert s.staged_count == 0
+        # meter rows == committed windows: the rewind un-counted the
+        # failed attempt (and the prestaged next step) exactly once
+        assert len(s.meter.rows) == s.windows_done
+        deltas = svc.poll(sid)
+        assert [d.window_idx for d in deltas] == [0, 1, 2, 3]
+        standalone = cfg.make_miner()
+        for j, (d, w) in enumerate(zip(deltas,
+                                       split_by_index(streams[i], 4))):
+            ref = standalone.update(w, final=j == 3)
+            assert_results_equal(d.result, ref, f"{sid} window {j}")
+
+
+# ------------------------------------------------ scheduler error hygiene
+
+
+def test_unknown_session_typed_error_and_evict_gauge():
+    """Unknown session ids raise ``UnknownSessionError`` (a ``KeyError``
+    subclass, so legacy guards still catch it), and evicting a tenant
+    updates the queue-depth gauge instead of leaving it stale."""
+    from repro.obs import REGISTRY
+    from repro.service import UnknownSessionError
+
+    assert issubclass(UnknownSessionError, KeyError)
+    svc = MiningService(policy=SchedulerPolicy(max_sessions=2))
+    cfg = SessionConfig(intervals=((0, 4),), theta=3)
+    svc.create_session("a", cfg)
+    wins = split_by_index(tie_heavy_stream(0, n=120), 3)
+    with pytest.raises(UnknownSessionError, match="ghost"):
+        svc.ingest("ghost", wins[0])
+    with pytest.raises(UnknownSessionError, match="ghost"):
+        svc.scheduler.evict("ghost")
+    with pytest.raises(UnknownSessionError, match="ghost"):
+        svc.poll("ghost")
+    svc.ingest("a", wins[0])
+    svc.ingest("a", wins[1])
+    assert int(REGISTRY.gauge("scheduler_queue_depth").value) == 2
+    svc.scheduler.evict("a")
+    assert int(REGISTRY.gauge("scheduler_queue_depth").value) == 0

@@ -2,6 +2,7 @@
 plus the serving meters (labels, latency percentiles, per-session bank)."""
 
 import numpy as np
+import pytest
 
 from repro.core import count_a1_sequential, mine
 from repro.telemetry import (MeterBank, ThroughputMeter,
@@ -64,6 +65,45 @@ def test_meter_percentiles_empty():
     assert m.latency_percentiles() == {"p50": 0.0, "p99": 0.0}
     s = m.summary()
     assert s["events_per_sec"] == 0.0 and "label" not in s
+
+
+def test_meter_mark_truncate_abort_rewind():
+    """The scheduler's retry path rewinds a meter through the public
+    ``mark()``/``truncate()``/``abort()`` API (it used to reach into
+    ``_t0`` directly): truncate discards rows *and* wall-clock spans
+    recorded after the mark, abort drops an open start without a row,
+    and the meter keeps working afterwards."""
+    m = ThroughputMeter(label="rewind")
+    m.start()
+    m.stop(10)
+    mark = m.mark()
+    assert mark == 1
+    # a speculative (to-be-retried) step records two windows...
+    m.start()
+    m.stop(20)
+    m.start()
+    m.stop(30)
+    assert m.events == 60 and len(m.spans) == 3
+    # ...then fails: rewind un-counts exactly the speculative rows
+    m.truncate(mark)
+    assert len(m.rows) == 1 and len(m.spans) == 1
+    assert m.events == 10
+    # abort drops an in-flight start (no row), is safe when idle, and
+    # stop() after abort still refuses to run without a fresh start
+    m.start()
+    m.abort()
+    m.abort()
+    with pytest.raises(RuntimeError, match="stop\\(\\) without start"):
+        m.stop(99)
+    # the meter is whole after the rewind: the retried step re-measures
+    m.start()
+    m.stop(20)
+    assert m.events == 30 and len(m.rows) == len(m.spans) == 2
+    # truncate tolerates hand-filled rows with no matching spans
+    bare = ThroughputMeter()
+    _fill(bare, [0.1, 0.2, 0.3])
+    bare.truncate(1)
+    assert len(bare.rows) == 1 and bare.spans == []
 
 
 def test_meter_bank_per_session_and_aggregate():
