@@ -25,7 +25,7 @@ def main() -> None:
 
     from . import (fig7_mapping, fig8_crossover, fig9_twopass,
                    fig10_resources, fig11_engine_vs_sequential,
-                   service_scale, streaming_throughput)
+                   service_scale, service_wire, streaming_throughput)
     figs = {
         "fig7": lambda: fig7_mapping.run(seconds=min(seconds, 20),
                                          segments=(1, 2, 4, 8)),
@@ -41,6 +41,7 @@ def main() -> None:
         "service": lambda: service_scale.run(
             sessions=(2, 8) if args.quick else (2, 4, 8),
             seconds=min(seconds, 8)),
+        "wire": lambda: service_wire.run(seconds=min(seconds, 8)),
     }
     chosen = args.only.split(",") if args.only else list(figs)
     t0 = time.perf_counter()

@@ -1,0 +1,101 @@
+"""Wire-transport overhead and fault-recovery cost.
+
+What the in-process service benchmarks (service_scale.py) cannot see:
+the price of the fault-tolerant transport itself. Three rows per
+configuration:
+
+* ``inproc`` — the same windows through ``MiningService`` directly
+  (no sockets): the floor.
+* ``wire`` — through ``WireServer``/``MiningClient`` over a Unix
+  socket with per-window checkpointing: framing + CRC + JSON deltas +
+  durability, the honest serving cost.
+* ``wire-faults`` — same, with the deterministic fault injector
+  duplicating/truncating frames: what retries, dedup, and reconnects
+  add under a nasty link.
+
+Derived columns report events/sec and the wire/in-process overhead
+ratio, so a regression in the transport (or an accidentally chatty
+client) shows up as a ratio jump even when absolute times drift with
+the host.
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+
+from repro.data import partition_windows, sym26
+from repro.launch.wire_load import FaultyClient
+from repro.runtime.faultinject import FaultSpec
+from repro.service import MiningService, SessionConfig
+from repro.service.wire import WireServer
+
+from .common import Report, timeit
+
+
+def _windows(seconds: int, window_ms: int = 2000, seed: int = 3):
+    stream, _ = sym26(seconds=seconds, seed=seed)
+    wins = list(partition_windows(stream, window_ms))
+    n_events = sum(int(w.types.shape[0]) for w in wins)
+    return wins, n_events
+
+
+def _run_inproc(cfg: SessionConfig, wins) -> None:
+    svc = MiningService()
+    sid = svc.create_session("bench", cfg)
+    for j, w in enumerate(wins):
+        svc.ingest(sid, w, final=(j == len(wins) - 1))
+        svc.pump()
+    svc.poll(sid)
+    svc.close_session(sid)
+
+
+def _run_wire(cfg: SessionConfig, wins, spec: FaultSpec,
+              data_dir: str | None) -> None:
+    svc = MiningService()
+    srv = WireServer(svc, "unix:" + tempfile.mktemp(suffix=".sock"),
+                     data_dir=data_dir)
+    addr = srv.start()
+    try:
+        c = FaultyClient(addr, "bench", cfg, fault_spec=spec,
+                         rng_seed=5, deadline_s=240.0)
+        for j, w in enumerate(wins):
+            c.submit(w, final=(j == len(wins) - 1))
+        c.drain(deadline_s=240.0)
+        c.close_session()
+    finally:
+        srv.shutdown(drain=False)
+
+
+def run(seconds: int = 8, theta: int = 3, max_level: int = 3):
+    rep = Report("service_wire")
+    cfg = SessionConfig(theta=theta, max_level=max_level, window_ms=2000)
+    wins, n_events = _windows(seconds)
+    quiet = FaultSpec()
+    nasty = FaultSpec(seed=11, duplicate=0.10, truncate=0.05)
+
+    t_inproc = timeit(lambda: _run_inproc(cfg, wins), repeats=3, warmup=1)
+    rep.add("inproc", t_inproc, windows=len(wins), n_events=n_events,
+            events_per_sec=round(n_events / t_inproc))
+
+    tmp = tempfile.mkdtemp(prefix="wirebench-")
+    try:
+        t_wire = timeit(lambda: _run_wire(cfg, wins, quiet, tmp),
+                        repeats=3, warmup=1)
+        rep.add("wire", t_wire, windows=len(wins), n_events=n_events,
+                events_per_sec=round(n_events / t_wire),
+                overhead_x=round(t_wire / t_inproc, 3))
+
+        t_faults = timeit(lambda: _run_wire(cfg, wins, nasty, tmp),
+                          repeats=3, warmup=1)
+        rep.add("wire-faults", t_faults, windows=len(wins),
+                n_events=n_events,
+                events_per_sec=round(n_events / t_faults),
+                overhead_x=round(t_faults / t_inproc, 3))
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    return rep.save()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,3 +1,5 @@
-from .ckpt import config_fingerprint, latest_step, restore, save
+from .ckpt import (config_fingerprint, latest_step, prune, read_leaf,
+                   restore, save)
 
-__all__ = ["save", "restore", "latest_step", "config_fingerprint"]
+__all__ = ["save", "restore", "latest_step", "config_fingerprint",
+           "read_leaf", "prune"]

@@ -12,6 +12,18 @@ assert this); the service only changes throughput.
 Usage:
   PYTHONPATH=src python -m repro.launch.mine_serve --sessions 4 \
       --seconds 10 --theta 4 --max-level 3
+
+Service mode (``--listen``) skips the in-process demo loop and serves the
+fault-tolerant wire protocol instead (see service/wire.py); add
+``--daemon`` to detach, then drive it with ``--daemon-status`` /
+``--daemon-stop`` or the ``repro.launch.wire_load`` load generator:
+
+  PYTHONPATH=src python -m repro.launch.mine_serve \
+      --listen unix:/tmp/fem.sock --daemon --data-dir /tmp/fem-data
+  PYTHONPATH=src python -m repro.launch.wire_load \
+      --connect unix:/tmp/fem.sock --sessions 4 --seconds 10 --verify
+  PYTHONPATH=src python -m repro.launch.mine_serve \
+      --daemon-stop --data-dir /tmp/fem-data
 """
 
 from __future__ import annotations
@@ -19,6 +31,7 @@ from __future__ import annotations
 import argparse
 import contextlib
 import json
+import sys
 
 from repro.data import partition_windows, sym26
 from repro.obs import REGISTRY, TRACER
@@ -35,6 +48,39 @@ def _print_deltas(svc, max_level, limit=2):
             tail = " FINAL" if d.final else ""
             print(f"[serve] {sid} window {d.window_idx:3d} "
                   f"({d.n_events:4d} ev) top-L{max_level}: {top}{tail}")
+
+
+def _service_mode(args) -> int:
+    """--listen/--daemon-*: run (or manage) the wire-served daemon."""
+    from repro.service.daemon import DaemonConfig, MiningDaemon
+
+    cfg = DaemonConfig(
+        address=args.listen or "127.0.0.1:0", data_dir=args.data_dir,
+        checkpoint_every=args.checkpoint_every,
+        max_sessions=max(args.sessions, 1), queue_depth=args.queue_depth,
+        pipeline_depth=args.pipeline_depth,
+        batching=not args.no_batching)
+    if args.daemon_status:
+        doc = MiningDaemon.status(cfg.pidfile_path)
+        if doc is None:
+            print(f"[serve] no daemon (pidfile {cfg.pidfile_path})")
+            return 1
+        print(f"[serve] daemon pid {doc['pid']} on {doc['address']} "
+              f"(data: {doc['data_dir']})")
+        return 0
+    if args.daemon_stop:
+        ok = MiningDaemon.stop(cfg.pidfile_path)
+        print("[serve] daemon stopped." if ok
+              else "[serve] daemon did not stop in time.")
+        return 0 if ok else 1
+    daemon = MiningDaemon(cfg)
+    if args.daemon:
+        doc = daemon.start_detached()
+        print(f"[serve] daemon pid {doc['pid']} on {doc['address']} "
+              f"(data: {doc['data_dir']})")
+        return 0
+    daemon.run()
+    return 0
 
 
 def main():
@@ -82,7 +128,28 @@ def main():
     ap.add_argument("--profile-dir", default=None, metavar="DIR",
                     help="capture one jax.profiler trace of the serving "
                          "loop into DIR (TensorBoard/Perfetto)")
+    ap.add_argument("--listen", default=None, metavar="ADDR",
+                    help='serve the wire protocol on "host:port" or '
+                         '"unix:/path" instead of the in-process demo '
+                         "(foreground unless --daemon)")
+    ap.add_argument("--daemon", action="store_true",
+                    help="with --listen: detach and run as a daemon "
+                         "(pidfile + log under --data-dir)")
+    ap.add_argument("--data-dir", default="serve-data", metavar="DIR",
+                    help="checkpoint/recovery store for --listen mode")
+    ap.add_argument("--checkpoint-every", type=int, default=1,
+                    metavar="N",
+                    help="checkpoint every N committed windows (1 = "
+                         "exact recovery at every window boundary)")
+    ap.add_argument("--daemon-status", action="store_true",
+                    help="report the daemon behind --data-dir and exit")
+    ap.add_argument("--daemon-stop", action="store_true",
+                    help="SIGTERM the daemon behind --data-dir (graceful "
+                         "drain + checkpoint) and exit")
     args = ap.parse_args()
+
+    if args.daemon_status or args.daemon_stop or args.listen:
+        return _service_mode(args)
 
     svc = MiningService(
         policy=SchedulerPolicy(max_sessions=max(args.sessions, 1),
@@ -164,4 +231,4 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

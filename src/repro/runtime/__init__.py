@@ -1,8 +1,10 @@
 from .compress import (compressed_psum_ef, dequantize, quantize,
                        zero_residual)
+from .faultinject import FaultInjector, FaultSpec, kill_point
 from .ft import (ElasticRuntime, StepFailure, StepWatchdog, WatchdogConfig,
                  plan_elastic_mesh)
 
 __all__ = ["StepWatchdog", "WatchdogConfig", "StepFailure",
            "ElasticRuntime", "plan_elastic_mesh", "quantize", "dequantize",
-           "compressed_psum_ef", "zero_residual"]
+           "compressed_psum_ef", "zero_residual",
+           "FaultInjector", "FaultSpec", "kill_point"]

@@ -313,6 +313,33 @@ class RoundRobinScheduler:
             s.staged_count = 0  # every pop was undone by the restore
             staged[s.session_id] = s.prepare(snapshot=True)
 
+    def quiesce(self) -> int:
+        """Return every double-buffered prepared step to its session's
+        queue and drop the pipeline plan. Returns preps unstaged.
+
+        This is the graceful-shutdown ordering fix: a prepared-but-
+        uncommitted step's window lives in *neither* the session's
+        pending queue nor the miner's machine state, so a checkpoint
+        taken while it is staged would silently lose that window — and a
+        restart would mine a stream with a hole in it. Every external
+        checkpoint (SIGTERM drain, daemon periodic checkpoint, operator
+        ``checkpoint`` control frame) must quiesce first; the unstaged
+        windows land back at the front of their queues and are captured
+        by ``state_dict`` like any other pending work, so restart
+        replays them exactly once."""
+        n = 0
+        for sid, prep in list(self._staged.items()):
+            s = self.sessions.get(sid)
+            if s is not None:
+                s.unstage(prep)
+                n += 1
+        self._staged.clear()
+        self._plan = []
+        if n:
+            REGISTRY.counter("scheduler_quiesced_preps_total").inc(n)
+        REGISTRY.gauge("scheduler_queue_depth").set(self.pending_windows)
+        return n
+
     def drain(self, max_steps: int = 10_000) -> int:
         """Step until no session has pending windows; returns steps run."""
         n = 0

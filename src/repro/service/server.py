@@ -94,6 +94,31 @@ class MiningService:
         """Per-window frequent-episode deltas mined since the last poll."""
         return self.scheduler.session(session_id).poll(max_items)
 
+    # ------------------------------------------------------- durability
+
+    def checkpoint_all(self, root, extra=None) -> dict:
+        """Checkpoint every session's full state atomically to
+        ``root/<session_id>/`` — after quiescing the pipeline.
+
+        Ordering matters: with ``pipeline_depth > 1`` the scheduler may
+        hold prepared-but-uncommitted next-step windows that live in
+        neither a session's pending queue nor its miner state. They are
+        unstaged *first* (``scheduler.quiesce``) so every checkpoint
+        captures them as pending work — a restart replays each window
+        exactly once, never zero times (lost) and never twice
+        (double-counted). ``extra(session_id)`` may contribute
+        transport-layer leaves (the wire server's dedup sequence number)
+        to the same atomic snapshot. Returns {session_id: path}."""
+        self.scheduler.quiesce()
+        paths = {}
+        with span("service.checkpoint", sessions=len(
+                self.scheduler.sessions)):
+            for sid, s in self.scheduler.sessions.items():
+                paths[sid] = s.save(
+                    root, extra=None if extra is None else extra(sid))
+                REGISTRY.counter("service_checkpoints_total").inc()
+        return paths
+
     # ------------------------------------------------------------ stats
 
     def stats(self) -> dict:
@@ -142,6 +167,45 @@ class MiningService:
                 "deadline_flushes": self.batcher.deadline_flushes,
                 "fusion_gate": dict(self.batcher.gate_decisions),
             }
+        out["wire"] = {
+            "connections": int(REGISTRY.gauge("wire_connections").value),
+            "connections_total": int(REGISTRY.counter(
+                "wire_connections_total").value),
+            "frames_rx": int(REGISTRY.counter(
+                "wire_frames_total", dir="rx").value),
+            "frames_tx": int(REGISTRY.counter(
+                "wire_frames_total", dir="tx").value),
+            "bytes_rx": int(REGISTRY.counter(
+                "wire_bytes_total", dir="rx").value),
+            "bytes_tx": int(REGISTRY.counter(
+                "wire_bytes_total", dir="tx").value),
+            "backpressure": int(REGISTRY.counter(
+                "wire_backpressure_total").value),
+            "dedup_hits": int(REGISTRY.counter(
+                "wire_dedup_hits_total").value),
+            "out_of_order": int(REGISTRY.counter(
+                "wire_out_of_order_total").value),
+            "errors": {labels.get("code", "?"): int(m.value)
+                       for labels, m in
+                       REGISTRY.family_items("wire_errors_total")},
+        }
+        out["recovery"] = {
+            "cold_boots": int(REGISTRY.counter(
+                "recovery_boots_total").value),
+            "sessions_restored": int(REGISTRY.counter(
+                "recovery_sessions_total").value),
+            "windows_requeued": int(REGISTRY.counter(
+                "recovery_windows_requeued_total").value),
+            "checkpoints": int(REGISTRY.counter(
+                "service_checkpoints_total").value),
+            "quiesced_preps": int(REGISTRY.counter(
+                "scheduler_quiesced_preps_total").value),
+        }
+        out["daemon"] = {
+            "heartbeat_ts": float(REGISTRY.gauge(
+                "daemon_heartbeat_ts").value),
+            "uptime_s": float(REGISTRY.gauge("daemon_uptime_s").value),
+        }
         out["kernel"] = {
             "calls": {k: v for k, v in sorted(KERNEL_CALLS.items())
                       if not k.startswith("fallback:")},
