@@ -22,8 +22,12 @@ from repro.data import sym26
 OUT_DIR = Path("experiments/bench")
 
 
-def timeit(fn, *, repeats: int = 3, warmup: int = 1) -> float:
-    """Median wall seconds over ``repeats`` (after warmup for jit caches)."""
+def timeit(fn, *, repeats: int = 3, warmup: int = 1,
+           reduce=np.median) -> float:
+    """Wall seconds over ``repeats`` (after warmup for jit caches),
+    reduced by ``reduce`` — median for throughput-style rows; pass
+    ``min`` when *comparing* engines, since scheduler noise on a shared
+    host is strictly additive and min is the robust estimator there."""
     for _ in range(warmup):
         fn()
     ts = []
@@ -31,7 +35,28 @@ def timeit(fn, *, repeats: int = 3, warmup: int = 1) -> float:
         t0 = time.perf_counter()
         fn()
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    return float(reduce(ts))
+
+
+def timeit_group(fns: dict, *, repeats: int = 5, warmup: int = 1,
+                 reduce=min) -> dict:
+    """Time several callables round-robin (A B C A B C ...) and reduce
+    per callable.  For *ratios* between the results (e.g. the fig7
+    regret column) this is the only fair protocol on a shared host:
+    back-to-back blocks put each engine in a different contention
+    window, and block-to-block load swings show up as engine
+    differences.  Interleaving gives every round the same environment;
+    a min-reduce then discards the rounds a background burst polluted."""
+    for fn in fns.values():
+        for _ in range(warmup):
+            fn()
+    ts = {k: [] for k in fns}
+    for _ in range(repeats):
+        for k, fn in fns.items():
+            t0 = time.perf_counter()
+            fn()
+            ts[k].append(time.perf_counter() - t0)
+    return {k: float(reduce(v)) for k, v in ts.items()}
 
 
 def sym26_stream(seconds: int = 30, seed: int = 0):

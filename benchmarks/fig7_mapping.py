@@ -14,30 +14,48 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import count_dispatch, make_segments
+from repro.core.calibrate import get_policy
+from repro.core.hybrid import _mapc_kernel_available, shard_devices
 
-from .common import Report, random_candidates, sym26_stream, timeit
+from .common import (Report, random_candidates, sym26_stream, timeit,
+                     timeit_group)
 
 
 def run(seconds: int = 20, segments=()) -> Report:
     rep = Report("fig7_mapping")
     stream, _ = sym26_stream(seconds=seconds)
+    policy = get_policy()
     for n in (2, 3, 4, 5, 6):
         for m, regime in ((16, "few"), (512, "many")):
             eps = random_candidates(m, n, seed=n * 100 + m)
-            t_ptpe = timeit(lambda: count_dispatch(stream, eps,
-                                                   engine="ptpe"))
-            t_mc = timeit(lambda: count_dispatch(stream, eps,
-                                                 engine="mapconcatenate"))
-            t_hy = timeit(lambda: count_dispatch(stream, eps,
-                                                 engine="hybrid"))
+            # the regret column is a ratio of these three, so they are
+            # sampled interleaved (same contention window per round)
+            # rather than in back-to-back blocks like the
+            # throughput-style rows below
+            ts = timeit_group(
+                {"ptpe": lambda: count_dispatch(stream, eps,
+                                                engine="ptpe"),
+                 "mapc": lambda: count_dispatch(stream, eps,
+                                                engine="mapconcatenate"),
+                 "hybrid": lambda: count_dispatch(stream, eps,
+                                                  engine="hybrid")},
+                repeats=5, warmup=2)
+            t_ptpe, t_mc, t_hy = ts["ptpe"], ts["mapc"], ts["hybrid"]
             best = min(t_ptpe, t_mc)
+            # what the dispatcher chose (and on whose authority) for
+            # these rows — the regret column's paper trail
+            choice = policy.choose(
+                n_events=len(stream), n_episode=n, m=m,
+                kernel_ok=_mapc_kernel_available(),
+                shard_devices=shard_devices())
             rep.add(f"N{n}_M{m}", t_hy, ptpe_s=round(t_ptpe, 4),
                     mapconcat_s=round(t_mc, 4), hybrid_s=round(t_hy, 4),
                     regime=regime,
                     hybrid_regret=round(t_hy / best, 3),
+                    hybrid_engine=choice.engine,
+                    policy_source=choice.source,
                     winner="ptpe" if t_ptpe < t_mc else "mapconcat")
     if segments:
-        from repro.core.hybrid import _mapc_kernel_available
         # tag whether the Pallas path engages here, or the rows would
         # record the XLA fallback's wall clock labeled as kernel numbers
         mode = "kernel" if _mapc_kernel_available() else "fallback-xla"

@@ -25,7 +25,7 @@ import shutil
 import tempfile
 
 from repro.data import partition_windows, sym26
-from repro.launch.wire_load import FaultyClient
+from repro.launch.wire_load import FaultyClient, run_load
 from repro.runtime.faultinject import FaultSpec
 from repro.service import MiningService, SessionConfig
 from repro.service.wire import WireServer
@@ -67,7 +67,24 @@ def _run_wire(cfg: SessionConfig, wins, spec: FaultSpec,
         srv.shutdown(drain=False)
 
 
-def run(seconds: int = 8, theta: int = 3, max_level: int = 3):
+def _run_fleet(sessions: int, producers: int, seconds: int,
+               data_dir: str) -> dict:
+    """A whole fleet against one server: ``producers`` concurrent
+    client threads (1 = the old serial producer)."""
+    svc = MiningService()
+    srv = WireServer(svc, "unix:" + tempfile.mktemp(suffix=".sock"),
+                     data_dir=data_dir)
+    addr = srv.start()
+    try:
+        return run_load(addr, sessions=sessions, seconds=seconds,
+                        producers=producers,
+                        session_prefix=f"fleet{producers}")
+    finally:
+        srv.shutdown(drain=False)
+
+
+def run(seconds: int = 8, theta: int = 3, max_level: int = 3,
+        fleet_sessions: int = 4):
     rep = Report("service_wire")
     cfg = SessionConfig(theta=theta, max_level=max_level, window_ms=2000)
     wins, n_events = _windows(seconds)
@@ -92,6 +109,21 @@ def run(seconds: int = 8, theta: int = 3, max_level: int = 3):
                 n_events=n_events,
                 events_per_sec=round(n_events / t_faults),
                 overhead_x=round(t_faults / t_inproc, 3))
+
+        # fleet rows: the same multi-session load serial vs threaded —
+        # the serial producer's wall clock includes every other array's
+        # idle wait, so only the threaded row is an honest fleet number
+        base = None
+        for producers in (1, fleet_sessions):
+            load = _run_fleet(fleet_sessions, producers, seconds, tmp)
+            ev = sum(r["events"] for r in load["sessions"].values())
+            t = load["elapsed_s"]
+            base = base or t
+            rep.add(f"fleet-s{fleet_sessions}-p{producers}", t,
+                    sessions=fleet_sessions, producers=producers,
+                    n_events=ev, events_per_sec=round(ev / t),
+                    ok=load["ok"],
+                    speedup_vs_serial=round(base / t, 3))
     finally:
         shutil.rmtree(tmp, ignore_errors=True)
     return rep.save()

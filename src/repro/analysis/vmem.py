@@ -1,4 +1,4 @@
-"""Pass 3 — static VMEM budget checker (rules VM301–VM303).
+"""Pass 3 — static VMEM budget checker (rules VM301–VM304).
 
 Recomputes, from the layout contracts alone, the VMEM-resident bytes of
 each Pallas launch the dispatch policy can admit — the same arithmetic
@@ -151,4 +151,49 @@ def check_vmem(max_seg_brick_lw: int,
 
     summary = {f"vmem_worst_{k}_bytes": v for k, v in worst.items()}
     summary["vmem_budget_bytes"] = budget
+    return findings, summary
+
+
+def check_calibration_grid(points, max_seg_brick_lw: int,
+                           budget: int = VMEM_BUDGET_BYTES):
+    """Sweep the dispatch-calibration grid against the same bounds
+    (rule VM304).
+
+    ``points`` is ``core.calibrate.GridSpec.points()`` — (N, M, n, q, W)
+    tuples, no jax import.  A grid point whose implied segment brick
+    exceeds ``max_seg_brick_lw`` would make ``ops.segment_bricks``
+    decline at measurement time, so the calibration pass would record
+    the XLA fallback's wall clock under a kernel engine label and the
+    fitted policy would dispatch on a lie; a point over the VMEM budget
+    is the same admission bug one layer down.  The brick estimate
+    mirrors the runtime: ceil(n/q) events per segment plus one event
+    per overlap timestep W (same-timestamp pileups are the runtime
+    guard's job), rounded up to the lane quantum.
+    """
+    findings: list[Finding] = []
+    worst_lw = worst_bytes = 0
+    for (n_ep, m, n_ev, q, w) in points:
+        lw = _round_up(-(-n_ev // max(q, 1)) + w, LANES)
+        worst_lw = max(worst_lw, lw)
+        if lw > max_seg_brick_lw:
+            findings.append(Finding(
+                "VM304", _POLICY_PATH, 0,
+                f"calibration grid point (N={n_ep}, M={m}, n={n_ev}, "
+                f"q={q}, W={w}) implies segment brick LW={lw} > admitted "
+                f"MAX_SEG_BRICK_LW={max_seg_brick_lw} — the kernel "
+                "engines would decline and the fit would mislabel the "
+                "XLA fallback"))
+            continue
+        b = mapconcat_footprint(n_ep, lw)
+        worst_bytes = max(worst_bytes, b)
+        if b > budget:
+            findings.append(Finding(
+                "VM304", _POLICY_PATH, 0,
+                f"calibration grid point (N={n_ep}, M={m}, n={n_ev}, "
+                f"q={q}) needs {b / 2**20:.1f} MiB VMEM > budget "
+                f"{budget / 2**20:.1f} MiB — shrink the grid or raise "
+                "the admission bound"))
+    summary = {"vmem_calibration_points": len(list(points)),
+               "vmem_calibration_worst_lw": worst_lw,
+               "vmem_calibration_worst_bytes": worst_bytes}
     return findings, summary

@@ -37,17 +37,36 @@ MAPC_KERNEL_MIN_EVENTS = 2048
 MAPC_KERNEL_MAX_EPISODES = 128
 
 
+# Probe result cached per process: the answer (TPU present / interpret
+# mode) cannot change mid-process, and the old per-dispatch re-probe both
+# re-imported the kernel plane on every call and tallied
+# ``fallback:hybrid_mapc_probe`` once per *dispatch* on CPU hosts —
+# inflating the fallback family and taxing the hybrid's hot path.
+_PROBE_CACHE: bool | None = None
+
+
 def _mapc_kernel_available() -> bool:
     """Whether the segmented-kernel dispatch would actually engage (TPU or
     interpret mode) — the hybrid upgrade must not silently reroute plain
-    CPU runs onto the slower XLA MapConcatenate."""
-    try:
-        from repro.kernels import ops as kops
-        kops.kernel_mode()
-        return True
-    except (ImportError, NotImplementedError):
-        record_fallback("hybrid_mapc_probe")
-        return False
+    CPU runs onto the slower XLA MapConcatenate.  Probed once per
+    process; the degradation is tallied once, not per dispatch."""
+    global _PROBE_CACHE
+    if _PROBE_CACHE is None:
+        try:
+            from repro.kernels import ops as kops
+            kops.kernel_mode()
+            _PROBE_CACHE = True
+        except (ImportError, NotImplementedError):
+            record_fallback("hybrid_mapc_probe")
+            _PROBE_CACHE = False
+    return _PROBE_CACHE
+
+
+def _reset_probe_cache() -> None:
+    """Test hook: forget the cached probe (e.g. after flipping the
+    interpret-mode environment)."""
+    global _PROBE_CACHE
+    _PROBE_CACHE = None
 
 
 def shard_devices() -> int:
@@ -72,8 +91,21 @@ def f_of_n(n: int, a: float = FN_A, b: float = FN_B) -> float:
 
 
 def crossover(n: int) -> int:
-    """#episodes above which PTPE wins (Eq. 2 RHS)."""
-    return int(max(parallel_units() - 1, 0) * f_of_n(n))
+    """#episodes above which PTPE wins (Eq. 2 RHS).
+
+    The capacity term is the machine's *segment-parallel* slots beyond
+    the one PTPE always gets.  On a single-device host that difference
+    is 0 — but only honestly so when the segmented kernel cannot engage:
+    with the kernel available, one device still runs the (episode tile ×
+    time segment) grid, so the segment axis has one real unit of its own
+    and the crossover is ``f(N)`` rather than a degenerate 0 that
+    declares episode-parallel the winner at every M regardless of
+    ``f(N)``.  (The calibrated policy supersedes this entirely when a
+    table is installed.)"""
+    units = parallel_units()
+    if units <= 1:
+        units = 2 if _mapc_kernel_available() else 1
+    return int((units - 1) * f_of_n(n))
 
 
 def count_dispatch(stream: EventStream, eps: EpisodeBatch,
@@ -133,24 +165,28 @@ def count_dispatch(stream: EventStream, eps: EpisodeBatch,
     if engine == "mapconcatenate":
         return _mapconcatenate(stream, eps, num_segments=num_segments,
                                lcap=lcap, use_kernel=use_kernel)
-    mapc_kernel = (use_kernel and len(stream) >= MAPC_KERNEL_MIN_EVENTS
-                   and _mapc_kernel_available())
-    # multi-device: each mesh device takes one segment group — throughput
-    # scales with hardware, not just segment count (ROADMAP multi-device)
-    mapc_engine = (_mapconcatenate_sharded_kernel
-                   if mapc_kernel and shard_devices() > 1
-                   else _mapconcatenate_kernel)
-    if eps.M > crossover(eps.N):
-        # episode-parallel regime — except when the batch cannot fill even
-        # one lane tile and the stream is long: there the time axis is the
-        # only parallelism on offer, the segmented kernel's home turf
-        if mapc_kernel and eps.M <= MAPC_KERNEL_MAX_EPISODES:
-            return mapc_engine(
-                stream, eps, num_segments=num_segments, lcap=lcap,
-                use_kernel=use_kernel)
+    # hybrid: consult the dispatch policy — the calibrated cost table
+    # when one is installed (core.calibrate), else exactly the Eq. 2
+    # heuristic above (the policy's heuristic branch replicates it, so
+    # behavior without a table is unchanged).  Results are bit-identical
+    # across engines; only wall clock rides on this choice.
+    from .calibrate import get_policy
+    choice = get_policy().choose(
+        n_events=len(stream), n_episode=eps.N, m=eps.M,
+        use_kernel=use_kernel,
+        kernel_ok=use_kernel and _mapc_kernel_available(),
+        shard_devices=shard_devices(), default_segments=num_segments)
+    if choice.engine == "ptpe":
         return _count_a1(stream, eps, lcap=lcap, use_kernel=use_kernel)
-    if mapc_kernel:
-        return mapc_engine(stream, eps, num_segments=num_segments,
-                           lcap=lcap, use_kernel=use_kernel)
-    return _mapconcatenate(stream, eps, num_segments=num_segments,
+    if choice.engine == "mapconcat_sharded":
+        # multi-device: each mesh device takes one segment group —
+        # throughput scales with hardware, not just segment count
+        return _mapconcatenate_sharded_kernel(
+            stream, eps, num_segments=choice.num_segments, lcap=lcap,
+            use_kernel=use_kernel)
+    if choice.engine == "mapconcat_kernel":
+        return _mapconcatenate_kernel(
+            stream, eps, num_segments=choice.num_segments, lcap=lcap,
+            use_kernel=use_kernel)
+    return _mapconcatenate(stream, eps, num_segments=choice.num_segments,
                            lcap=lcap, use_kernel=use_kernel)

@@ -105,7 +105,6 @@ from .count_a2 import A2State, count_single_slot, init_a2_state
 from .episodes import EpisodeBatch
 from .events import (PAD_TYPE, TIME_NEG_INF, EventStream, count_level1,
                      type_histogram)
-from .hybrid import crossover
 from .mapconcat import _map_all_segments, fold_pair
 from .miner import LevelStats, MiningResult
 
@@ -314,7 +313,15 @@ class StreamingCounter:
             self._cum = np.zeros(eps.M, np.int64)
             return
         if engine == "hybrid":
-            engine = "ptpe" if eps.M > crossover(eps.N) else "mapconcatenate"
+            # dispatch policy: calibrated cost table when installed, else
+            # exactly the old Eq. 2 resolution (M vs crossover(N))
+            from . import hybrid as _hybrid
+            from .calibrate import get_policy
+            engine = get_policy().choose_stream(
+                n_episode=eps.N, m=eps.M, use_kernel=use_kernel,
+                kernel_ok=(use_kernel
+                           and _hybrid._mapc_kernel_available()),
+                shard_devices=_hybrid.shard_devices()).engine
         self.engine = engine
         self._et = jnp.asarray(eps.etypes)
         self._tlo = jnp.asarray(eps.tlo)
@@ -546,8 +553,21 @@ class StreamingCounter:
             # single-device launch below (same counts either way)
             q_limit = max(self.num_segments, self._shard_d)
             q = 1
+            safe = [1]  # stitch-safe power-of-two segment counts
             while q * 2 <= q_limit and span // (q * 2) > w:
                 q *= 2
+                safe.append(q)
+            # per-commit q: the calibrated policy may prefer fewer, wider
+            # segments than the max-parallelism heuristic (the candidate
+            # list is safety-filtered here; heuristic keeps the max)
+            from .calibrate import get_policy
+            q, _src = get_policy().choose_segments(
+                safe[::-1], engine=("mapconcat_kernel"
+                                    if self._mapc_kernel
+                                    else "mapconcatenate"),
+                n_episode=self.eps.N, m=self.eps.M,
+                n_events=int(self._buf_tt.size),
+                devices=self._shard_d)
             tau = np.round(np.linspace(self._tau_c, tau_next,
                                        q + 1)).astype(np.int64)
             tau[0], tau[-1] = self._tau_c, tau_next

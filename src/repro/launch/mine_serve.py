@@ -59,7 +59,7 @@ def _service_mode(args) -> int:
         checkpoint_every=args.checkpoint_every,
         max_sessions=max(args.sessions, 1), queue_depth=args.queue_depth,
         pipeline_depth=args.pipeline_depth,
-        batching=not args.no_batching)
+        batching=not args.no_batching, policy_table=args.policy_table)
     if args.daemon_status:
         doc = MiningDaemon.status(cfg.pidfile_path)
         if doc is None:
@@ -141,12 +141,34 @@ def main():
                     metavar="N",
                     help="checkpoint every N committed windows (1 = "
                          "exact recovery at every window boundary)")
+    ap.add_argument("--policy-table", default=None, metavar="PATH",
+                    help="install a calibrated dispatch table (see "
+                         "repro.launch.calibrate); stale/wrong-device "
+                         "tables degrade to the heuristic")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="run a smoke-grid calibration pass on this "
+                         "host first, cache the fitted table per device "
+                         "kind under --data-dir, and serve with it (the "
+                         "full grid lives in repro.launch.calibrate)")
     ap.add_argument("--daemon-status", action="store_true",
                     help="report the daemon behind --data-dir and exit")
     ap.add_argument("--daemon-stop", action="store_true",
                     help="SIGTERM the daemon behind --data-dir (graceful "
                          "drain + checkpoint) and exit")
     args = ap.parse_args()
+
+    if args.calibrate and not (args.daemon_status or args.daemon_stop):
+        # measure + fit on this host, cache per device kind under the
+        # service data dir, and serve through the fitted policy
+        from repro.core.calibrate import GridSpec, calibrate_and_save
+        from repro.launch.calibrate import ROOFLINE_HW
+        table, path = calibrate_and_save(
+            GridSpec.smoke(), hw=ROOFLINE_HW,
+            out_path=args.policy_table,
+            data_dir=f"{args.data_dir}/calibration")
+        args.policy_table = path
+        print(f"[serve] calibrated {sorted(table.coeffs)} on "
+              f"{table.device_kind}; table cached at {path}")
 
     if args.daemon_status or args.daemon_stop or args.listen:
         return _service_mode(args)
@@ -156,7 +178,8 @@ def main():
                                max_pending_windows=args.queue_depth,
                                pipeline_depth=args.pipeline_depth,
                                fusion_gate=args.fusion_gate == "on",
-                               max_concurrent_lanes=args.max_concurrent_lanes),
+                               max_concurrent_lanes=args.max_concurrent_lanes,
+                               policy_table=args.policy_table),
         batching=not args.no_batching)
 
     feeds = {}
@@ -216,6 +239,11 @@ def main():
         print(f"[serve] pipeline overlap "
               f"{stats['scheduler']['pipeline_overlap_s']*1e3:.0f} ms of "
               f"next-step staging under device work")
+    cal = stats.get("calibration", {})
+    if cal.get("decisions"):
+        print(f"[serve] dispatch policy: {cal['source']} "
+              f"({cal['grid_points']} grid points); "
+              f"decisions {cal['decisions']}")
     if stats["kernel"]["fallbacks"] or stats["kernel"]["recompiles"]:
         print(f"[serve] kernel fallbacks: {stats['kernel']['fallbacks']} "
               f"recompiles: {stats['kernel']['recompiles']}")

@@ -23,6 +23,7 @@ import argparse
 import json
 import socket
 import time
+from concurrent.futures import ThreadPoolExecutor
 
 from repro.data import partition_windows, sym26
 from repro.runtime.faultinject import FaultInjector, FaultSpec
@@ -84,15 +85,60 @@ def array_stream(i: int, seconds: int):
     return stream
 
 
+def _drive_array(i: int, c: FaultyClient, cfg: SessionConfig, *,
+                 seconds: int, verify: bool, deadline_s: float,
+                 close: bool) -> tuple[dict, bool]:
+    """Submit one array's windows, drain its deltas, optionally verify
+    against a local re-mine.  Each producer owns its client exclusively
+    (``MiningClient`` is not thread-safe across producers)."""
+    wins = list(partition_windows(array_stream(i, seconds),
+                                  cfg.window_ms))
+    for j, w in enumerate(wins):
+        c.submit(w, final=(j == len(wins) - 1))
+    deltas = c.drain(deadline_s=deadline_s)
+    deltas.sort(key=lambda d: d["window_idx"])
+    row = {"windows": len(wins), "deltas": len(deltas),
+           "events": sum(int(w.types.shape[0]) for w in wins),
+           "reconnects": c.reconnects, "applied": c.applied,
+           "durable": c.durable}
+    ok = True
+    if verify:
+        local = MiningSession(f"local-{i}", cfg)
+        for j, w in enumerate(wins):
+            local.enqueue(w, final=(j == len(wins) - 1))
+        while local.queue_depth:
+            p = local.prepare()
+            local.commit(p, local.execute(p))
+        ref = [delta_payload(d) for d in local.poll()]
+        match = ([r["episodes"] for r in ref]
+                 == [g["episodes"] for g in deltas])
+        row["verified"] = match
+        ok = match and len(deltas) == len(wins)
+    if close:
+        c.close_session()
+    else:
+        c.close()
+    return row, ok
+
+
 def run_load(address: str, sessions: int = 2, seconds: int = 6, *,
              theta: int = 3, max_level: int = 3, engine: str = "hybrid",
              fault_spec: FaultSpec | None = None, verify: bool = False,
              deadline_s: float = 240.0, session_prefix: str = "array",
-             close: bool = True) -> dict:
+             close: bool = True, producers: int = 1) -> dict:
     """Stream ``sessions`` synthetic arrays into the daemon at
     ``address``; returns a per-session report (windows, deltas,
-    reconnects, injected faults, verification result)."""
-    report = {"sessions": {}, "faults": {}, "ok": True}
+    reconnects, injected faults, verification result).
+
+    ``producers`` > 1 drives that many arrays concurrently, one thread
+    per in-flight session (capped at ``producers``) — the honest
+    fleet-scale mode: a serial producer bottlenecks the daemon on one
+    submitting thread and understates batched throughput.  ``producers
+    <= 1`` keeps the deterministic serial schedule (faults still
+    deterministic per client: each client owns its injector and seed).
+    """
+    report = {"sessions": {}, "faults": {}, "ok": True,
+              "producers": max(producers, 1)}
     clients = []
     for i in range(sessions):
         cfg = make_array_config(i, theta=theta, max_level=max_level,
@@ -103,33 +149,20 @@ def run_load(address: str, sessions: int = 2, seconds: int = 6, *,
         clients.append((i, c, cfg))
 
     t0 = time.monotonic()
-    for i, c, cfg in clients:
-        wins = list(partition_windows(array_stream(i, seconds),
-                                      cfg.window_ms))
-        for j, w in enumerate(wins):
-            c.submit(w, final=(j == len(wins) - 1))
-        deltas = c.drain(deadline_s=deadline_s)
-        deltas.sort(key=lambda d: d["window_idx"])
-        row = {"windows": len(wins), "deltas": len(deltas),
-               "reconnects": c.reconnects, "applied": c.applied,
-               "durable": c.durable}
-        if verify:
-            local = MiningSession(f"local-{i}", cfg)
-            for j, w in enumerate(wins):
-                local.enqueue(w, final=(j == len(wins) - 1))
-            while local.queue_depth:
-                p = local.prepare()
-                local.commit(p, local.execute(p))
-            ref = [delta_payload(d) for d in local.poll()]
-            match = ([r["episodes"] for r in ref]
-                     == [g["episodes"] for g in deltas])
-            row["verified"] = match
-            report["ok"] = report["ok"] and match and len(deltas) == len(
-                wins)
-        if close:
-            c.close_session()
-        else:
-            c.close()
+    def drive(item):
+        i, c, cfg = item
+        return i, c, _drive_array(i, c, cfg, seconds=seconds,
+                                  verify=verify, deadline_s=deadline_s,
+                                  close=close)
+    if report["producers"] > 1:
+        with ThreadPoolExecutor(
+                max_workers=min(report["producers"],
+                                max(sessions, 1))) as pool:
+            done = list(pool.map(drive, clients))
+    else:
+        done = [drive(item) for item in clients]
+    for i, c, (row, ok) in done:
+        report["ok"] = report["ok"] and ok
         if getattr(c, "injector", None) is not None:
             for k, v in c.injector.injected.items():
                 report["faults"][k] = report["faults"].get(k, 0) + v
@@ -156,6 +189,10 @@ def main(argv=None):
     ap.add_argument("--fault-truncate", type=float, default=0.04)
     ap.add_argument("--verify", action="store_true",
                     help="re-mine locally and assert bit-identical")
+    ap.add_argument("--producers", type=int, default=1, metavar="N",
+                    help="concurrent producer threads (default 1 = "
+                         "serial; use ~sessions for an honest "
+                         "fleet-scale load)")
     ap.add_argument("--deadline", type=float, default=240.0)
     ap.add_argument("--json-out", default=None, metavar="PATH")
     args = ap.parse_args(argv)
@@ -168,7 +205,8 @@ def main(argv=None):
                       seconds=args.seconds, theta=args.theta,
                       max_level=args.max_level, engine=args.engine,
                       fault_spec=spec, verify=args.verify,
-                      deadline_s=args.deadline)
+                      deadline_s=args.deadline,
+                      producers=args.producers)
     for sid, row in report["sessions"].items():
         print(f"[load] {sid}: {row['deltas']}/{row['windows']} windows, "
               f"{row['reconnects']} reconnects"

@@ -99,8 +99,7 @@ def _vmapped_a2():
 
 @functools.lru_cache(maxsize=None)
 def _vmapped_mapc(lcap: int):
-    return jax.jit(jax.vmap(
-        lambda *args: _map_all_segments(*args, lcap)))
+    return jax.jit(jax.vmap(lambda *args: _map_all_segments(*args, lcap)))
 
 
 # per-kind padding specs for the episode (M) axis: (axis in each operand,
@@ -108,12 +107,11 @@ def _vmapped_mapc(lcap: int):
 # interaction), so padding rows with inert machines is bit-safe for the
 # real rows — results are sliced back to the caller's M.
 _NEG = int(TIME_NEG_INF)  # "empty slot" filler for padded machine state
-_PAD_A1 = ((0, 0), (0, 0), (0, 1), (None, 0), (None, 0),
-           (0, _NEG), (0, 0), (0, 0), (0, 0))
-_PAD_A2 = ((0, 0), (0, 0), (0, 1), (None, 0), (None, 0),
-           (0, _NEG), (0, 0))
-_PAD_MAPC = ((None, 0), (None, 0), (0, 0), (0, 0), (0, 1), (None, 0),
-             (0, 1))
+_PAD_A1 = (
+    (0, 0), (0, 0), (0, 1), (None, 0), (None, 0), (0, _NEG), (0, 0), (0, 0), (0, 0)
+)
+_PAD_A2 = ((0, 0), (0, 0), (0, 1), (None, 0), (None, 0), (0, _NEG), (0, 0))
+_PAD_MAPC = ((None, 0), (None, 0), (0, 0), (0, 0), (0, 1), (None, 0), (0, 1))
 
 # event-operand spec per kind for the adaptive L re-bucketing:
 # {operand index: event axis}. Padded events are machine no-ops (type =
@@ -121,13 +119,13 @@ _PAD_MAPC = ((None, 0), (None, 0), (0, 0), (0, 0), (0, 1), (None, 0),
 # flags are false on and before the pad tail), so padding a lane's event
 # operands to the fused group's max length is bit-safe.
 _EV_AXES = {
-    "a1": {3: 0, 4: 0},    # ev_types[L], ev_times[L]
+    "a1": {3: 0, 4: 0},  # ev_types[L], ev_times[L]
     "a2": {3: 0, 4: 0},
     "mapc": {0: 1, 1: 1},  # wt[Q, L], wtt[Q, L]
-    "a1k": {3: 1},         # ev brick [3, EP]
-    "a2k": {3: 1},         # ev brick [2, EP]
-    "mapck": {5: 2},       # segment bricks [P, 5, LW]
-    "mapcs": {5: 2},       # sharded segment bricks [P, 5, LW]
+    "a1k": {3: 1},  # ev brick [3, EP]
+    "a2k": {3: 1},  # ev brick [2, EP]
+    "mapck": {5: 2},  # segment bricks [P, 5, LW]
+    "mapcs": {5: 2},  # sharded segment bricks [P, 5, LW]
 }
 
 
@@ -158,15 +156,54 @@ def _pad_events(kind: str, args, l_to: int):
             continue
         pad = [(0, 0)] * a.ndim
         pad[axis] = (0, grow)
-        all_types = (kind in ("a1", "a2") and idx == 3) or \
-            (kind == "mapc" and idx == 0)
+        all_types = (kind in ("a1", "a2") and idx == 3) or (kind == "mapc" and idx == 0)
         a = jnp.pad(a, pad, constant_values=PAD_TYPE if all_types else 0)
-        if kind in ("a1k", "a2k"):          # ev brick: types = row 0
+        if kind in ("a1k", "a2k"):  # ev brick: types = row 0
             a = a.at[0, l_to - grow:].set(PAD_TYPE)
-        elif kind in ("mapck", "mapcs"):    # segment brick: types = row 0
+        elif kind in ("mapck", "mapcs"):  # segment brick: types = row 0
             a = a.at[:, 0, l_to - grow:].set(PAD_TYPE)
         args[idx] = a
     return tuple(args)
+
+
+# seam kind -> the calibrated engine whose standalone cost stands in for
+# one lane of that seam (a2 has no separate table entry: its scan is the
+# same event walk with a narrower state, ptpe is the honest stand-in)
+_PRIOR_ENGINE = {
+    "a1": "ptpe",
+    "a2": "ptpe",
+    "a1k": "ptpe",
+    "a2k": "ptpe",
+    "mapc": "mapconcatenate",
+    "mapck": "mapconcat_kernel",
+    "mapcs": "mapconcat_sharded",
+}
+
+
+def _policy_prior(key) -> float | None:
+    """Calibrated standalone-launch estimate for one seam key, or
+    ``None`` when no table is installed (the gate then keeps its
+    optimistic fuse-first prior).  Decodes the per-seam key layouts
+    documented on the seam methods below."""
+    from repro.core.calibrate import get_policy
+    kind = key[0]
+    engine = _PRIOR_ENGINE.get(kind)
+    if engine is None:
+        return None
+    q = devices = 1
+    if kind in ("a1", "a2"):  # ("a1", mb, n[, lcap])
+        m, n = key[1], key[2]
+    elif kind == "mapc":  # ("mapc", mb, n, Q, lcap)
+        m, n, q = key[1], key[2], key[3]
+    elif kind == "a1k":  # ("a1k", n, lcap, interp, shape)
+        n, m = key[1], key[4][1]
+    elif kind == "a2k":  # ("a2k", n, interp, shape)
+        n, m = key[1], key[3][1]
+    else:  # ("mapck"/"mapcs", n, lcap,
+        n, m, q = key[1], key[4][1], key[5]  # interp, shape, P[, d])
+        if kind == "mapcs":
+            devices = key[6]
+    return get_policy().predict_single(engine, n_episode=n, m=m, q=q, devices=devices)
 
 
 class FusionCostModel:
@@ -186,10 +223,11 @@ class FusionCostModel:
     ``"standalone"`` means the measurement says per-lane dispatches
     win."""
 
-    def __init__(self, alpha: float = 0.25, threshold: float = 1.0):
+    def __init__(self, alpha: float = 0.25, threshold: float = 1.0, prior=None):
         self.alpha = alpha
         self.threshold = threshold
-        self._fused: dict = {}   # (key, lane bucket) -> EWMA seconds
+        self.prior = prior  # key -> est. standalone seconds | None
+        self._fused: dict = {}  # (key, lane bucket) -> EWMA seconds
         self._single: dict = {}  # key -> EWMA seconds
         self._warm: set = set()  # combos whose compile sample is spent
 
@@ -214,6 +252,13 @@ class FusionCostModel:
     def decide(self, key, lanes: int) -> str:
         single = self._single.get(key)
         fused = self._fused.get((key, bucket_size(lanes, 1)))
+        if single is None and self.prior is not None:
+            # calibrated standalone estimate: lets a measured fused cost
+            # trigger "standalone" before any organic singleton flush of
+            # this key has been observed
+            single = self.prior(key)
+            if single is not None:
+                REGISTRY.counter("batcher_fusion_prior_total", kind=key[0]).inc()
         if fused is None or single is None:
             return "fuse"  # optimistic until both sides are measured
         if fused <= self.threshold * lanes * single:
@@ -222,21 +267,33 @@ class FusionCostModel:
 
 
 class _Request:
-    __slots__ = ("kind", "key", "args", "spec", "static", "m", "mb",
-                 "event", "result", "error", "sid", "run_self")
+    __slots__ = (
+        "kind",
+        "key",
+        "args",
+        "spec",
+        "static",
+        "m",
+        "mb",
+        "event",
+        "result",
+        "error",
+        "sid",
+        "run_self",
+    )
 
     def __init__(self, kind, key, args, spec, static, m, mb):
         self.kind = kind
         self.key = key
-        self.args = args    # raw (unpadded) operands
-        self.spec = spec    # episode-axis pad spec, applied only on fusion
+        self.args = args  # raw (unpadded) operands
+        self.spec = spec  # episode-axis pad spec, applied only on fusion
         self.static = static
-        self.m = m          # real episode count (fused results sliced back)
-        self.mb = mb        # shared M bucket this request groups under
+        self.m = m  # real episode count (fused results sliced back)
+        self.mb = mb  # shared M bucket this request groups under
         self.event = threading.Event()
         self.result = None
         self.error = None
-        self.sid = None       # owning step's session id
+        self.sid = None  # owning step's session id
         self.run_self = False  # gate verdict: owner launches its own lane
 
 
@@ -259,33 +316,36 @@ class CrossSessionBatcher:
     submitting thread claims — an all-wildcard fleet reproduces the old
     all-parked global barrier exactly."""
 
-    def __init__(self, max_pad_ratio: float = 4.0,
-                 fusion_gate: bool = True,
-                 flush_deadline_s: float = 0.5):
+    def __init__(
+        self,
+        max_pad_ratio: float = 4.0,
+        fusion_gate: bool = True,
+        flush_deadline_s: float = 0.5,
+    ):
         self._lock = threading.Lock()
         self._local = threading.local()
         # group-scoped flush state: pending requests per shape key, the
         # live step set, and per-step predicted/observed key multisets
         self._pending: dict[tuple, list[_Request]] = {}
         self._alive: set[str] = set()
-        self._wildcard: set[str] = set()      # steps with no prediction
+        self._wildcard: set[str] = set()  # steps with no prediction
         self._remaining: dict[str, Counter] = {}  # predicted, not yet seen
-        self._seen: dict[str, Counter] = {}       # submitted this step
+        self._seen: dict[str, Counter] = {}  # submitted this step
         self._predicted: dict[str, Counter] = {}  # learned at end_step
-        self._parked: Counter = Counter()         # parked requests per step
+        self._parked: Counter = Counter()  # parked requests per step
         self._anon_pool: deque[str] = deque()
         self._anon_ids = itertools.count()
-        self.cost_model = FusionCostModel()
+        self.cost_model = FusionCostModel(prior=_policy_prior)
         self.fusion_gate = fusion_gate
         # safety net for stale predictions: a parked group force-flushes
         # after this many seconds even if a predicted member never shows
         self.flush_deadline_s = flush_deadline_s
-        self.batches = 0        # flushes that actually fused >1 request
+        self.batches = 0  # flushes that actually fused >1 request
         self.fused_requests = 0
-        self.split_groups = 0   # oversized groups split to cap pad waste
-        self.pad_events = 0     # event slots added padding lanes to max L
-        self.pad_lanes = 0      # repeated lanes padding groups to 2^k
-        self.flush_groups = 0   # group flushes, any gate decision
+        self.split_groups = 0  # oversized groups split to cap pad waste
+        self.pad_events = 0  # event slots added padding lanes to max L
+        self.pad_lanes = 0  # repeated lanes padding groups to 2^k
+        self.flush_groups = 0  # group flushes, any gate decision
         self.deadline_flushes = 0
         self.gate_decisions: Counter = Counter()
         # adaptive-L guardrail: a lane may be padded to at most this
@@ -303,16 +363,14 @@ class CrossSessionBatcher:
         m, n = args[0].shape
         mb = bucket_size(m, 8)
         key = ("a1", mb, n, args[5].shape[-1])
-        return self._submit(
-            _Request("a1", key, args, _PAD_A1, None, m, mb))
+        return self._submit(_Request("a1", key, args, _PAD_A1, None, m, mb))
 
     def a2_scan(self, args):
         # (etypes[M,N], tlo, thi, ev_t[L], ev_tt[L], s[M,N], c)
         m, n = args[0].shape
         mb = bucket_size(m, 8)
         key = ("a2", mb, n)
-        return self._submit(
-            _Request("a2", key, args, _PAD_A2, None, m, mb))
+        return self._submit(_Request("a2", key, args, _PAD_A2, None, m, mb))
 
     def mapc_scan(self, args, lcap: int):
         # (wt[Q,L], wtt, etypes[M,N], tlo, thi, tau[Q+1], w[M]) — the
@@ -320,49 +378,62 @@ class CrossSessionBatcher:
         m, n = args[2].shape
         mb = bucket_size(m, 8)
         key = ("mapc", mb, n, args[0].shape[0], lcap)
-        return self._submit(
-            _Request("mapc", key, args, _PAD_MAPC, lcap, m, mb))
+        return self._submit(_Request("mapc", key, args, _PAD_MAPC, lcap, m, mb))
 
-    def a1_kernel_scan(self, args, n_levels: int, lcap: int,
-                       interpret: bool):
+    def a1_kernel_scan(self, args, n_levels: int, lcap: int, interpret: bool):
         # kernel-layout operands: (et[NP,MP], tlo, thi, ev[3,EP],
         # s[NP,LCAP,MP], po, cnt[8,MP], ovf) — lanes fuse on identical
         # episode/state shapes; the event brick pads to the group max EP
         key = ("a1k", n_levels, lcap, interpret, tuple(args[0].shape))
-        return self._submit(_Request("a1k", key, args, None,
-                                     (n_levels, lcap, interpret), None,
-                                     None))
+        return self._submit(
+            _Request("a1k", key, args, None, (n_levels, lcap, interpret), None, None)
+        )
 
     def a2_kernel_scan(self, args, n_levels: int, interpret: bool):
         # kernel-layout operands: (et[NP,MP], tlo, thi, ev[2,EP], s[NP,MP],
         # cnt[8,MP])
         key = ("a2k", n_levels, interpret, tuple(args[0].shape))
-        return self._submit(_Request("a2k", key, args, None,
-                                     (n_levels, interpret), None, None))
+        return self._submit(
+            _Request("a2k", key, args, None, (n_levels, interpret), None, None)
+        )
 
-    def mapc_kernel_scan(self, args, n_levels: int, lcap: int,
-                         interpret: bool):
+    def mapc_kernel_scan(self, args, n_levels: int, lcap: int, interpret: bool):
         # segmented-kernel operands: (et[NP,MP], tlo, thi, cum[NP,MP],
         # w[8,MP], segs[P,5,LW]) — P stays in the key, LW pads to the
         # group max
-        key = ("mapck", n_levels, lcap, interpret, tuple(args[0].shape),
-               args[5].shape[0])
-        return self._submit(_Request("mapck", key, args, None,
-                                     (n_levels, lcap, interpret), None,
-                                     None))
+        key = ("mapck", n_levels, lcap, interpret, tuple(args[0].shape), args[5].shape[0])
+        return self._submit(
+            _Request("mapck", key, args, None, (n_levels, lcap, interpret), None, None)
+        )
 
-    def mapc_sharded_scan(self, args, n_levels: int, lcap: int,
-                          interpret: bool, num_devices: int):
+    def mapc_sharded_scan(
+        self, args, n_levels: int, lcap: int, interpret: bool, num_devices: int
+    ):
         # mesh-sharded segmented launch: same operands as mapc_kernel_scan
         # with the segment axis sharded over ``num_devices`` mesh devices
         # at dispatch. Fused groups vmap over the lane (session) axis
         # inside the shard_map, so the whole fleet's commits run as one
         # per-device launch; P and the device count stay in the key.
-        key = ("mapcs", n_levels, lcap, interpret, tuple(args[0].shape),
-               args[5].shape[0], num_devices)
-        return self._submit(_Request("mapcs", key, args, None,
-                                     (n_levels, lcap, interpret,
-                                      num_devices), None, None))
+        key = (
+            "mapcs",
+            n_levels,
+            lcap,
+            interpret,
+            tuple(args[0].shape),
+            args[5].shape[0],
+            num_devices,
+        )
+        return self._submit(
+            _Request(
+                "mapcs",
+                key,
+                args,
+                None,
+                (n_levels, lcap, interpret, num_devices),
+                None,
+                None,
+            ),
+        )
 
     # --------------------------------------------------- step accounting
 
@@ -381,8 +452,9 @@ class CrossSessionBatcher:
                 self._anon_pool.append(sid)
             self._alive.add(sid)
             self._seen[sid] = Counter()
-            pred = (Counter(expected) if expected is not None
-                    else self._predicted.get(sid))
+            pred = (
+                Counter(expected) if expected is not None else self._predicted.get(sid)
+            )
             if pred is None:
                 self._wildcard.add(sid)
                 self._remaining[sid] = Counter()
@@ -401,8 +473,7 @@ class CrossSessionBatcher:
         without submitting (early error included) must release any group
         that was waiting on it."""
         with self._lock:
-            sid = (session if session is not None
-                   else self._thread_sid_locked())
+            sid = (session if session is not None else self._thread_sid_locked())
             self._local.sid = None
             if sid is not None:
                 self._alive.discard(sid)
@@ -473,8 +544,7 @@ class CrossSessionBatcher:
                         # a predicted member never showed and never parked
                         # elsewhere — stale prediction; force the flush
                         self.deadline_flushes += 1
-                        REGISTRY.counter(
-                            "batcher_deadline_flush_total").inc()
+                        REGISTRY.counter("batcher_deadline_flush_total").inc()
                         late = self._take_group_locked(req.key)
                 self._run_flushes(late)
         if req.run_self:
@@ -538,8 +608,7 @@ class CrossSessionBatcher:
             decision = self.cost_model.decide(key, lanes)
         with self._lock:
             self.gate_decisions[decision] += 1
-        REGISTRY.counter("batcher_fusion_gate_total",
-                         decision=decision).inc()
+        REGISTRY.counter("batcher_fusion_gate_total", decision=decision).inc()
         with span("batch.gate", kind=kind, lanes=lanes, decision=decision):
             pass  # zero-width marker: step_breakdown tallies decisions
         if decision != "fuse":
@@ -567,8 +636,9 @@ class CrossSessionBatcher:
         cut wherever a lane would exceed ``max_pad_ratio`` × the smallest
         length of its (sub)group — each side still fuses (lengths are
         power-of-two buckets, so splits are rare and stable)."""
-        if (self.max_pad_ratio is None or len(group) < 2
-                or group[0].kind not in _EV_AXES):
+        if (
+            self.max_pad_ratio is None or len(group) < 2 or group[0].kind not in _EV_AXES
+        ):
             return [group]
         ev_axes = _EV_AXES[group[0].kind]
 
@@ -587,8 +657,7 @@ class CrossSessionBatcher:
         if len(subs) > 1:
             with self._lock:
                 self.split_groups += len(subs) - 1
-            REGISTRY.counter("batcher_split_groups_total").inc(
-                len(subs) - 1)
+            REGISTRY.counter("batcher_split_groups_total").inc(len(subs) - 1)
         return subs
 
     @staticmethod
@@ -617,49 +686,42 @@ class CrossSessionBatcher:
         # BlockSpec evenly. np.shape: reading a length must not trigger a
         # host→device transfer of the whole buffer.
         ev_axes = _EV_AXES[kind]
-        l_to = max(np.shape(r.args[i])[ax] for r in group
-                   for i, ax in ev_axes.items())
+        l_to = max(np.shape(r.args[i])[ax] for r in group for i, ax in ev_axes.items())
         with span("batch.pad_fuse", kind=kind, lanes=len(group)):
             waste = sum(
-                l_to - max(np.shape(r.args[i])[ax]
-                           for i, ax in ev_axes.items())
-                for r in group)
+                l_to - max(np.shape(r.args[i])[ax] for i, ax in ev_axes.items())
+                for r in group
+            )
             with self._lock:
                 self.pad_events += waste
                 self.pad_lanes += s - len(group)
             REGISTRY.counter("batcher_pad_events_total").inc(waste)
-            REGISTRY.counter("batcher_pad_lanes_total").inc(
-                s - len(group))
+            REGISTRY.counter("batcher_pad_lanes_total").inc(s - len(group))
             lane_args = [_pad_events(kind, r.args, l_to) for r in lanes]
             if kind not in ("a1k", "a2k", "mapck", "mapcs"):  # M-axis pad
-                lane_args = [_pad_m(p, r.spec, r.mb)
-                             for p, r in zip(lane_args, lanes)]
-            stacked = tuple(jnp.stack([jnp.asarray(p[i])
-                                       for p in lane_args])
-                            for i in range(len(group[0].args)))
+                lane_args = [_pad_m(p, r.spec, r.mb) for p, r in zip(lane_args, lanes)]
+            stacked = tuple(
+                jnp.stack([jnp.asarray(p[i]) for p in lane_args])
+                for i in range(len(group[0].args))
+            )
         with span("batch.device_launch", kind=kind, lanes=len(group)):
             if kind in ("a1k", "a2k", "mapck", "mapcs"):
                 from repro.kernels import ops as kops
                 if kind == "mapcs":
                     d = group[0].static[3]
                     kops.KERNEL_CALLS["a1_mapc_shard"] += len(group) * d
-                    out = kops.a1_mapc_sharded_vmapped(
-                        *group[0].static)(*stacked)
+                    out = kops.a1_mapc_sharded_vmapped(*group[0].static)(*stacked)
                 else:
                     kops.KERNEL_CALLS[
                         {"a1k": "a1_state", "a2k": "a2_state",
                          "mapck": "a1_mapc"}[kind]] += len(group)
                     if kind == "a1k":
-                        out = kops.a1_state_vmapped(
-                            *group[0].static)(*stacked)
+                        out = kops.a1_state_vmapped(*group[0].static)(*stacked)
                     elif kind == "a2k":
-                        out = kops.a2_state_vmapped(
-                            *group[0].static)(*stacked)
+                        out = kops.a2_state_vmapped(*group[0].static)(*stacked)
                     else:
-                        out = kops.a1_mapc_vmapped(
-                            *group[0].static)(*stacked)
-                results = [tuple(o[i] for o in out)
-                           for i in range(len(group))]
+                        out = kops.a1_mapc_vmapped(*group[0].static)(*stacked)
+                results = [tuple(o[i] for o in out) for i in range(len(group))]
             else:
                 if kind == "a1":
                     out = _vmapped_a1()(*stacked)
@@ -667,11 +729,11 @@ class CrossSessionBatcher:
                     out = _vmapped_a2()(*stacked)
                 else:
                     out = _vmapped_mapc(group[0].static)(*stacked)
-                results = [self._slice(r, tuple(o[i] for o in out))
-                           for i, r in enumerate(group)]
+                results = [
+                    self._slice(r, tuple(o[i] for o in out)) for i, r in enumerate(group)
+                ]
         with self._lock:
-            self.cost_model.observe_fused(key, len(group),
-                                          time.perf_counter() - t0)
+            self.cost_model.observe_fused(key, len(group), time.perf_counter() - t0)
         return results
 
     def _run_single_timed(self, req: _Request):
@@ -683,8 +745,7 @@ class CrossSessionBatcher:
         with span("batch.self_launch", kind=req.kind):
             out = self._run_single(req)
         with self._lock:
-            self.cost_model.observe_single(req.key,
-                                           time.perf_counter() - t0)
+            self.cost_model.observe_single(req.key, time.perf_counter() - t0)
         return out
 
     @staticmethod
@@ -700,22 +761,27 @@ class CrossSessionBatcher:
         if req.kind == "a1k":
             from repro.kernels import ops as kops
             n_levels, lcap, interpret = req.static
-            return kops.a1_state_call(*req.args, n_levels=n_levels,
-                                      lcap=lcap, interpret=interpret)
+            return kops.a1_state_call(
+                *req.args, n_levels=n_levels, lcap=lcap, interpret=interpret
+            )
         if req.kind == "a2k":
             from repro.kernels import ops as kops
             n_levels, interpret = req.static
-            return kops.a2_state_call(*req.args, n_levels=n_levels,
-                                      interpret=interpret)
+            return kops.a2_state_call(*req.args, n_levels=n_levels, interpret=interpret)
         if req.kind == "mapck":
             from repro.kernels import ops as kops
             n_levels, lcap, interpret = req.static
-            return kops.a1_mapconcat_tuples(*req.args, n_levels=n_levels,
-                                            lcap=lcap, interpret=interpret)
+            return kops.a1_mapconcat_tuples(
+                *req.args, n_levels=n_levels, lcap=lcap, interpret=interpret
+            )
         if req.kind == "mapcs":
             from repro.kernels import ops as kops
             n_levels, lcap, interpret, d = req.static
             return kops.a1_mapconcat_sharded_tuples(
-                *req.args, n_levels=n_levels, lcap=lcap,
-                interpret=interpret, num_devices=d)
+                *req.args,
+                n_levels=n_levels,
+                lcap=lcap,
+                interpret=interpret,
+                num_devices=d,
+            )
         return _map_all_segments(*req.args, req.static)

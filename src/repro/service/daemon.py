@@ -50,7 +50,7 @@ from repro.obs import REGISTRY
 class DaemonConfig:
     address: str = "127.0.0.1:0"
     data_dir: str = "serve-data"
-    pidfile: str | None = None          # default: <data_dir>/daemon.pid
+    pidfile: str | None = None  # default: <data_dir>/daemon.pid
     checkpoint_every: int = 1
     keep_checkpoints: int = 2
     heartbeat_s: float = 0.5
@@ -58,12 +58,12 @@ class DaemonConfig:
     queue_depth: int = 8
     pipeline_depth: int = 2
     batching: bool = True
-    crash_after_commits: int | None = None   # fault injection
+    policy_table: str | None = None  # calibrated dispatch table path
+    crash_after_commits: int | None = None  # fault injection
 
     @property
     def pidfile_path(self) -> Path:
-        return Path(self.pidfile if self.pidfile
-                    else Path(self.data_dir) / "daemon.pid")
+        return Path(self.pidfile if self.pidfile else Path(self.data_dir) / "daemon.pid")
 
 
 class MiningDaemon:
@@ -77,14 +77,19 @@ class MiningDaemon:
             policy=SchedulerPolicy(
                 max_sessions=self.config.max_sessions,
                 max_pending_windows=self.config.queue_depth,
-                pipeline_depth=self.config.pipeline_depth),
-            batching=self.config.batching)
+                pipeline_depth=self.config.pipeline_depth,
+                policy_table=self.config.policy_table,
+            ),
+            batching=self.config.batching,
+        )
         self.server = WireServer(
-            self.service, self.config.address,
+            self.service,
+            self.config.address,
             data_dir=self.config.data_dir,
             checkpoint_every=self.config.checkpoint_every,
             keep_checkpoints=self.config.keep_checkpoints,
-            crash_after_commits=self.config.crash_after_commits)
+            crash_after_commits=self.config.crash_after_commits,
+        )
         self.started_at: float | None = None
         self._hb_thread = None
 
@@ -94,12 +99,17 @@ class MiningDaemon:
         p = self.config.pidfile_path
         p.parent.mkdir(parents=True, exist_ok=True)
         tmp = p.with_suffix(".pid.tmp")
-        tmp.write_text(json.dumps({
-            "pid": os.getpid(),
-            "address": self.server.address,
-            "data_dir": str(self.config.data_dir),
-            "started_at": self.started_at,
-        }, indent=1))
+        tmp.write_text(
+            json.dumps(
+                {
+                    "pid": os.getpid(),
+                    "address": self.server.address,
+                    "data_dir": str(self.config.data_dir),
+                    "started_at": self.started_at,
+                },
+                indent=1,
+            ),
+        )
         os.replace(tmp, p)
 
     @staticmethod
@@ -145,8 +155,7 @@ class MiningDaemon:
     def _heartbeat_loop(self) -> None:
         while not self.server.stop_requested:
             REGISTRY.gauge("daemon_heartbeat_ts").set(time.time())
-            REGISTRY.gauge("daemon_uptime_s").set(
-                time.time() - self.started_at)
+            REGISTRY.gauge("daemon_uptime_s").set(time.time() - self.started_at)
             self.server.wait_stop(self.config.heartbeat_s)
 
     def run(self) -> None:
@@ -160,11 +169,14 @@ class MiningDaemon:
         signal.signal(signal.SIGTERM, lambda *_: self.server._stop.set())
         signal.signal(signal.SIGINT, lambda *_: self.server._stop.set())
         self._hb_thread = threading.Thread(
-            target=self._heartbeat_loop, daemon=True, name="daemon-hb")
+            target=self._heartbeat_loop, daemon=True, name="daemon-hb"
+        )
         self._hb_thread.start()
-        print(f"[daemon] serving on {addr} "
-              f"(data: {self.config.data_dir}, pid {os.getpid()})",
-              flush=True)
+        print(
+            f"[daemon] serving on {addr} "
+            f"(data: {self.config.data_dir}, pid {os.getpid()})",
+            flush=True,
+        )
         self.server.wait_stop()
         print("[daemon] draining...", flush=True)
         self.server.shutdown(drain=True)
@@ -192,6 +204,8 @@ class MiningDaemon:
                 "--pipeline-depth", str(cfg.pipeline_depth)]
         if cfg.pidfile:
             argv += ["--pidfile", str(cfg.pidfile)]
+        if cfg.policy_table:
+            argv += ["--policy-table", str(cfg.policy_table)]
         if cfg.crash_after_commits is not None:
             argv += ["--crash-after-commits", str(cfg.crash_after_commits)]
         pid = os.fork()
@@ -202,15 +216,18 @@ class MiningDaemon:
             devnull = os.open(os.devnull, os.O_RDWR)
             os.dup2(devnull, 0)
             Path(cfg.data_dir).mkdir(parents=True, exist_ok=True)
-            log = os.open(str(Path(cfg.data_dir) / "daemon.log"),
-                          os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
+            log = os.open(
+                str(Path(cfg.data_dir) / "daemon.log"),
+                os.O_WRONLY | os.O_CREAT | os.O_APPEND,
+                0o644,
+            )
             os.dup2(log, 1)
             os.dup2(log, 2)
             env = dict(os.environ)
             src = str(Path(__file__).resolve().parents[2])
             env["PYTHONPATH"] = src + (
-                os.pathsep + env["PYTHONPATH"]
-                if env.get("PYTHONPATH") else "")
+                os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+            )
             os.execve(sys.executable, argv, env)
         os.waitpid(pid, 0)  # reap the intermediate
         deadline = time.monotonic() + ready_timeout_s
@@ -233,10 +250,10 @@ def serve_foreground(config: DaemonConfig) -> None:
 def main(argv=None):
     import argparse
 
-    ap = argparse.ArgumentParser(
-        description="Run the wire-served mining daemon.")
-    ap.add_argument("--listen", default="127.0.0.1:0",
-                    help='"host:port" or "unix:/path/to.sock"')
+    ap = argparse.ArgumentParser(description="Run the wire-served mining daemon.")
+    ap.add_argument(
+        "--listen", default="127.0.0.1:0", help='"host:port" or "unix:/path/to.sock"'
+    )
     ap.add_argument("--data-dir", default="serve-data")
     ap.add_argument("--pidfile", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=1)
@@ -244,16 +261,33 @@ def main(argv=None):
     ap.add_argument("--queue-depth", type=int, default=8)
     ap.add_argument("--max-sessions", type=int, default=64)
     ap.add_argument("--pipeline-depth", type=int, default=2)
-    ap.add_argument("--crash-after-commits", type=int, default=None,
-                    help="fault injection: SIGKILL self after N commits")
+    ap.add_argument(
+        "--policy-table",
+        default=None,
+        metavar="PATH",
+        help="calibrated dispatch table to install " "(core.calibrate)",
+    )
+    ap.add_argument(
+        "--crash-after-commits",
+        type=int,
+        default=None,
+        help="fault injection: SIGKILL self after N commits",
+    )
     args = ap.parse_args(argv)
-    serve_foreground(DaemonConfig(
-        address=args.listen, data_dir=args.data_dir, pidfile=args.pidfile,
-        checkpoint_every=args.checkpoint_every,
-        keep_checkpoints=args.keep_checkpoints,
-        queue_depth=args.queue_depth, max_sessions=args.max_sessions,
-        pipeline_depth=args.pipeline_depth,
-        crash_after_commits=args.crash_after_commits))
+    serve_foreground(
+        DaemonConfig(
+            address=args.listen,
+            data_dir=args.data_dir,
+            pidfile=args.pidfile,
+            checkpoint_every=args.checkpoint_every,
+            keep_checkpoints=args.keep_checkpoints,
+            queue_depth=args.queue_depth,
+            max_sessions=args.max_sessions,
+            pipeline_depth=args.pipeline_depth,
+            policy_table=args.policy_table,
+            crash_after_commits=args.crash_after_commits,
+        ),
+    )
 
 
 if __name__ == "__main__":

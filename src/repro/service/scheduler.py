@@ -96,8 +96,14 @@ class SchedulerPolicy:
     # same step (affinity-ordered, so same-shape tenants stay
     # co-resident and their flush groups still fill).
     max_concurrent_lanes: int | None = None
+    # Calibrated-dispatch table (core.calibrate) to install at service
+    # construction: a path to a cached table JSON. None keeps whatever
+    # policy the process already has (heuristic unless the environment
+    # opted in); a stale/wrong-device table degrades to the heuristic.
+    policy_table: str | None = None
     watchdog: WatchdogConfig = dataclasses.field(
-        default_factory=lambda: WatchdogConfig(min_deadline_s=60.0))
+        default_factory=lambda: WatchdogConfig(min_deadline_s=60.0)
+    )
 
 
 class RoundRobinScheduler:
@@ -143,8 +149,7 @@ class RoundRobinScheduler:
         try:
             return self.sessions[session_id]
         except KeyError:
-            raise UnknownSessionError(
-                f"unknown session {session_id!r}") from None
+            raise UnknownSessionError(f"unknown session {session_id!r}") from None
 
     def evict(self, session_id: str) -> MiningSession:
         s = self.session(session_id)
@@ -164,16 +169,14 @@ class RoundRobinScheduler:
 
     # ------------------------------------------------------- ingestion
 
-    def submit(self, session_id: str, window: EventStream,
-               final: bool = False) -> None:
+    def submit(self, session_id: str, window: EventStream, final: bool = False) -> None:
         s = self.session(session_id)
         if s.queue_depth >= self.policy.max_pending_windows:
             # the producer must shed or spool this window upstream —
             # count it: shed pressure is the service's earliest overload
             # signal and invisible in throughput numbers alone
             REGISTRY.counter("scheduler_backpressure_total").inc()
-            REGISTRY.counter("scheduler_shed_windows_total",
-                             session=session_id).inc()
+            REGISTRY.counter("scheduler_shed_windows_total", session=session_id).inc()
             raise BackpressureError(
                 f"session {session_id!r} queue at depth {s.queue_depth} "
                 f"(cap {self.policy.max_pending_windows})")
@@ -228,8 +231,7 @@ class RoundRobinScheduler:
         if need:
             with span("schedule.snapshot", sessions=len(need)):
                 for s in need:
-                    prep = s.prepare(
-                        snapshot=self.policy.retry_snapshots)
+                    prep = s.prepare(snapshot=self.policy.retry_snapshots)
                     if prep is not None:
                         staged[s.session_id] = prep
                         order.append(s)
@@ -248,15 +250,14 @@ class RoundRobinScheduler:
         REGISTRY.gauge("scheduler_heartbeat_ts").set_now()
         return out
 
-    def _step_staged(self, staged: dict[str, PreparedStep],
-                     order: list[MiningSession]):
-        pipelined = (self.batcher is not None and len(order) > 1
-                     and self.policy.pipeline_depth > 1)
+    def _step_staged(self, staged: dict[str, PreparedStep], order: list[MiningSession]):
+        pipelined = (
+            self.batcher is not None and len(order) > 1 and self.policy.pipeline_depth > 1
+        )
         # Next step's service order, fixed before this step runs: staging
         # already popped this step's windows, so queue depths and the
         # rotated _rr are exactly what _choose would see afterwards.
-        next_plan = ([s.session_id for s in self._choose()]
-                     if pipelined else [])
+        next_plan = ([s.session_id for s in self._choose()] if pipelined else [])
         if not self.policy.retry_snapshots:
             def runner():
                 try:
@@ -270,8 +271,7 @@ class RoundRobinScheduler:
 
             def runner():
                 if attempt[0]:  # retry: rewind every lane to its snapshot
-                    REGISTRY.counter(
-                        "scheduler_watchdog_retries_total").inc()
+                    REGISTRY.counter("scheduler_watchdog_retries_total").inc()
                     self._rewind(staged, order)
                 attempt[0] += 1
                 return self._run_batch(staged, order, next_plan)
@@ -294,8 +294,9 @@ class RoundRobinScheduler:
         self._plan = next_plan
         return out
 
-    def _rewind(self, staged: dict[str, PreparedStep],
-                order: list[MiningSession]) -> None:
+    def _rewind(
+        self, staged: dict[str, PreparedStep], order: list[MiningSession]
+    ) -> None:
         """Watchdog retry: restore every lane to its pre-step snapshot
         without double-counting. Preps the failed attempt staged for the
         *next* step are dropped first — their windows predate nothing:
@@ -348,8 +349,12 @@ class RoundRobinScheduler:
             n += 1
         return n
 
-    def _run_batch(self, staged: dict[str, PreparedStep],
-                   order: list[MiningSession], next_plan: list[str]):
+    def _run_batch(
+        self,
+        staged: dict[str, PreparedStep],
+        order: list[MiningSession],
+        next_plan: list[str],
+    ):
         if self.batcher is None or len(order) == 1:
             out = {}
             for s in order:
@@ -380,8 +385,7 @@ class RoundRobinScheduler:
                 # lanes still hold the device
                 t0 = time.perf_counter()
                 with span("schedule.stage", session=sid):
-                    nprep = s.prepare(
-                        snapshot=self.policy.retry_snapshots)
+                    nprep = s.prepare(snapshot=self.policy.retry_snapshots)
                 if nprep is not None:
                     self._staged[sid] = nprep
                     overlaps.append(time.perf_counter() - t0)
@@ -394,8 +398,9 @@ class RoundRobinScheduler:
             chunk = lanes[i:i + max(width, 1)]
             for s in chunk:  # register before any worker runs: no early
                 self.batcher.begin_step(s.session_id)  # flush
-            threads = [threading.Thread(target=run_one, args=(s,),
-                                        daemon=True) for s in chunk]
+            threads = [
+                threading.Thread(target=run_one, args=(s,), daemon=True) for s in chunk
+            ]
             for t in threads:
                 t.start()
             for t in threads:
@@ -419,6 +424,5 @@ class RoundRobinScheduler:
             if learned is not None:
                 return ("0",) + learned
             c = s.config
-            return ("1", c.engine, str(c.window_ms), str(c.max_level),
-                    str(c.intervals))
+            return ("1", c.engine, str(c.window_ms), str(c.max_level), str(c.intervals))
         return sorted(order, key=sig)

@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import itertools
 
+from repro.core import calibrate
 from repro.core.events import EventStream
 from repro.obs import REGISTRY, span
 from repro.obs.jaxprof import ensure_recompile_listener
@@ -42,12 +43,16 @@ from .session import MiningSession, SessionConfig, WindowDelta
 
 
 class MiningService:
-    def __init__(self, policy: SchedulerPolicy | None = None,
-                 batching: bool = True):
+    def __init__(self, policy: SchedulerPolicy | None = None, batching: bool = True):
         policy = policy or SchedulerPolicy()
+        if policy.policy_table:
+            # install the calibrated dispatch table for this process;
+            # a stale/wrong-device file degrades to the heuristic (the
+            # outcome is visible in stats()["calibration"]["source"])
+            calibrate.install_table(policy.policy_table)
         self.batcher = CrossSessionBatcher(
-            fusion_gate=policy.fusion_gate,
-            flush_deadline_s=policy.flush_deadline_s) if batching else None
+            fusion_gate=policy.fusion_gate, flush_deadline_s=policy.flush_deadline_s
+        ) if batching else None
         self.scheduler = RoundRobinScheduler(policy, self.batcher)
         self._auto_ids = itertools.count()
         # recompilation is a serving SLO hazard (a shape-bucket miss mid-
@@ -56,8 +61,9 @@ class MiningService:
 
     # --------------------------------------------------------- sessions
 
-    def create_session(self, session_id: str | None = None,
-                       config: SessionConfig | None = None) -> str:
+    def create_session(
+        self, session_id: str | None = None, config: SessionConfig | None = None
+    ) -> str:
         """Admit a tenant (raises ``AdmissionError`` at capacity)."""
         if session_id is None:
             session_id = f"session-{next(self._auto_ids)}"
@@ -76,8 +82,7 @@ class MiningService:
 
     # ------------------------------------------------------ ingest/poll
 
-    def ingest(self, session_id: str, window: EventStream,
-               final: bool = False) -> None:
+    def ingest(self, session_id: str, window: EventStream, final: bool = False) -> None:
         """Queue one partition window (raises ``BackpressureError`` when
         the tenant's queue is full — shed or spool upstream)."""
         with span("service.ingest", session=session_id):
@@ -86,11 +91,9 @@ class MiningService:
     def pump(self, max_steps: int | None = None) -> int:
         """Run batched scheduler steps until queues drain (or the step
         budget runs out). Returns steps run."""
-        return self.scheduler.drain(
-            max_steps=10_000 if max_steps is None else max_steps)
+        return self.scheduler.drain(max_steps=10_000 if max_steps is None else max_steps)
 
-    def poll(self, session_id: str,
-             max_items: int | None = None) -> list[WindowDelta]:
+    def poll(self, session_id: str, max_items: int | None = None) -> list[WindowDelta]:
         """Per-window frequent-episode deltas mined since the last poll."""
         return self.scheduler.session(session_id).poll(max_items)
 
@@ -111,11 +114,9 @@ class MiningService:
         to the same atomic snapshot. Returns {session_id: path}."""
         self.scheduler.quiesce()
         paths = {}
-        with span("service.checkpoint", sessions=len(
-                self.scheduler.sessions)):
+        with span("service.checkpoint", sessions=len(self.scheduler.sessions)):
             for sid, s in self.scheduler.sessions.items():
-                paths[sid] = s.save(
-                    root, extra=None if extra is None else extra(sid))
+                paths[sid] = s.save(root, extra=None if extra is None else extra(sid))
                 REGISTRY.counter("service_checkpoints_total").inc()
         return paths
 
@@ -141,18 +142,17 @@ class MiningService:
         out["scheduler"] = {
             "steps": self.scheduler.steps,
             "retries": self.scheduler.watchdog.retries,
-            "watchdog_retries": int(REGISTRY.counter(
-                "scheduler_watchdog_retries_total").value),
+            "watchdog_retries": int(
+                REGISTRY.counter("scheduler_watchdog_retries_total").value
+            ),
             "sessions": len(self.scheduler.sessions),
             "pending_windows": self.scheduler.pending_windows,
-            "queue_depth": int(REGISTRY.gauge(
-                "scheduler_queue_depth").value),
-            "heartbeat_ts": float(REGISTRY.gauge(
-                "scheduler_heartbeat_ts").value),
-            "backpressure": int(REGISTRY.counter(
-                "scheduler_backpressure_total").value),
-            "admission_rejected": int(REGISTRY.counter(
-                "scheduler_admission_rejected_total").value),
+            "queue_depth": int(REGISTRY.gauge("scheduler_queue_depth").value),
+            "heartbeat_ts": float(REGISTRY.gauge("scheduler_heartbeat_ts").value),
+            "backpressure": int(REGISTRY.counter("scheduler_backpressure_total").value),
+            "admission_rejected": int(
+                REGISTRY.counter("scheduler_admission_rejected_total").value
+            ),
             "pipeline_overlap_s": self.scheduler.pipeline_overlap_s,
         }
         if self.batcher is not None:
@@ -161,58 +161,55 @@ class MiningService:
                 "fused_requests": self.batcher.fused_requests,
                 "pad_events": self.batcher.pad_events,
                 "pad_lanes": self.batcher.pad_lanes,
-                "split_groups": int(REGISTRY.counter(
-                    "batcher_split_groups_total").value),
+                "split_groups": int(REGISTRY.counter("batcher_split_groups_total").value),
                 "flush_groups": self.batcher.flush_groups,
                 "deadline_flushes": self.batcher.deadline_flushes,
                 "fusion_gate": dict(self.batcher.gate_decisions),
             }
+        # dispatch-policy health: table provenance + per-engine decision
+        # counts (dispatch_policy_total{engine=...,source=...})
+        out["calibration"] = calibrate.policy_stats()
         out["wire"] = {
             "connections": int(REGISTRY.gauge("wire_connections").value),
-            "connections_total": int(REGISTRY.counter(
-                "wire_connections_total").value),
-            "frames_rx": int(REGISTRY.counter(
-                "wire_frames_total", dir="rx").value),
-            "frames_tx": int(REGISTRY.counter(
-                "wire_frames_total", dir="tx").value),
-            "bytes_rx": int(REGISTRY.counter(
-                "wire_bytes_total", dir="rx").value),
-            "bytes_tx": int(REGISTRY.counter(
-                "wire_bytes_total", dir="tx").value),
-            "backpressure": int(REGISTRY.counter(
-                "wire_backpressure_total").value),
-            "dedup_hits": int(REGISTRY.counter(
-                "wire_dedup_hits_total").value),
-            "out_of_order": int(REGISTRY.counter(
-                "wire_out_of_order_total").value),
-            "errors": {labels.get("code", "?"): int(m.value)
-                       for labels, m in
-                       REGISTRY.family_items("wire_errors_total")},
+            "connections_total": int(REGISTRY.counter("wire_connections_total").value),
+            "frames_rx": int(REGISTRY.counter("wire_frames_total", dir="rx").value),
+            "frames_tx": int(REGISTRY.counter("wire_frames_total", dir="tx").value),
+            "bytes_rx": int(REGISTRY.counter("wire_bytes_total", dir="rx").value),
+            "bytes_tx": int(REGISTRY.counter("wire_bytes_total", dir="tx").value),
+            "backpressure": int(REGISTRY.counter("wire_backpressure_total").value),
+            "dedup_hits": int(REGISTRY.counter("wire_dedup_hits_total").value),
+            "out_of_order": int(REGISTRY.counter("wire_out_of_order_total").value),
+            "errors": {
+                labels.get("code", "?"): int(m.value)
+                for labels, m in REGISTRY.family_items("wire_errors_total")
+            },
         }
         out["recovery"] = {
-            "cold_boots": int(REGISTRY.counter(
-                "recovery_boots_total").value),
-            "sessions_restored": int(REGISTRY.counter(
-                "recovery_sessions_total").value),
-            "windows_requeued": int(REGISTRY.counter(
-                "recovery_windows_requeued_total").value),
-            "checkpoints": int(REGISTRY.counter(
-                "service_checkpoints_total").value),
-            "quiesced_preps": int(REGISTRY.counter(
-                "scheduler_quiesced_preps_total").value),
+            "cold_boots": int(REGISTRY.counter("recovery_boots_total").value),
+            "sessions_restored": int(REGISTRY.counter("recovery_sessions_total").value),
+            "windows_requeued": int(
+                REGISTRY.counter("recovery_windows_requeued_total").value
+            ),
+            "checkpoints": int(REGISTRY.counter("service_checkpoints_total").value),
+            "quiesced_preps": int(
+                REGISTRY.counter("scheduler_quiesced_preps_total").value
+            ),
         }
         out["daemon"] = {
-            "heartbeat_ts": float(REGISTRY.gauge(
-                "daemon_heartbeat_ts").value),
+            "heartbeat_ts": float(REGISTRY.gauge("daemon_heartbeat_ts").value),
             "uptime_s": float(REGISTRY.gauge("daemon_uptime_s").value),
         }
         out["kernel"] = {
-            "calls": {k: v for k, v in sorted(KERNEL_CALLS.items())
-                      if not k.startswith("fallback:")},
+            "calls": {
+                k: v
+                for k, v in sorted(KERNEL_CALLS.items())
+                if not k.startswith("fallback:")
+            },
             "fallbacks": fallback_counts(),
-            "recompiles": {labels.get("kernel", "?"): m.value
-                           for labels, m in
-                           REGISTRY.family_items("recompiles")},
+            "recompiles": {
+                labels.get("kernel", "?"): m.value
+                for labels, m in REGISTRY.family_items("recompiles")
+            },
         }
         out["metrics"] = REGISTRY.snapshot()
         return out

@@ -28,10 +28,16 @@ NUM_TYPES = 5
 @pytest.fixture(autouse=True)
 def _interpret_kernels(monkeypatch):
     """Force the kernel dispatch policy on (interpret mode) and zero the
-    dispatch tally, so each test can assert the Pallas path executed."""
+    dispatch tally, so each test can assert the Pallas path executed.
+    The hybrid's availability probe is cached per process, so flipping
+    the environment must also drop the cache — both ways, or a suite
+    running earlier (or later) in the same process sees a stale answer."""
+    from repro.core import hybrid
     monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "1")
+    hybrid._reset_probe_cache()
     ops.reset_kernel_calls()
     yield
+    hybrid._reset_probe_cache()
 
 
 def tie_heavy_stream(seed, n=160):

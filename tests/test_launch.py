@@ -85,9 +85,13 @@ def test_act_sanitizes_indivisible_dims():
 def test_hybrid_dispatcher_capacity_aware(monkeypatch):
     from repro.core import hybrid
     assert hybrid.parallel_units() >= 1
-    # single device → crossover 0 → PTPE always
+    # single device, no segmented kernel → crossover 0 → PTPE always
     monkeypatch.setattr(hybrid, "parallel_units", lambda: 1)
+    monkeypatch.setattr(hybrid, "_mapc_kernel_available", lambda: False)
     assert hybrid.crossover(4) == 0
+    # with the kernel the lone device has a real segment axis: f(N)
+    monkeypatch.setattr(hybrid, "_mapc_kernel_available", lambda: True)
+    assert hybrid.crossover(4) == int(hybrid.f_of_n(4))
     monkeypatch.setattr(hybrid, "parallel_units", lambda: 257)
     assert hybrid.crossover(2) > hybrid.crossover(8) > 0
 
