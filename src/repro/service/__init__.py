@@ -6,20 +6,38 @@ memory."""
 from .batcher import CrossSessionBatcher, FusionCostModel
 from .client import DeadlineExceeded, MiningClient, WireError
 from .daemon import DaemonConfig, MiningDaemon
-from .scheduler import (AdmissionError, BackpressureError,
-                        RoundRobinScheduler, SchedulerPolicy,
-                        UnknownSessionError)
+from .scheduler import (
+    AdmissionError,
+    BackpressureError,
+    RoundRobinScheduler,
+    SchedulerPolicy,
+    UnknownSessionError,
+)
 from .server import MiningService
-from .session import (MiningSession, PreparedStep, SessionConfig,
-                      WindowDelta)
+from .session import (MiningSession, PreparedStep, SessionConfig, WindowDelta)
 from .wire import Frame, FrameType, ProtocolError, Status, WireServer
 
 __all__ = [
-    "MiningService", "MiningSession", "SessionConfig", "WindowDelta",
-    "PreparedStep", "CrossSessionBatcher", "FusionCostModel",
-    "RoundRobinScheduler", "SchedulerPolicy",
-    "AdmissionError", "BackpressureError", "UnknownSessionError",
-    "WireServer", "Frame", "FrameType", "Status", "ProtocolError",
-    "MiningClient", "WireError", "DeadlineExceeded",
-    "MiningDaemon", "DaemonConfig",
+    "MiningService",
+    "MiningSession",
+    "SessionConfig",
+    "WindowDelta",
+    "PreparedStep",
+    "CrossSessionBatcher",
+    "FusionCostModel",
+    "RoundRobinScheduler",
+    "SchedulerPolicy",
+    "AdmissionError",
+    "BackpressureError",
+    "UnknownSessionError",
+    "WireServer",
+    "Frame",
+    "FrameType",
+    "Status",
+    "ProtocolError",
+    "MiningClient",
+    "WireError",
+    "DeadlineExceeded",
+    "MiningDaemon",
+    "DaemonConfig",
 ]

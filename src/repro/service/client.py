@@ -38,15 +38,15 @@ from repro.obs import REGISTRY
 
 from . import wire
 from .session import SessionConfig
-from .wire import (ConnectionClosed, Frame, FrameType, ProtocolError, Status,
-                   parse_address)
+from .wire import (
+    ConnectionClosed, Frame, FrameType, ProtocolError, Status, parse_address
+)
 
 
 class WireError(RuntimeError):
     """Typed server-side refusal (carries the ``Status`` code)."""
 
-    def __init__(self, code: Status, detail: str = "", info: dict | None =
-                 None):
+    def __init__(self, code: Status, detail: str = "", info: dict | None = None):
         super().__init__(f"{code.name}: {detail}")
         self.code = code
         self.detail = detail
@@ -71,12 +71,20 @@ class MiningClient:
     # server's per-connection reply cache
     _REQ_BASE = 1 << 32
 
-    def __init__(self, address: str, session_id: str,
-                 config: SessionConfig | None = None, *,
-                 deadline_s: float = 30.0, connect_timeout_s: float = 5.0,
-                 rpc_timeout_s: float = 5.0,
-                 backoff_base: float = 0.05, backoff_cap: float = 2.0,
-                 max_attempts: int = 64, rng_seed: int | None = None):
+    def __init__(
+        self,
+        address: str,
+        session_id: str,
+        config: SessionConfig | None = None,
+        *,
+        deadline_s: float = 30.0,
+        connect_timeout_s: float = 5.0,
+        rpc_timeout_s: float = 5.0,
+        backoff_base: float = 0.05,
+        backoff_cap: float = 2.0,
+        max_attempts: int = 64,
+        rng_seed: int | None = None,
+    ):
         self.address = address
         self.session_id = session_id
         self.config = config or SessionConfig()
@@ -91,8 +99,8 @@ class MiningClient:
         self._rng = random.Random(rng_seed)
         self._sock: socket.socket | None = None
         self._req = self._REQ_BASE
-        self.applied = 0    # highest seq the server has in memory
-        self.durable = 0    # highest seq the server has on disk
+        self.applied = 0  # highest seq the server has in memory
+        self.durable = 0  # highest seq the server has on disk
         self.next_seq = 1
         self._resend: dict[int, tuple[bytes, bool]] = {}  # seq -> payload
         self._seen_windows: set[int] = set()
@@ -137,10 +145,18 @@ class MiningClient:
         that never arrived)."""
         self._sock = self._connect()
         self._arm_timeout(deadline)
-        reply = self._rpc_once(Frame(
-            FrameType.OPEN_SESSION, self._next_req(),
-            wire._j({"session": self.session_id,
-                     "config": wire.config_to_wire(self.config)})))
+        reply = self._rpc_once(
+            Frame(
+                FrameType.OPEN_SESSION,
+                self._next_req(),
+                wire._j(
+                    {
+                        "session": self.session_id,
+                        "config": wire.config_to_wire(self.config),
+                    },
+                ),
+            ),
+        )
         doc = wire._unj(reply.payload)
         self.applied = int(doc["applied"])
         self.durable = int(doc.get("durable", self.applied))
@@ -158,8 +174,8 @@ class MiningClient:
 
     def _arm_timeout(self, deadline: float) -> None:
         self._sock.settimeout(
-            max(0.05, min(self.rpc_timeout_s,
-                          deadline - time.monotonic())))
+            max(0.05, min(self.rpc_timeout_s, deadline - time.monotonic()))
+        )
 
     def _rpc_once(self, frame: Frame) -> Frame:
         """Send one frame and read its reply on the live socket. Raises
@@ -183,8 +199,9 @@ class MiningClient:
         """At-least-once RPC with reconnect/backoff; the server's dedup
         layers make the composite exactly-once. ``make_frame()`` is
         called fresh per attempt so rewinds take effect."""
-        deadline = time.monotonic() + (self.deadline_s if deadline_s is None
-                                       else deadline_s)
+        deadline = time.monotonic() + (
+            self.deadline_s if deadline_s is None else deadline_s
+        )
         last = None
         for attempt in range(self.max_attempts):
             if time.monotonic() >= deadline:
@@ -220,8 +237,9 @@ class MiningClient:
 
     def open(self) -> None:
         """Eagerly open/resume the session (otherwise lazy on first RPC)."""
-        self._rpc(lambda: Frame(
-            FrameType.CONTROL, self._next_req(), wire._j({"op": "ping"})))
+        self._rpc(
+            lambda: Frame(FrameType.CONTROL, self._next_req(), wire._j({"op": "ping"}))
+        )
 
     def submit(self, window: EventStream, final: bool = False) -> int:
         """Ingest one partition window, exactly once, surviving any
@@ -249,12 +267,20 @@ class MiningClient:
     def poll(self, ack: bool = True) -> list[dict]:
         """Fetch mined window deltas; each window is returned exactly
         once across any number of retries/redeliveries."""
-        reply = self._rpc(lambda: Frame(
-            FrameType.POLL, self._next_req(),
-            wire._j({"session": self.session_id,
-                     "ack_through": (max(self._seen_windows)
-                                     if ack and self._seen_windows else -1)})
-        ))
+        reply = self._rpc(
+            lambda: Frame(
+                FrameType.POLL,
+                self._next_req(),
+                wire._j(
+                    {
+                        "session": self.session_id,
+                        "ack_through": (
+                            max(self._seen_windows) if ack and self._seen_windows else -1
+                        ),
+                    },
+                ),
+            ),
+        )
         doc = wire._unj(reply.payload)
         self.applied = max(self.applied, int(doc.get("applied", 0)))
         self.durable = max(self.durable, int(doc.get("durable", 0)))
@@ -268,11 +294,13 @@ class MiningClient:
         self.deltas_received += len(fresh)
         return fresh
 
-    def drain(self, poll_interval_s: float = 0.01,
-              deadline_s: float | None = None) -> list[dict]:
+    def drain(
+        self, poll_interval_s: float = 0.01, deadline_s: float | None = None
+    ) -> list[dict]:
         """Poll until every submitted window's delta has arrived."""
-        deadline = time.monotonic() + (self.deadline_s if deadline_s is None
-                                       else deadline_s)
+        deadline = time.monotonic() + (
+            self.deadline_s if deadline_s is None else deadline_s
+        )
         want = self.next_seq - 1
         out = []
         while True:
@@ -286,15 +314,14 @@ class MiningClient:
             time.sleep(poll_interval_s)
 
     def stats(self) -> dict:
-        reply = self._rpc(lambda: Frame(
-            FrameType.STATS, self._next_req(), b""))
+        reply = self._rpc(lambda: Frame(FrameType.STATS, self._next_req(), b""))
         return wire._unj(reply.payload)
 
-    def control(self, op: str, deadline_s: float | None = None,
-                **kw) -> dict:
-        reply = self._rpc(lambda: Frame(
-            FrameType.CONTROL, self._next_req(),
-            wire._j({"op": op, **kw})), deadline_s=deadline_s)
+    def control(self, op: str, deadline_s: float | None = None, **kw) -> dict:
+        reply = self._rpc(
+            lambda: Frame(FrameType.CONTROL, self._next_req(), wire._j({"op": op, **kw})),
+            deadline_s=deadline_s,
+        )
         return wire._unj(reply.payload)
 
     def ping(self) -> dict:
@@ -302,12 +329,17 @@ class MiningClient:
 
     def close_session(self) -> list[dict]:
         """Close the session server-side; returns any final deltas."""
-        reply = self._rpc(lambda: Frame(
-            FrameType.CLOSE_SESSION, self._next_req(),
-            wire._j({"session": self.session_id})))
+        reply = self._rpc(
+            lambda: Frame(
+                FrameType.CLOSE_SESSION,
+                self._next_req(),
+                wire._j({"session": self.session_id}),
+            ),
+        )
         doc = wire._unj(reply.payload)
-        fresh = [d for d in doc.get("deltas", [])
-                 if d["window_idx"] not in self._seen_windows]
+        fresh = [
+            d for d in doc.get("deltas", []) if d["window_idx"] not in self._seen_windows
+        ]
         for d in fresh:
             self._seen_windows.add(d["window_idx"])
         self.deltas_received += len(fresh)

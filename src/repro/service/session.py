@@ -36,12 +36,12 @@ class SessionConfig:
 
     intervals: tuple = ((5, 10),)
     theta: int = 4
-    theta_mode: str = "per_window"   # or "cumulative"
+    theta_mode: str = "per_window"  # or "cumulative"
     max_level: int = 3
-    window_ms: int = 2000            # advisory: the tenant's partition size
+    window_ms: int = 2000  # advisory: the tenant's partition size
     engine: str = "hybrid"
     two_pass: bool = True
-    history_limit: int | None = 8    # checkpoint interval (None = unbounded)
+    history_limit: int | None = 8  # checkpoint interval (None = unbounded)
     lcap: int = 4
     num_segments: int = 8
     # On-chip counting (the chip-on-chip promise): sessions run the carried
@@ -53,12 +53,18 @@ class SessionConfig:
 
     def make_miner(self, executor=None) -> StreamingMiner:
         return StreamingMiner(
-            [tuple(iv) for iv in self.intervals], self.theta,
-            max_level=self.max_level, mode=self.theta_mode,
-            engine=self.engine, two_pass=self.two_pass,
-            use_kernel=self.use_kernel, lcap=self.lcap,
+            [tuple(iv) for iv in self.intervals],
+            self.theta,
+            max_level=self.max_level,
+            mode=self.theta_mode,
+            engine=self.engine,
+            two_pass=self.two_pass,
+            use_kernel=self.use_kernel,
+            lcap=self.lcap,
             num_segments=self.num_segments,
-            history_limit=self.history_limit, executor=executor)
+            history_limit=self.history_limit,
+            executor=executor,
+        )
 
 
 @dataclasses.dataclass
@@ -76,15 +82,15 @@ class WindowDelta:
         1-based (level 1 = single events); out-of-range levels yield []."""
         res = self.result
         out = []
-        levels = (range(len(res.frequent)) if level is None
-                  else [level - 1])
+        levels = (range(len(res.frequent)) if level is None else [level - 1])
         for li in levels:
             if li < 0 or li >= len(res.frequent):
                 continue
             batch = res.frequent[li]
             for i in range(batch.M):
-                out.append((tuple(int(x) for x in batch.etypes[i]),
-                            int(res.counts[li][i])))
+                out.append(
+                    (tuple(int(x) for x in batch.etypes[i]), int(res.counts[li][i]))
+                )
         return out
 
 
@@ -119,8 +125,13 @@ class MiningSession:
     the queue with ``unstage()`` (or dropped with ``discard()`` when a
     snapshot restore is about to re-queue its window anyway)."""
 
-    def __init__(self, session_id: str, config: SessionConfig,
-                 executor=None, max_results: int = 256):
+    def __init__(
+        self,
+        session_id: str,
+        config: SessionConfig,
+        executor=None,
+        max_results: int = 256,
+    ):
         self.session_id = session_id
         self.config = config
         self.miner = config.make_miner(executor=executor)
@@ -155,9 +166,9 @@ class MiningSession:
         mark = self.meter.mark()
         window, final = self.pending.popleft()
         staged = self.miner.stage(window)
-        prep = PreparedStep(window, final,
-                            self.windows_done + self.staged_count,
-                            staged, snap, mark)
+        prep = PreparedStep(
+            window, final, self.windows_done + self.staged_count, staged, snap, mark
+        )
         self.staged_count += 1
         return prep
 
@@ -165,12 +176,10 @@ class MiningSession:
         """Device half: run the miner over the staged window (this is
         where the step parks in the cross-session batcher)."""
         self.meter.start()
-        with span("session.mine_window", session=self.session_id,
-                  window=prep.window_idx):
+        with span("session.mine_window", session=self.session_id, window=prep.window_idx):
             res = self.miner.update(prep.staged, final=prep.final)
         self.meter.stop(prep.staged.n_events)
-        return WindowDelta(prep.window_idx, res, prep.staged.n_events,
-                           prep.final)
+        return WindowDelta(prep.window_idx, res, prep.staged.n_events, prep.final)
 
     def commit(self, prep: PreparedStep, delta: WindowDelta) -> WindowDelta:
         """Publish an executed step: count the window and queue the delta
@@ -221,23 +230,38 @@ class MiningSession:
         for j, (w, final) in enumerate(self.pending):
             d[f"pending/{j}/types"] = w.types.copy()
             d[f"pending/{j}/times"] = w.times.copy()
-            d[f"pending/{j}/meta"] = np.asarray(
-                [w.num_types, int(final)], np.int64)
+            d[f"pending/{j}/meta"] = np.asarray([w.num_types, int(final)], np.int64)
         for j, delta in enumerate(self.results):
             p = f"results/{j}/"
             d[p + "meta"] = np.asarray(
-                [delta.window_idx, delta.n_events, int(delta.final),
-                 len(delta.result.frequent)], np.int64)
-            for li, (batch, cnts) in enumerate(zip(delta.result.frequent,
-                                                   delta.result.counts)):
+                [
+                    delta.window_idx,
+                    delta.n_events,
+                    int(delta.final),
+                    len(delta.result.frequent),
+                ],
+                np.int64,
+            )
+            for li, (batch, cnts) in enumerate(
+                zip(delta.result.frequent, delta.result.counts)
+            ):
                 d[p + f"L{li}/etypes"] = batch.etypes.copy()
                 d[p + f"L{li}/tlo"] = batch.tlo.copy()
                 d[p + f"L{li}/thi"] = batch.thi.copy()
                 d[p + f"L{li}/counts"] = np.asarray(cnts, np.int64).copy()
             d[p + "stats"] = np.asarray(
-                [[s.level, s.num_candidates, s.num_survived_a2,
-                  s.num_frequent, s.seconds] for s in delta.result.stats],
-                np.float64)
+                [
+                    [
+                        s.level,
+                        s.num_candidates,
+                        s.num_survived_a2,
+                        s.num_frequent,
+                        s.seconds,
+                    ]
+                    for s in delta.result.stats
+                ],
+                np.float64,
+            )
         return d
 
     def load_state_dict(self, d: dict) -> None:
@@ -251,10 +275,16 @@ class MiningSession:
         j = 0
         while f"pending/{j}/types" in d:
             num_types, final = (int(x) for x in d[f"pending/{j}/meta"])
-            self.pending.append((EventStream(
-                d[f"pending/{j}/types"].astype(np.int32),
-                d[f"pending/{j}/times"].astype(np.int32), num_types),
-                bool(final)))
+            self.pending.append(
+                (
+                    EventStream(
+                        d[f"pending/{j}/types"].astype(np.int32),
+                        d[f"pending/{j}/times"].astype(np.int32),
+                        num_types,
+                    ),
+                    bool(final),
+                ),
+            )
             j += 1
         self.results.clear()
         j = 0
@@ -265,25 +295,34 @@ class MiningSession:
             for li in range(n_levels):
                 et = d[p + f"L{li}/etypes"].astype(np.int32)
                 m, n = et.shape
-                frequent.append(EpisodeBatch(
-                    et, d[p + f"L{li}/tlo"].astype(np.int32).reshape(
-                        m, max(n - 1, 0)),
-                    d[p + f"L{li}/thi"].astype(np.int32).reshape(
-                        m, max(n - 1, 0))))
+                frequent.append(
+                    EpisodeBatch(
+                        et,
+                        d[p + f"L{li}/tlo"].astype(np.int32).reshape(m, max(n - 1, 0)),
+                        d[p + f"L{li}/thi"].astype(np.int32).reshape(m, max(n - 1, 0)),
+                    ),
+                )
                 counts.append(d[p + f"L{li}/counts"].astype(np.int64))
-            stats = [LevelStats(int(r[0]), int(r[1]), int(r[2]), int(r[3]),
-                                float(r[4]))
-                     for r in np.atleast_2d(d[p + "stats"])
-                     if len(r)]
-            self.results.append(WindowDelta(
-                widx, MiningResult(frequent=frequent, counts=counts,
-                                   stats=stats), n_ev, bool(final)))
+            stats = [
+                LevelStats(int(r[0]), int(r[1]), int(r[2]), int(r[3]), float(r[4]))
+                for r in np.atleast_2d(d[p + "stats"])
+                if len(r)
+            ]
+            self.results.append(
+                WindowDelta(
+                    widx,
+                    MiningResult(frequent=frequent, counts=counts, stats=stats),
+                    n_ev,
+                    bool(final),
+                ),
+            )
             j += 1
 
     # ------------------------------------------------- durable snapshots
 
-    def save(self, root: str | Path, step: int | None = None,
-             extra: dict | None = None) -> Path:
+    def save(
+        self, root: str | Path, step: int | None = None, extra: dict | None = None
+    ) -> Path:
         """Atomic on-disk checkpoint through ``checkpoint.ckpt`` (two-phase
         rename protocol; a crash leaves a complete checkpoint or none).
 
@@ -297,11 +336,14 @@ class MiningSession:
         d = self.state_dict()
         if extra:
             d.update({k: np.asarray(v) for k, v in extra.items()})
-        return ckpt.save(Path(root) / self.session_id, step, d,
-                         config_hash=ckpt.config_fingerprint(self.config))
+        return ckpt.save(
+            Path(root) / self.session_id,
+            step,
+            d,
+            config_hash=ckpt.config_fingerprint(self.config),
+        )
 
-    def restore(self, root: str | Path,
-                step: int | None = None) -> "MiningSession":
+    def restore(self, root: str | Path, step: int | None = None) -> "MiningSession":
         """Load the newest (or given) checkpoint into this freshly
         constructed session (same config as the saved one). The on-disk
         manifest is self-describing, so the flat tree structure is rebuilt
@@ -312,12 +354,10 @@ class MiningSession:
             step = ckpt.latest_step(sdir)
             if step is None:
                 raise FileNotFoundError(f"no checkpoint under {sdir}")
-        manifest = json.loads(
-            (sdir / f"step_{step:08d}" / "MANIFEST.json").read_text())
-        tree_like = {e["key"]: np.zeros((), np.int64)
-                     for e in manifest["leaves"]}
+        manifest = json.loads((sdir / f"step_{step:08d}" / "MANIFEST.json").read_text())
+        tree_like = {e["key"]: np.zeros((), np.int64) for e in manifest["leaves"]}
         tree, _ = ckpt.restore(
-            sdir, tree_like, step=step,
-            config_hash=ckpt.config_fingerprint(self.config))
+            sdir, tree_like, step=step, config_hash=ckpt.config_fingerprint(self.config)
+        )
         self.load_state_dict(tree)
         return self

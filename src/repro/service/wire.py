@@ -94,19 +94,19 @@ class Status(enum.IntEnum):
     """Machine-readable status codes carried by STATUS frames."""
 
     OK = 0
-    BACKPRESSURE = 1        # session queue full: slow down or spool
-    SHED = 2                # window refused and not queued anywhere
-    UNKNOWN_SESSION = 3     # never admitted, or already evicted
+    BACKPRESSURE = 1  # session queue full: slow down or spool
+    SHED = 2  # window refused and not queued anywhere
+    UNKNOWN_SESSION = 3  # never admitted, or already evicted
     ADMISSION_REJECTED = 4  # service at tenant capacity
-    BAD_FRAME = 5           # malformed frame or payload
-    BAD_CRC = 6             # payload CRC mismatch
-    BAD_VERSION = 7         # protocol version not supported
-    OUT_OF_ORDER = 8        # sequence gap: client must rewind
-    DUPLICATE = 9           # batch already applied (informational)
-    CONFIG_CONFLICT = 10    # session exists with a different config
-    SESSION_CLOSED = 11     # final batch already ingested
-    SHUTTING_DOWN = 12      # server draining: reconnect after restart
-    INTERNAL = 13           # unexpected server-side failure
+    BAD_FRAME = 5  # malformed frame or payload
+    BAD_CRC = 6  # payload CRC mismatch
+    BAD_VERSION = 7  # protocol version not supported
+    OUT_OF_ORDER = 8  # sequence gap: client must rewind
+    DUPLICATE = 9  # batch already applied (informational)
+    CONFIG_CONFLICT = 10  # session exists with a different config
+    SESSION_CLOSED = 11  # final batch already ingested
+    SHUTTING_DOWN = 12  # server draining: reconnect after restart
+    INTERNAL = 13  # unexpected server-side failure
 
 
 class ProtocolError(RuntimeError):
@@ -151,9 +151,15 @@ class Frame:
 def encode_frame(frame: Frame) -> bytes:
     if len(frame.payload) > MAX_PAYLOAD:
         raise FrameTooLarge(f"payload {len(frame.payload)} > {MAX_PAYLOAD}")
-    head = HEADER.pack(MAGIC, PROTO_VERSION, int(frame.ftype), frame.flags,
-                       frame.seq, len(frame.payload),
-                       zlib.crc32(frame.payload) & 0xFFFFFFFF)
+    head = HEADER.pack(
+        MAGIC,
+        PROTO_VERSION,
+        int(frame.ftype),
+        frame.flags,
+        frame.seq,
+        len(frame.payload),
+        zlib.crc32(frame.payload) & 0xFFFFFFFF,
+    )
     return head + frame.payload
 
 
@@ -198,8 +204,7 @@ def _unj(payload: bytes):
         raise ProtocolError(f"bad JSON payload: {e}") from None
 
 
-def encode_events(session_id: str, stream: EventStream,
-                  final: bool = False) -> bytes:
+def encode_events(session_id: str, stream: EventStream, final: bool = False) -> bytes:
     """EVENT_BATCH payload: session id + the window's raw int32 arrays."""
     sid = session_id.encode()
     n = int(stream.types.shape[0])
@@ -215,8 +220,7 @@ def decode_events(payload: bytes) -> tuple[str, EventStream, bool]:
     sid_len, n, num_types, final = _EVENTS_HEAD.unpack_from(payload)
     want = _EVENTS_HEAD.size + sid_len + 8 * n
     if len(payload) != want:
-        raise ProtocolError(
-            f"event batch length {len(payload)} != expected {want}")
+        raise ProtocolError(f"event batch length {len(payload)} != expected {want}")
     off = _EVENTS_HEAD.size
     try:
         sid = payload[off:off + sid_len].decode()
@@ -248,8 +252,7 @@ def config_from_wire(d: dict) -> SessionConfig:
     kw = dict(d)
     if "intervals" in kw:
         try:
-            kw["intervals"] = tuple(
-                tuple(int(x) for x in iv) for iv in kw["intervals"])
+            kw["intervals"] = tuple(tuple(int(x) for x in iv) for iv in kw["intervals"])
         except (TypeError, ValueError) as e:
             raise ProtocolError(f"bad intervals: {e}") from None
     try:
@@ -333,11 +336,18 @@ class WireServer:
     where a naive transport double-counts or loses windows on restart.
     """
 
-    def __init__(self, service, address: str = "127.0.0.1:0", *,
-                 data_dir: str | os.PathLike | None = None,
-                 checkpoint_every: int = 1, keep_checkpoints: int = 2,
-                 pump_interval_s: float = 0.002, auto_pump: bool = True,
-                 crash_after_commits: int | None = None):
+    def __init__(
+        self,
+        service,
+        address: str = "127.0.0.1:0",
+        *,
+        data_dir: str | os.PathLike | None = None,
+        checkpoint_every: int = 1,
+        keep_checkpoints: int = 2,
+        pump_interval_s: float = 0.002,
+        auto_pump: bool = True,
+        crash_after_commits: int | None = None,
+    ):
         self.service = service
         self._requested_address = address
         self.data_dir = Path(data_dir) if data_dir is not None else None
@@ -382,13 +392,11 @@ class WireServer:
         if self.data_dir is not None:
             self.recover()
         self._running = True
-        t = threading.Thread(target=self._accept_loop, daemon=True,
-                             name="wire-accept")
+        t = threading.Thread(target=self._accept_loop, daemon=True, name="wire-accept")
         t.start()
         self._threads.append(t)
         if self.auto_pump:
-            t = threading.Thread(target=self._pump_loop, daemon=True,
-                                 name="wire-pump")
+            t = threading.Thread(target=self._pump_loop, daemon=True, name="wire-pump")
             t.start()
             self._threads.append(t)
         return self.address
@@ -406,8 +414,7 @@ class WireServer:
                 pass
         with self._lock:
             if drain:
-                with span("daemon.drain",
-                          pending=self.service.scheduler.pending_windows):
+                with span("daemon.drain", pending=self.service.scheduler.pending_windows):
                     self.service.scheduler.drain()
             if self.data_dir is not None:
                 self._checkpoint_locked()
@@ -445,14 +452,17 @@ class WireServer:
                 step = ckpt.latest_step(self.data_dir / sid)
                 if step is not None:
                     s.restore(self.data_dir, step=step)
-                    applied = int(ckpt.read_leaf(
-                        self.data_dir / sid, "wire/last_seq", step=step,
-                        default=0))
-                    REGISTRY.counter(
-                        "recovery_windows_requeued_total").inc(
-                        len(s.pending))
+                    applied = int(
+                        ckpt.read_leaf(
+                            self.data_dir / sid, "wire/last_seq", step=step, default=0
+                        ),
+                    )
+                    REGISTRY.counter("recovery_windows_requeued_total").inc(
+                        len(s.pending)
+                    )
                 self.sessions[sid] = WireSessionState(
-                    config=cfg, applied=applied, durable=applied)
+                    config=cfg, applied=applied, durable=applied
+                )
                 REGISTRY.counter("recovery_sessions_total").inc()
                 restored += 1
         REGISTRY.counter("recovery_boots_total").inc()
@@ -462,8 +472,11 @@ class WireServer:
         if self.data_dir is None:
             return
         self.data_dir.mkdir(parents=True, exist_ok=True)
-        doc = {"sessions": {sid: config_to_wire(st.config)
-                            for sid, st in self.sessions.items()}}
+        doc = {
+            "sessions": {
+                sid: config_to_wire(st.config) for sid, st in self.sessions.items()
+            },
+        }
         tmp = self.data_dir / "SESSIONS.json.tmp"
         tmp.write_text(json.dumps(doc, indent=1, sort_keys=True))
         os.replace(tmp, self.data_dir / "SESSIONS.json")
@@ -474,8 +487,8 @@ class WireServer:
         snap = {sid: st.applied for sid, st in self.sessions.items()}
         self.service.checkpoint_all(
             self.data_dir,
-            extra=lambda sid: {"wire/last_seq":
-                               np.asarray(snap.get(sid, 0), np.int64)})
+            extra=lambda sid: {"wire/last_seq": np.asarray(snap.get(sid, 0), np.int64)},
+        )
         for sid, seq in snap.items():
             if sid in self.service.scheduler.sessions:
                 self.sessions[sid].durable = seq
@@ -490,11 +503,9 @@ class WireServer:
         with self._lock:
             if not self.service.scheduler.pending_windows:
                 return False
-            before = sum(s.windows_done
-                         for s in self.service.scheduler.sessions.values())
+            before = sum(s.windows_done for s in self.service.scheduler.sessions.values())
             self.service.scheduler.step()
-            after = sum(s.windows_done
-                        for s in self.service.scheduler.sessions.values())
+            after = sum(s.windows_done for s in self.service.scheduler.sessions.values())
             self.commits += max(0, after - before)
             if (self.crash_after_commits is not None
                     and self.commits >= self.crash_after_commits):
@@ -528,8 +539,9 @@ class WireServer:
             REGISTRY.gauge("wire_connections").inc(1)
             REGISTRY.counter("wire_connections_total").inc()
             self._conns.add(conn)
-            t = threading.Thread(target=self._serve_conn, args=(conn,),
-                                 daemon=True, name="wire-conn")
+            t = threading.Thread(
+                target=self._serve_conn, args=(conn,), daemon=True, name="wire-conn"
+            )
             t.start()
 
     def _send(self, conn: socket.socket, frames: list[Frame]) -> None:
@@ -551,8 +563,7 @@ class WireServer:
                 except ConnectionClosed:
                     return
                 except ProtocolError as e:
-                    REGISTRY.counter("wire_errors_total",
-                                     code=e.code.name.lower()).inc()
+                    REGISTRY.counter("wire_errors_total", code=e.code.name.lower()).inc()
                     try:
                         self._send(conn, [self._status(0, e.code, str(e))])
                     except OSError:
@@ -562,7 +573,8 @@ class WireServer:
                     return
                 REGISTRY.counter("wire_frames_total", dir="rx").inc()
                 REGISTRY.counter("wire_bytes_total", dir="rx").inc(
-                    HEADER.size + len(frame.payload))
+                    HEADER.size + len(frame.payload)
+                )
                 key = (frame.ftype, frame.seq)
                 if key == last_key and last_replies is not None:
                     REGISTRY.counter("wire_rpc_replays_total").inc()
@@ -571,8 +583,7 @@ class WireServer:
                 try:
                     replies = self._handle(frame)
                 except ProtocolError as e:  # payload-level: stream intact
-                    REGISTRY.counter("wire_errors_total",
-                                     code=e.code.name.lower()).inc()
+                    REGISTRY.counter("wire_errors_total", code=e.code.name.lower()).inc()
                     replies = [self._status(frame.seq, e.code, str(e))]
                     if e.fatal:
                         self._send(conn, replies)
@@ -582,10 +593,8 @@ class WireServer:
                             if frame.ftype in FrameType._value2member_map_
                             else str(frame.ftype))
                     self.unexpected.append(f"{name}: {e!r}")
-                    REGISTRY.counter("wire_errors_total",
-                                     code="internal").inc()
-                    replies = [self._status(frame.seq, Status.INTERNAL,
-                                            repr(e))]
+                    REGISTRY.counter("wire_errors_total", code="internal").inc()
+                    replies = [self._status(frame.seq, Status.INTERNAL, repr(e))]
                 self._send(conn, replies)
                 # cache only success replies: a BACKPRESSURE retry of the
                 # same seq must re-execute against the drained queue
@@ -606,21 +615,32 @@ class WireServer:
     # ------------------------------------------------------------ handlers
 
     @staticmethod
-    def _status(seq: int, code: Status, detail: str = "",
-                **extra) -> Frame:
-        return Frame(FrameType.STATUS, seq,
-                     _j({"code": int(code), "code_name": code.name,
-                         "detail": detail, **extra}))
+    def _status(seq: int, code: Status, detail: str = "", **extra) -> Frame:
+        return Frame(
+            FrameType.STATUS,
+            seq,
+            _j({"code": int(code), "code_name": code.name, "detail": detail, **extra}),
+        )
 
     def _handle(self, frame: Frame) -> list[Frame]:
         ftype = frame.ftype
         if ftype == FrameType.HELLO:
             with self._lock:
-                return [Frame(FrameType.HELLO_OK, frame.seq, _j({
-                    "version": PROTO_VERSION,
-                    "draining": self.draining,
-                    "sessions": {sid: st.applied
-                                 for sid, st in self.sessions.items()}}))]
+                return [
+                    Frame(
+                        FrameType.HELLO_OK,
+                        frame.seq,
+                        _j(
+                            {
+                                "version": PROTO_VERSION,
+                                "draining": self.draining,
+                                "sessions": {
+                                    sid: st.applied for sid, st in self.sessions.items()
+                                },
+                            }
+                        ),
+                    )
+                ]
         if ftype == FrameType.OPEN_SESSION:
             return self._handle_open(frame)
         if ftype == FrameType.CLOSE_SESSION:
@@ -646,8 +666,7 @@ class WireServer:
         with self._lock:
             st = self.sessions.get(sid)
             if st is not None:
-                if (ckpt.config_fingerprint(st.config)
-                        != ckpt.config_fingerprint(cfg)):
+                if (ckpt.config_fingerprint(st.config) != ckpt.config_fingerprint(cfg)):
                     return [self._status(
                         frame.seq, Status.CONFIG_CONFLICT,
                         f"session {sid!r} exists with a different config")]
@@ -660,8 +679,7 @@ class WireServer:
             try:
                 self.service.create_session(sid, cfg)
             except AdmissionError as e:
-                return [self._status(frame.seq, Status.ADMISSION_REJECTED,
-                                     str(e))]
+                return [self._status(frame.seq, Status.ADMISSION_REJECTED, str(e))]
             self.sessions[sid] = WireSessionState(config=cfg)
             self._write_manifest_locked()
             return [Frame(FrameType.SESSION_OK, frame.seq, _j({
@@ -674,8 +692,11 @@ class WireServer:
         with self._lock:
             st = self.sessions.get(sid)
             if st is None:
-                return [self._status(frame.seq, Status.UNKNOWN_SESSION,
-                                     f"unknown session {sid!r}")]
+                return [
+                    self._status(
+                        frame.seq, Status.UNKNOWN_SESSION, f"unknown session {sid!r}"
+                    )
+                ]
             s = self.service.close_session(sid)
             deltas = st.delta_cache + [delta_payload(d) for d in s.poll()]
             del self.sessions[sid]
@@ -690,32 +711,36 @@ class WireServer:
         with self._lock, span("wire.ingest", session=sid, seq=seq):
             st = self.sessions.get(sid)
             if st is None:
-                return [self._status(seq, Status.UNKNOWN_SESSION,
-                                     f"unknown session {sid!r}")]
+                return [
+                    self._status(seq, Status.UNKNOWN_SESSION, f"unknown session {sid!r}")
+                ]
             if seq <= st.applied:
                 REGISTRY.counter("wire_dedup_hits_total").inc()
                 return [Frame(FrameType.ACK, seq, _j({
                     "applied": st.applied, "durable": st.durable,
                     "duplicate": True}))]
             if self.draining:
-                return [self._status(seq, Status.SHUTTING_DOWN,
-                                     "server is draining")]
+                return [self._status(seq, Status.SHUTTING_DOWN, "server is draining")]
             if seq > st.applied + 1:
                 REGISTRY.counter("wire_out_of_order_total").inc()
-                return [self._status(seq, Status.OUT_OF_ORDER,
-                                     f"expected seq {st.applied + 1}, "
-                                     f"got {seq}",
-                                     expect=st.applied + 1)]
+                return [
+                    self._status(
+                        seq,
+                        Status.OUT_OF_ORDER,
+                        f"expected seq {st.applied + 1}, " f"got {seq}",
+                        expect=st.applied + 1,
+                    )
+                ]
             try:
                 self.service.ingest(sid, stream, final=final)
             except BackpressureError as e:
                 REGISTRY.counter("wire_backpressure_total").inc()
                 depth = self.service.session(sid).queue_depth
-                return [self._status(seq, Status.BACKPRESSURE, str(e),
-                                     queue_depth=depth)]
+                return [self._status(seq, Status.BACKPRESSURE, str(e), queue_depth=depth)]
             except UnknownSessionError:
-                return [self._status(seq, Status.UNKNOWN_SESSION,
-                                     f"unknown session {sid!r}")]
+                return [
+                    self._status(seq, Status.UNKNOWN_SESSION, f"unknown session {sid!r}")
+                ]
             except RuntimeError as e:
                 return [self._status(seq, Status.SESSION_CLOSED, str(e))]
             st.applied = seq
@@ -730,11 +755,15 @@ class WireServer:
         with self._lock:
             st = self.sessions.get(sid)
             if st is None:
-                return [self._status(frame.seq, Status.UNKNOWN_SESSION,
-                                     f"unknown session {sid!r}")]
+                return [
+                    self._status(
+                        frame.seq, Status.UNKNOWN_SESSION, f"unknown session {sid!r}"
+                    )
+                ]
             if isinstance(ack_through, int):
-                st.delta_cache = [d for d in st.delta_cache
-                                  if d["window_idx"] > ack_through]
+                st.delta_cache = [
+                    d for d in st.delta_cache if d["window_idx"] > ack_through
+                ]
             try:
                 fresh = self.service.poll(sid)
             except UnknownSessionError:
@@ -765,14 +794,12 @@ class WireServer:
                                          "server has no data dir")]
                 self._checkpoint_locked()
                 self._write_manifest_locked()
-                durable = {sid: st.durable
-                           for sid, st in self.sessions.items()}
+                durable = {sid: st.durable for sid, st in self.sessions.items()}
             return [Frame(FrameType.CONTROL_OK, frame.seq, _j({
                 "op": op, "durable": durable}))]
         if op == "shutdown":
             self._stop.set()  # daemon's run loop observes and drains
-            return [Frame(FrameType.CONTROL_OK, frame.seq, _j({
-                "op": op}))]
+            return [Frame(FrameType.CONTROL_OK, frame.seq, _j({"op": op}))]
         raise ProtocolError(f"unknown control op {op!r}")
 
     # ---------------------------------------------------------- test hooks
